@@ -1,0 +1,68 @@
+"""Fig. 10 reproduction: per-inference HBM energy/latency scale linearly
+with neuron count (paper: Energy = 0.0294x - 30.3, R^2 = 0.994;
+Latency = 0.0658x - 53.0, R^2 = 0.995 for the DVS CNN family).
+
+We sweep MLP widths on the engine and fit the same regressions; the claim
+reproduced is the LINEARITY (R^2 > 0.97) and positive slope — absolute
+slopes depend on fan-out structure, as the paper notes (MLP vs LeNet vs
+CNN slopes differ by ~2-10x).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import ANN_neuron, CRI_network
+
+
+def _mlp(n_hidden, n_in=196, seed=0):
+    rng = np.random.default_rng(seed)
+    axons = {f"x{i}": [(f"h{j}", int(rng.integers(1, 9)))
+                       for j in range(n_hidden)] for i in range(n_in)}
+    neurons = {f"h{j}": ([(f"o{k}", int(rng.integers(1, 9)))
+                          for k in range(10)],
+                         ANN_neuron(threshold=n_in))
+               for j in range(n_hidden)}
+    for k in range(10):
+        neurons[f"o{k}"] = ([], ANN_neuron(threshold=2 ** 30))
+    return CRI_network(axons=axons, neurons=neurons,
+                       outputs=[f"o{k}" for k in range(10)],
+                       backend="engine", seed=seed), n_in
+
+
+def run(sizes=(32, 64, 128, 256, 512), n_inf=5, quiet=False):
+    rng = np.random.default_rng(3)
+    es, ls, ns = [], [], []
+    for nh in sizes:
+        net, n_in = _mlp(nh)
+        net.counter.reset()
+        for _ in range(n_inf):
+            net.reset()
+            net.step([f"x{i}" for i in
+                      rng.choice(n_in, n_in // 5, replace=False)])
+            net.step([])
+        ns.append(nh + 10)
+        es.append(net.counter.energy_uJ() / n_inf)
+        ls.append(net.counter.latency_us() / n_inf)
+    x = np.array(ns, float)
+    out = {}
+    for label, ys in (("energy_uJ", np.array(es)),
+                      ("latency_us", np.array(ls))):
+        A = np.vstack([x, np.ones_like(x)]).T
+        coef, res, *_ = np.linalg.lstsq(A, ys, rcond=None)
+        ss = ((ys - ys.mean()) ** 2).sum()
+        r2 = 1 - (res[0] / ss if len(res) else 0.0)
+        out[label] = {"slope": float(coef[0]), "intercept": float(coef[1]),
+                      "r2": float(r2)}
+        if not quiet:
+            print(f"fig10,{label},slope={coef[0]:.4f},"
+                  f"intercept={coef[1]:.2f},r2={r2:.4f}")
+    assert out["energy_uJ"]["r2"] > 0.97 and out["latency_us"]["r2"] > 0.97
+    assert out["energy_uJ"]["slope"] > 0 and out["latency_us"]["slope"] > 0
+    if not quiet:
+        print("fig10,paper_energy,slope=0.0294,intercept=-30.29,r2=0.994")
+        print("fig10,paper_latency,slope=0.0658,intercept=-53.03,r2=0.995")
+    return out
+
+
+if __name__ == "__main__":
+    run()

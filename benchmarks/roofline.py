@@ -1,0 +1,142 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+  memory term     = HLO_bytes_per_device / HBM_bw              [s]
+  collective term = collective_bytes_per_device / link_bw      [s]
+(the dry-run HLO is post-SPMD, so analyzer outputs are already per chip;
+dividing per-device quantities by per-chip rates == the assignment's
+global/(chips*rate) formula).
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N_active for MoE; the
+MODEL/HLO ratio flags remat & redundancy waste. Dominant term = bottleneck;
+'roofline fraction' = useful-compute time / bound time
+= (MODEL_FLOPS/peak) / max(term) — the score §Perf hillclimbs.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def _attn_layer_flops(cfg, S_q, S_kv):
+    """Forward qk+av flops for one attention layer over S_q query tokens
+    attending S_kv keys (per sequence)."""
+    H = cfg.n_heads
+    if cfg.mla:
+        per = H * (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+                   + cfg.mla.v_head_dim)
+    else:
+        per = 2 * H * cfg.resolved_head_dim
+    return 2.0 * S_q * S_kv * per
+
+
+def model_flops(arch_id: str, kind: str, seq_len: int, batch: int) -> float:
+    """Useful ('model') FLOPs: 6·N·D train / 2·N·D inference (N_active for
+    MoE) + causal attention score/value flops (which 6·N·D excludes)."""
+    from repro.configs import get_arch
+    if arch_id == "hiaer_snn_40b":
+        return 2.0 * 160e6 * 512          # 2 flops per synapse slot per step
+    cfg = get_arch(arch_id)
+    n_act = cfg.n_active_params()
+    if cfg.family == "ssm":
+        n_attn = 0
+    elif cfg.rglru is not None:
+        n_attn = cfg.n_layers // len(cfg.rglru.pattern)
+    else:
+        n_attn = cfg.n_layers
+    window = cfg.rglru.window if cfg.rglru else None
+    if kind == "train":
+        toks = seq_len * batch
+        # causal full attention: mean kv length = S/2; train = 3x forward
+        kv_mean = min(window, seq_len) if window else seq_len / 2
+        attn = 3 * n_attn * batch * _attn_layer_flops(cfg, seq_len, kv_mean)
+        return 6.0 * n_act * toks + attn
+    if kind == "prefill":
+        kv_mean = min(window, seq_len) if window else seq_len / 2
+        attn = n_attn * batch * _attn_layer_flops(cfg, seq_len, kv_mean)
+        return 2.0 * n_act * seq_len * batch + attn
+    # decode: one token per sequence, attention over the full cache
+    kv = min(window, seq_len) if window else seq_len
+    attn = n_attn * batch * _attn_layer_flops(cfg, 1, kv)
+    return 2.0 * n_act * batch + attn
+
+
+def load_cells(variant="baseline"):
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec):
+    a = rec["analysis"]
+    compute = a["flops"] / PEAK_FLOPS
+    memory = a.get("hbm_bytes_tight", a["hbm_bytes"]) / HBM_BW
+    coll = a["collective_bytes"] / LINK_BW
+    bound = max(compute, memory, coll)
+    dom = max((("compute", compute), ("memory", memory),
+               ("collective", coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec.get("kind", "train"),
+                     rec["seq_len"], rec["global_batch"])
+    mf_dev = mf / rec["n_devices"]
+    useful = mf_dev / PEAK_FLOPS
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "bound_s": bound, "dominant": dom,
+        "model_flops_per_dev": mf_dev,
+        "model_over_hlo": (mf_dev / a["flops"]) if a["flops"] else 0.0,
+        "roofline_fraction": (useful / bound) if bound else 0.0,
+    }
+
+
+def report(variant="baseline", mesh=None, out=sys.stdout):
+    rows = []
+    for rec in load_cells(variant):
+        if mesh and rec["mesh"] != mesh:
+            continue
+        t = terms(rec)
+        rows.append((rec, t))
+    rows.sort(key=lambda rt: rt[1]["roofline_fraction"])
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "model/hlo,roofline_frac", file=out)
+    for rec, t in rows:
+        print(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+              f"{t['compute_s']:.4f},{t['memory_s']:.4f},"
+              f"{t['collective_s']:.4f},{t['dominant']},"
+              f"{t['model_over_hlo']:.3f},{t['roofline_fraction']:.4f}",
+              file=out)
+    return rows
+
+
+def markdown_table(variant="baseline", mesh="pod16x16"):
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(variant):
+        if rec["mesh"] != mesh:
+            continue
+        t = terms(rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant']} | {t['model_over_hlo']:.3f} | "
+            f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    report(mesh=sys.argv[1] if len(sys.argv) > 1 else None)

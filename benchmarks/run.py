@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one entry per paper table/figure plus the
+kernel and roofline harnesses. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(name, fn, *a, **k):
+    t0 = time.time()
+    out = fn(*a, **k)
+    dt = (time.time() - t0) * 1e6
+    print(f"bench,{name},{dt:.0f},ok")
+    return out
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    from benchmarks import table2_vision
+    rows = _timed("table2_vision", table2_vision.run)
+
+    from benchmarks import table3_table4_platforms
+    _timed("table3_table4", table3_table4_platforms.run, table2_rows=rows)
+
+    from benchmarks import fig10_scaling
+    _timed("fig10_scaling", fig10_scaling.run)
+
+    from benchmarks import sim_throughput
+    _timed("sim_throughput", sim_throughput.run)
+
+    from benchmarks import kernels_bench
+    _timed("kernels", kernels_bench.run)
+
+    # roofline over whatever dry-run artifacts exist (full table comes from
+    # `python -m repro.launch.dryrun --all --mesh both`)
+    from benchmarks import roofline
+    try:
+        cells = roofline.load_cells()
+        if cells:
+            _timed("roofline_report", roofline.report, mesh="pod16x16")
+        else:
+            print("bench,roofline_report,0,skipped(no artifacts)")
+    except Exception as e:                       # pragma: no cover
+        print(f"bench,roofline_report,0,error({e})")
+
+
+if __name__ == "__main__":
+    main()

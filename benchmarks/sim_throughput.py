@@ -1,0 +1,50 @@
+"""Fig. 8 companion benchmark: throughput of the pure-software simulator vs
+the event-driven engine emulation ("We use this emulation as a further
+benchmarking tool to compare the throughput of the FPGA implementation to a
+pure software implementation running on the CPU") + the Pallas spike-SpMV
+kernel (interpret mode) correctness/throughput datapoint.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.api import ANN_neuron, LIF_neuron, CRI_network
+
+
+def _random_net(n_neurons=512, n_axons=64, fanout=16, seed=0):
+    rng = np.random.default_rng(seed)
+    names = [f"n{i}" for i in range(n_neurons)]
+    axons = {f"a{i}": [(names[j], int(rng.integers(1, 20)))
+                       for j in rng.choice(n_neurons, fanout, replace=False)]
+             for i in range(n_axons)}
+    neurons = {k: ([(names[j], int(rng.integers(-10, 20)))
+                    for j in rng.choice(n_neurons, fanout, replace=False)],
+                   LIF_neuron(threshold=60, lam=3))
+               for k in names}
+    return axons, neurons, names[:8]
+
+
+def run(steps=50, quiet=False):
+    axons, neurons, outputs = _random_net()
+    rng = np.random.default_rng(1)
+    seq = [[f"a{i}" for i in rng.choice(64, 8, replace=False)]
+           for _ in range(steps)]
+    rows = []
+    for backend in ("simulator", "engine"):
+        net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                          backend=backend, seed=2)
+        net.step(seq[0])                       # warm up jit
+        t0 = time.time()
+        for inp in seq:
+            net.step(inp)
+        dt = time.time() - t0
+        rows.append((backend, 1e6 * dt / steps))
+        if not quiet:
+            print(f"sim_throughput,{backend},{1e6 * dt / steps:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Tables 3 & 4: cross-platform comparison (MNIST / DVS-Gesture) — our
+engine's energy/latency from the calibrated HBM cost model next to the
+paper's published numbers for HiAER-Spike, Loihi, SpiNNaker(2), TrueNorth.
+"""
+from __future__ import annotations
+
+from benchmarks.table2_vision import run as run_table2
+
+TABLE3 = [  # system, neurons, acc %, energy uJ, latency us  (published)
+    ("HiAER-Spike (paper)", 138, 96.59, 1.1, 4.2),
+    ("HiAER-Spike (paper)", 5814, 98.14, 17.1, 48.6),
+    ("Loihi", 5400, 99.23, 182.46, 4900.0),
+    ("SpiNNaker", 1790, 95.01, None, 20000.0),
+    ("TrueNorth", 7680, 99.42, 108.0, None),
+]
+
+TABLE4 = [
+    ("HiAER-Spike (paper)", 1115, 54.51, 79.8, 184.9),
+    ("HiAER-Spike (paper)", 17709, 68.75, 510.7, 1156.2),
+    ("Loihi", None, 89.64, None, 11430.0),
+    ("SpiNNaker2", 9907, 94.13, 459000.0, None),
+    ("TrueNorth", None, 96.49, 18700.0, 104600.0),
+]
+
+
+def run(quiet=False, table2_rows=None):
+    rows = table2_rows if table2_rows is not None else run_table2(quiet=True)
+    ours = rows[0]
+    out = [("HiAER-Spike (this repro, synthetic)", ours["neurons"],
+            ours["hw_acc"], ours["energy_uJ"], ours["latency_us"])]
+    if not quiet:
+        print("table3,system,neurons,acc,energy_uJ,latency_us")
+        for sys_, n, a, e, l in out + TABLE3:
+            print(f"table3,{sys_},{n},{a},{e},{l}")
+        print("table4,system,neurons,acc,energy_uJ,latency_us")
+        for sys_, n, a, e, l in TABLE4:
+            print(f"table4,{sys_},{n},{a},{e},{l}")
+    # the reproduction claim: our per-inference energy & latency sit in the
+    # HiAER-Spike band (orders of magnitude under Loihi/SpiNNaker columns)
+    assert out[0][3] < 100.0 and out[0][4] < 1000.0
+    return out + TABLE3
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Quickstart — the Appendix A.1 example network, verbatim API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.api import ANN_neuron, CRI_network, LIF_neuron
+
+# neuron models (A.1): a,b = LIF θ=3 almost-no-leak; c = LIF θ=4 λ=2;
+# d = stochastic ANN θ=5
+lif_ab = LIF_neuron(threshold=3, nu=-32, lam=60)
+lif_c = LIF_neuron(threshold=4, nu=-32, lam=2)
+ann_d = ANN_neuron(threshold=5, nu=0)
+
+axons = {
+    "alpha": [("a", 3), ("c", 2)],
+    "beta": [("b", 3)],
+}
+neurons = {
+    "a": ([("b", 1), ("a", 2)], lif_ab),
+    "b": ([], lif_ab),
+    "c": ([], lif_c),
+    "d": ([("c", 1)], ann_d),
+}
+outputs = ["a", "b"]
+
+network = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine")
+
+print("== stepping the A.1 network ==")
+for t in range(6):
+    inputs = ["alpha", "beta"] if t % 2 == 0 else ["alpha"]
+    fired = network.step(inputs)
+    print(f"t={t} inputs={inputs} fired={fired}")
+
+# monitor membrane potentials
+fired, potentials = network.step(["beta"], membranePotential=True)
+print("potentials:", potentials)
+
+# A.1: increment the a->b synapse over the PCIe path
+w = network.read_synapse("a", "b")
+network.write_synapse("a", "b", w + 1)
+print(f"synapse a->b: {w} -> {network.read_synapse('a', 'b')}")
+
+# the hardware cost model (Table 2 instrumentation)
+print("HBM access counter:", network.counter.as_dict())

@@ -1,0 +1,13 @@
+"""Serve a small LM with batched requests (continuous-batching loop).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2_5_3b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "qwen2_5_3b"]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    main(argv)

@@ -1,0 +1,15 @@
+"""Train an LM with the production launcher (checkpointed, resumable,
+watchdogged) — reduced config on CPU; pass a full arch + --mesh single on a
+real pod.
+
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2_780m --steps 50
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "mamba2_780m", "--steps", "50"]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    main(argv)

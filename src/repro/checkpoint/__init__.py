@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (CheckpointManager, restore_tree,
+                                    save_tree)
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

@@ -1,0 +1,9 @@
+from repro.configs.base import (ARCH_IDS, EXTRA_ARCH_IDS, SHAPES, ArchConfig,
+                                MLAConfig, MoEConfig, RGLRUConfig, SSMConfig,
+                                ShapeSpec, cells, get_arch, get_reduced)
+
+__all__ = [
+    "ARCH_IDS", "EXTRA_ARCH_IDS", "SHAPES", "ArchConfig", "MLAConfig",
+    "MoEConfig", "RGLRUConfig", "SSMConfig", "ShapeSpec", "cells",
+    "get_arch", "get_reduced",
+]

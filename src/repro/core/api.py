@@ -1,0 +1,158 @@
+"""hs_api-compatible user interface — §5.2 and Appendix A.1.
+
+    from repro.core.api import CRI_network, LIF_neuron, ANN_neuron
+
+    lif = LIF_neuron(threshold=3, nu=-32, lam=60)
+    axons   = {"alpha": [("a", 3), ("c", 2)], "beta": [("b", 3)]}
+    neurons = {"a": ([("b", 1), ("a", 2)], lif),
+               "b": ([], lif),
+               "c": ([], LIF_neuron(threshold=4, nu=-32, lam=2)),
+               "d": ([("c", 1)], ANN_neuron(threshold=5, nu=0))}
+    outputs = ["a", "b"]
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs)
+    fired = net.step(["alpha", "beta"])
+
+The same API runs on the dense software simulator (local development) or the
+event-driven HBM engine (the accelerator path, with energy/latency
+accounting) — backend="simulator" | "engine". Results are bit-identical
+(tests/test_api.py); this mirrors the paper's seamless local-to-cluster
+transition.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import hbm
+from repro.core.costmodel import AccessCounter
+from repro.core.engine import EventEngine
+from repro.core.neuron import ANN_neuron, LIF_neuron, pack_models
+from repro.core.simulator import DenseSimulator
+
+__all__ = ["CRI_network", "LIF_neuron", "ANN_neuron"]
+
+
+class CRI_network:
+    def __init__(self, axons: Dict, neurons: Dict, outputs: Sequence,
+                 backend: str = "engine", seed: int = 0,
+                 dense_pack: bool = True):
+        self.axon_keys = list(axons.keys())
+        self.neuron_keys = list(neurons.keys())
+        self._aid = {k: i for i, k in enumerate(self.axon_keys)}
+        self._nid = {k: i for i, k in enumerate(self.neuron_keys)}
+        self.outputs = list(outputs)
+        for k in self.outputs:
+            if k not in self._nid:
+                raise KeyError(f"output {k!r} is not a neuron")
+        A, N = len(self.axon_keys), len(self.neuron_keys)
+
+        models = []
+        neuron_syn: Dict[int, List[Tuple[int, int]]] = {}
+        for k in self.neuron_keys:
+            syns, model = neurons[k]
+            models.append(model)
+            neuron_syn[self._nid[k]] = [(self._nid[p], int(w))
+                                        for p, w in syns]
+        axon_syn = {self._aid[k]: [(self._nid[p], int(w))
+                                   for p, w in axons[k]]
+                    for k in self.axon_keys}
+        theta, nu, lam, is_lif = pack_models(models)
+        self._theta, self._nu, self._lam, self._is_lif = theta, nu, lam, is_lif
+        self._axon_syn, self._neuron_syn = axon_syn, neuron_syn
+        self.backend = backend
+        out_ids = [self._nid[k] for k in self.outputs]
+        # distinct model-parameter tuples define the model groups in HBM
+        sig = {}
+        model_ids = {}
+        for i, m in enumerate(models):
+            s = (m.kind, m.threshold, m.nu, m.lam)
+            model_ids[i] = sig.setdefault(s, len(sig))
+        self._model_ids = model_ids
+
+        if backend == "simulator":
+            axonW = np.zeros((A, N), np.int32)
+            for a, syns in axon_syn.items():
+                for p, w in syns:
+                    axonW[a, p] += w
+            neuronW = np.zeros((N, N), np.int32)
+            for n, syns in neuron_syn.items():
+                for p, w in syns:
+                    neuronW[n, p] += w
+            self._impl = DenseSimulator(axonW, neuronW, theta, nu, lam,
+                                        is_lif, seed=seed)
+            self.counter: Optional[AccessCounter] = None
+        elif backend == "engine":
+            image = hbm.compile_network(axon_syn, neuron_syn, model_ids,
+                                        out_ids, N, dense_pack=dense_pack)
+            self.image = image
+            self._impl = EventEngine(image, theta, nu, lam, is_lif, N,
+                                     out_ids, seed=seed)
+            self.counter = self._impl.counter
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+
+    # ------------------------------------------------------------- running
+    def step(self, inputs: Sequence = (), membranePotential: bool = False):
+        """Run one timestep with the given axon keys active. Returns the
+        keys of output neurons that spiked (plus all membrane potentials
+        when membranePotential=True)."""
+        ids = [self._aid[k] for k in inputs]
+        spikes = np.asarray(self._impl.step(ids))
+        fired = [k for k in self.outputs if spikes[self._nid[k]]]
+        if membranePotential:
+            V = np.asarray(self._impl.V)
+            return fired, [(k, int(V[self._nid[k]]))
+                           for k in self.neuron_keys]
+        return fired
+
+    def reset(self):
+        self._impl.reset()
+
+    # ------------------------------------------------------------ synapses
+    def read_synapse(self, pre, post) -> int:
+        pid = self._nid[post]
+        if pre in self._aid:
+            table = self._axon_syn[self._aid[pre]]
+        else:
+            table = self._neuron_syn[self._nid[pre]]
+        for p, w in table:
+            if p == pid:
+                return w
+        raise KeyError(f"no synapse {pre!r}->{post!r}")
+
+    def write_synapse(self, pre, post, weight: int):
+        pid = self._nid[post]
+        if pre in self._aid:
+            table = self._axon_syn[self._aid[pre]]
+        else:
+            table = self._neuron_syn[self._nid[pre]]
+        for i, (p, w) in enumerate(table):
+            if p == pid:
+                old = w
+                table[i] = (p, int(weight))
+                break
+        else:
+            raise KeyError(f"no synapse {pre!r}->{post!r}")
+        # apply to the backend storage in place
+        if self.backend == "simulator":
+            if pre in self._aid:
+                self._impl.axonW = self._impl.axonW.at[
+                    self._aid[pre], pid].add(int(weight) - old)
+            else:
+                self._impl.neuronW = self._impl.neuronW.at[
+                    self._nid[pre], pid].add(int(weight) - old)
+        else:
+            img = self.image
+            ptr = (img.axon_ptr[self._aid[pre]] if pre in self._aid
+                   else img.neuron_ptr[self._nid[pre]])
+            rows = slice(ptr.base_row, ptr.base_row + ptr.n_rows)
+            slot = pid % hbm.SLOTS
+            col_post = img.syn_post[rows, slot]
+            hit = np.nonzero(col_post == pid)[0]
+            img.syn_weight[ptr.base_row + hit[0], slot] = np.int16(weight)
+            self._impl._w = np.asarray(img.syn_weight, np.int32)
+
+    def read_membrane(self, *keys) -> List[int]:
+        V = np.asarray(self._impl.V)
+        return [int(V[self._nid[k]]) for k in keys]

@@ -1,0 +1,315 @@
+"""ANN -> HiAER-Spike conversion pipeline — §6 + Appendix A.2.
+
+The paper trains MLP / LeNet-5 / spiking-CNN models in PyTorch/SpikingJelly
+with quantization-aware training (binarized sigmoidal activations, int16
+weights) and converts them to axon/neuron adjacency structures. This module
+implements the same pipeline natively in JAX:
+
+  1. `QATModel` — small MLP/CNN trainer with binary activations
+     (straight-through estimator, z > 0 spike rule) — the QAT stage;
+  2. `quantize` — int16 weight quantization with a power-of-two scale,
+     biases folded into thresholds (A.2 bias method 1: θ_i = -b_i);
+  3. `to_network` — adjacency construction: one axon per input pixel
+     (row-major), conv layers mapped by the A.2 sliding-window technique,
+     FC layers fully connected, output neurons listed last;
+  4. exactness check — the quantized JAX forward and the CRI_network
+     (simulator or HBM engine) produce identical predictions, reproducing
+     Table 2's "Software Acc == HiAER Acc" column.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import ANN_neuron, CRI_network
+
+W_BITS = 16
+W_MAX = 2 ** (W_BITS - 1) - 1
+
+
+# ------------------------------------------------------------------ QAT nets
+@jax.custom_vjp
+def binary_act(z):
+    return (z > 0).astype(z.dtype)
+
+
+def _ba_fwd(z):
+    return binary_act(z), z
+
+
+def _ba_bwd(z, g):
+    # straight-through with sigmoid surrogate slope (binarized sigmoid QAT)
+    s = jax.nn.sigmoid(4.0 * z)
+    return (g * 4.0 * s * (1 - s),)
+
+
+binary_act.defvjp(_ba_fwd, _ba_bwd)
+
+
+@dataclass
+class LayerSpec:
+    kind: str                   # 'dense' | 'conv'
+    out_features: int = 0       # dense
+    channels: int = 0           # conv
+    kernel: int = 5
+    stride: int = 2
+
+
+@dataclass
+class QATModel:
+    """MLP / small CNN with binary activations; last layer linear (logits =
+    membrane potentials of output neurons)."""
+    input_shape: Tuple[int, ...]          # (C, H, W) or (D,)
+    layers: List[LayerSpec] = field(default_factory=list)
+    n_classes: int = 10
+
+    def init(self, key):
+        params = []
+        shape = self.input_shape
+        for spec in self.layers:
+            key, k = jax.random.split(key)
+            if spec.kind == "conv":
+                C = shape[0]
+                w = jax.random.normal(k, (spec.channels, C, spec.kernel,
+                                          spec.kernel)) * (1.0 / np.sqrt(
+                                              C * spec.kernel ** 2))
+                b = jnp.zeros((spec.channels,))
+                H = (shape[1] - spec.kernel) // spec.stride + 1
+                W = (shape[2] - spec.kernel) // spec.stride + 1
+                shape = (spec.channels, H, W)
+            else:
+                D = int(np.prod(shape))
+                w = jax.random.normal(k, (D, spec.out_features)) \
+                    * (1.0 / np.sqrt(D))
+                b = jnp.zeros((spec.out_features,))
+                shape = (spec.out_features,)
+            params.append({"w": w, "b": b})
+        key, k = jax.random.split(key)
+        D = int(np.prod(shape))
+        params.append({"w": jax.random.normal(k, (D, self.n_classes))
+                       * (1.0 / np.sqrt(D)),
+                       "b": jnp.zeros((self.n_classes,))})
+        return params
+
+    def apply(self, params, x, quantized=False):
+        """x: (B, *input_shape) float (0/1). Returns logits (B, n_classes)."""
+        h = x
+        for spec, p in zip(self.layers, params[:-1]):
+            if spec.kind == "conv":
+                z = jax.lax.conv_general_dilated(
+                    h, p["w"], (spec.stride, spec.stride), "VALID",
+                    dimension_numbers=("NCHW", "OIHW", "NCHW"))
+                z = z + p["b"][None, :, None, None]
+            else:
+                h = h.reshape(h.shape[0], -1)
+                z = h @ p["w"] + p["b"]
+            h = binary_act(z) if not quantized else (z > 0).astype(z.dtype)
+        h = h.reshape(h.shape[0], -1)
+        p = params[-1]
+        return h @ p["w"] + p["b"]
+
+
+def train_qat(model: QATModel, X, y, *, epochs=10, lr=1e-3, batch=64,
+              seed=0, verbose=False):
+    """Adam training with binary activations (QAT). X: (n, *shape) float."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, xb, yb):
+        logits = model.apply(p, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    @jax.jit
+    def step(p, m, v, t, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        bc1 = 1 - 0.9 ** t
+        bc2 = 1 - 0.999 ** t
+        p = jax.tree.map(
+            lambda pp, mm, vv: pp - lr * (mm / bc1)
+            / (jnp.sqrt(vv / bc2) + 1e-8), p, m, v)
+        return p, m, v, l
+
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    t = 0
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            t += 1
+            params, m, v, l = step(params, m, v, jnp.float32(t),
+                                   jnp.asarray(X[idx]), jnp.asarray(y[idx]))
+        if verbose:
+            print(f"epoch {ep}: loss {float(l):.4f}")
+    return params
+
+
+# ------------------------------------------------------------- quantization
+def quantize(params, w_scale_bits: Optional[int] = None):
+    """int16 weights with a shared power-of-two scale; biases folded into
+    thresholds downstream. Returns (int_params, scale_bits)."""
+    wmax = max(float(jnp.max(jnp.abs(p["w"]))) for p in params)
+    bmax = max(float(jnp.max(jnp.abs(p["b"]))) for p in params)
+    amax = max(wmax, bmax, 1e-9)
+    if w_scale_bits is None:
+        w_scale_bits = int(np.floor(np.log2(W_MAX / amax)))
+        w_scale_bits = min(w_scale_bits, 14)
+    s = 2 ** w_scale_bits
+    out = []
+    for p in params:
+        out.append({
+            "w": np.clip(np.round(np.asarray(p["w"], np.float64) * s),
+                         -W_MAX, W_MAX).astype(np.int32),
+            "b": np.clip(np.round(np.asarray(p["b"], np.float64) * s),
+                         -W_MAX, W_MAX).astype(np.int32),
+        })
+    return out, w_scale_bits
+
+
+def apply_quantized(model: QATModel, qparams, X) -> np.ndarray:
+    """Integer forward (reference for the converted network): returns final
+    membrane potentials (B, n_classes) int."""
+    h = np.asarray(X).reshape(X.shape[0], *model.input_shape).astype(np.int64)
+    shape = model.input_shape
+    for spec, p in zip(model.layers, qparams[:-1]):
+        if spec.kind == "conv":
+            B, C, H, W = h.shape
+            K, st = spec.kernel, spec.stride
+            Ho = (H - K) // st + 1
+            Wo = (W - K) // st + 1
+            z = np.zeros((B, spec.channels, Ho, Wo), np.int64)
+            for dy in range(K):
+                for dx in range(K):
+                    patch = h[:, :, dy:dy + st * Ho:st, dx:dx + st * Wo:st]
+                    z += np.einsum("bchw,oc->bohw", patch,
+                                   p["w"][:, :, dy, dx])
+            z += p["b"][None, :, None, None]
+            h = (z > 0).astype(np.int64)
+        else:
+            h = h.reshape(h.shape[0], -1)
+            z = h @ p["w"] + p["b"]
+            h = (z > 0).astype(np.int64)
+    h = h.reshape(h.shape[0], -1)
+    return h @ qparams[-1]["w"] + qparams[-1]["b"]
+
+
+# --------------------------------------------------------------- conversion
+def to_network(model: QATModel, qparams, backend="engine",
+               seed=0) -> Tuple[CRI_network, List[str]]:
+    """Build the CRI_network per A.2. Returns (network, output_keys).
+
+    Axons: one per input element, row-major keys "x{i}"; plus one bias axon
+    per layer ("bias_l{i}", A.2 bias method 2) carrying that layer's folded
+    biases. Each bias axon is fired at the timestep its layer integrates
+    (infer_image), so ANN neurons — which are memoryless and would otherwise
+    re-fire every step under the threshold-shift method when b_i > 0 —
+    stay bit-exact with the integer reference forward.
+    """
+    axons: Dict[str, List[Tuple[str, int]]] = {}
+    neurons: Dict[str, Tuple[List[Tuple[str, int]], object]] = {}
+    n_inputs = int(np.prod(model.input_shape))
+    in_keys = [f"x{i}" for i in range(n_inputs)]
+    for k in in_keys:
+        axons[k] = []
+    for i in range(len(model.layers) + 1):
+        axons[f"bias_l{i}"] = []
+
+    prev_keys = np.array(in_keys, dtype=object).reshape(model.input_shape)
+    prev_is_axon = True
+
+    def add_syn(pre, post, w):
+        w = int(w)
+        if w == 0:
+            return
+        if prev_is_axon:
+            axons[pre].append((post, w))
+        else:
+            neurons[pre][0].append((post, w))
+
+    layer_idx = 0
+    for spec, p in zip(model.layers, qparams[:-1]):
+        if spec.kind == "conv":
+            C, H, W = prev_keys.shape
+            K, st = spec.kernel, spec.stride
+            Ho = (H - K) // st + 1
+            Wo = (W - K) // st + 1
+            new_keys = np.empty((spec.channels, Ho, Wo), object)
+            for o in range(spec.channels):
+                for yy in range(Ho):
+                    for xx in range(Wo):
+                        nk = f"l{layer_idx}_f{o}_{yy}_{xx}"
+                        new_keys[o, yy, xx] = nk
+                        neurons[nk] = ([], ANN_neuron(threshold=0))
+                        if int(p["b"][o]):
+                            axons[f"bias_l{layer_idx}"].append(
+                                (nk, int(p["b"][o])))
+            # sliding window (A.2): window over the index tensor
+            for o in range(spec.channels):
+                for yy in range(Ho):
+                    for xx in range(Wo):
+                        post = new_keys[o, yy, xx]
+                        for c in range(C):
+                            for dy in range(K):
+                                for dx in range(K):
+                                    pre = prev_keys[c, yy * st + dy,
+                                                    xx * st + dx]
+                                    add_syn(pre, post,
+                                            p["w"][o, c, dy, dx])
+            prev_keys = new_keys
+        else:
+            flat = prev_keys.reshape(-1)
+            new_keys = np.empty((spec.out_features,), object)
+            for j in range(spec.out_features):
+                nk = f"l{layer_idx}_u{j}"
+                new_keys[j] = nk
+                neurons[nk] = ([], ANN_neuron(threshold=0))
+                if int(p["b"][j]):
+                    axons[f"bias_l{layer_idx}"].append((nk, int(p["b"][j])))
+            for i, pre in enumerate(flat):
+                for j in range(spec.out_features):
+                    add_syn(pre, new_keys[j], p["w"][i, j])
+            prev_keys = new_keys
+        prev_is_axon = False
+        layer_idx += 1
+
+    # output layer: high threshold so outputs never fire/reset — their
+    # membrane potential after the final step IS the integer logit
+    p = qparams[-1]
+    flat = prev_keys.reshape(-1)
+    out_keys = [f"out{j}" for j in range(model.n_classes)]
+    for j, ok in enumerate(out_keys):
+        neurons[ok] = ([], ANN_neuron(threshold=2 ** 30))
+        if int(p["b"][j]) != 0:
+            axons[f"bias_l{len(model.layers)}"].append((ok, int(p["b"][j])))
+    for i, pre in enumerate(flat):
+        for j, ok in enumerate(out_keys):
+            add_syn(pre, ok, p["w"][i, j])
+
+    net = CRI_network(axons=axons, neurons=neurons, outputs=out_keys,
+                      backend=backend, seed=seed)
+    return net, out_keys
+
+
+def infer_image(net: CRI_network, img, model: QATModel,
+                out_keys: Sequence[str]) -> Tuple[int, List[int]]:
+    """Run one image: activate its pixel axons for one timestep, then let
+    the signal propagate layer-by-layer, firing each layer's bias axon at
+    its integration step; predict argmax output membrane potential
+    (§6 MLP/LeNet protocol)."""
+    net.reset()
+    flat = np.asarray(img).reshape(-1)
+    depth = len(model.layers) + 1
+    net.step([f"x{i}" for i in np.nonzero(flat)[0]] + ["bias_l0"])
+    for t in range(1, depth):
+        net.step([f"bias_l{t}"])
+    pots = net.read_membrane(*out_keys)
+    return int(np.argmax(pots)), pots

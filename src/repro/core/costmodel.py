@@ -1,0 +1,57 @@
+"""Energy & latency cost model — §6 ("energy usage is primarily dominated by
+HBM accesses; energy consumption was approximated by the product of the
+energy cost of a single HBM access and the number of HBM accesses performed
+during an inference"), Tables 2-4, Fig. 10.
+
+Counting comes from the two-phase routing over the HBM image (engine.py):
+  phase-1: one pointer read per fired axon/neuron,
+  phase-2: one row read per synapse row spanned by each fired item.
+
+Constants are calibrated against Table 2's first row (MLP 784→128→10:
+1.1 µJ / 4.2 µs per inference with ~1.5k accesses at typical MNIST pixel
+activity): ≈ 744 pJ per 64-bit HBM access (~93 pJ/B, consistent with HBM2
+energy/bit literature) and ≈ 2.84 ns effective per access (16-lane pipelined
+at the FPGA clock). benchmarks/fig10_scaling.py re-derives the paper's
+linear energy/latency-vs-neurons regressions from this model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+E_ACCESS_PJ = 744.0       # energy per HBM access (64-bit slot read)
+NS_PER_ACCESS = 2.84      # effective pipelined latency per access
+FIXED_NS = 120.0          # per-timestep control overhead (pointer setup)
+
+
+@dataclass
+class AccessCounter:
+    pointer_reads: int = 0
+    row_reads: int = 0
+    timesteps: int = 0
+
+    @property
+    def total_accesses(self) -> int:
+        return self.pointer_reads + self.row_reads
+
+    def energy_uJ(self) -> float:
+        return self.total_accesses * E_ACCESS_PJ * 1e-6
+
+    def latency_us(self) -> float:
+        return (self.total_accesses * NS_PER_ACCESS
+                + self.timesteps * FIXED_NS) * 1e-3
+
+    def merge(self, other: "AccessCounter"):
+        self.pointer_reads += other.pointer_reads
+        self.row_reads += other.row_reads
+        self.timesteps += other.timesteps
+
+    def reset(self):
+        self.pointer_reads = self.row_reads = self.timesteps = 0
+
+    def as_dict(self):
+        return {"pointer_reads": self.pointer_reads,
+                "row_reads": self.row_reads,
+                "timesteps": self.timesteps,
+                "total_accesses": self.total_accesses,
+                "energy_uJ": self.energy_uJ(),
+                "latency_us": self.latency_us()}

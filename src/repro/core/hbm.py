@@ -1,0 +1,189 @@
+"""HBM synaptic-routing-table layout — §4, Fig. 2, Fig. 7, Appendix A.3.
+
+Memory model (8 GB HBM per FPGA card):
+  * memory is divided into SEGMENTS of 16 SLOTS spanning two HBM rows;
+    each slot stores one pointer or one synapse record;
+  * four regions: neuron-model definitions, axon pointers, neuron pointers,
+    synapses;
+  * a pointer = (base address, n_rows) delimiting where its item's outgoing
+    synapses live — relative row counts rather than absolute addresses save
+    bits (§4);
+  * ALIGNMENT: a synapse must occupy the same slot number (id mod 16) as its
+    POSTSYNAPTIC neuron, so that the 16-lane parallel membrane-update units
+    each read their own slot (Fig. 2b);
+  * neuron pointers are grouped by neuron model;
+  * output neurons are designated by a flag in their synapse records; a
+    neuron with no outgoing synapses still gets 16 zero-weight synapses so
+    that every neuron has a synapse-region entry (A.3);
+  * the compiler packs synapses for maximum density (it may reorder
+    axon/neuron placement to reduce padding), which lowers execution latency.
+
+This module reproduces the mapping algorithm of Fig. 7 and reports the
+packing/access statistics that drive the paper's energy & latency model
+(costmodel.py). The event-driven engine (engine.py) executes directly from
+this table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SLOTS = 16                 # slots per segment (Fig. 2)
+ROWS_PER_SEGMENT = 2       # a segment spans two HBM rows
+HBM_BYTES = 8 << 30        # 8 GB per FPGA card
+SLOT_BYTES = 8             # one 64-bit record per slot (weight+addr+flags)
+
+
+@dataclass
+class Pointer:
+    base_row: int          # starting row in the synapse region
+    n_rows: int            # rows spanned by this item's synapses
+
+
+@dataclass
+class Synapse:
+    post: int              # postsynaptic neuron id
+    weight: int            # int16
+    output_flag: bool = False
+
+
+@dataclass
+class HBMImage:
+    """The packed routing table: a dense (rows, SLOTS) record array."""
+    syn_post: np.ndarray       # (rows, SLOTS) int32, -1 = empty
+    syn_weight: np.ndarray     # (rows, SLOTS) int16
+    syn_outflag: np.ndarray    # (rows, SLOTS) bool
+    axon_ptr: Dict[int, Pointer] = field(default_factory=dict)
+    neuron_ptr: Dict[int, Pointer] = field(default_factory=dict)
+    model_groups: Dict[int, List[int]] = field(default_factory=dict)
+
+    @property
+    def n_rows(self) -> int:
+        return self.syn_post.shape[0]
+
+    def stats(self) -> Dict[str, float]:
+        used = int((self.syn_post >= 0).sum())
+        total = self.syn_post.size
+        ptr_slots = len(self.axon_ptr) + len(self.neuron_ptr)
+        return {
+            "synapse_slots_used": used,
+            "synapse_slots_total": total,
+            "packing_density": used / max(total, 1),
+            "pointer_slots": ptr_slots,
+            "hbm_bytes": (total + ptr_slots) * SLOT_BYTES,
+            "hbm_rows": self.n_rows,
+        }
+
+
+class HBMMapper:
+    """Fig. 7 mapping: iterate items (axons then neurons, neurons grouped by
+    model), place each item's synapses contiguously, respecting the
+    slot-alignment constraint (slot == post % 16); then write the pointer."""
+
+    def __init__(self, n_neurons: int):
+        self.n_neurons = n_neurons
+        self.rows: List[List[Optional[Synapse]]] = []
+
+    def _ensure(self, row: int):
+        while len(self.rows) <= row:
+            self.rows.append([None] * SLOTS)
+
+    def place_item(self, synapses: Sequence[Synapse], start_row: int) -> Pointer:
+        """Place one axon/neuron's synapses contiguously from start_row.
+        Within the region each synapse goes to the first free row whose
+        aligned slot (post % 16) is empty."""
+        if not synapses:               # empty axon: zero-span pointer
+            return Pointer(base_row=start_row, n_rows=0)
+        row = start_row
+        self._ensure(row)
+        placed_rows = set()
+        for syn in synapses:
+            slot = syn.post % SLOTS
+            r = row
+            while True:
+                self._ensure(r)
+                if self.rows[r][slot] is None:
+                    self.rows[r][slot] = syn
+                    placed_rows.add(r)
+                    break
+                r += 1
+        end_row = max(placed_rows) if placed_rows else row
+        return Pointer(base_row=row, n_rows=end_row - row + 1)
+
+    def finalize(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        n = max(len(self.rows), 1)
+        # round up to whole segments
+        n = ((n + ROWS_PER_SEGMENT - 1) // ROWS_PER_SEGMENT) * ROWS_PER_SEGMENT
+        post = np.full((n, SLOTS), -1, np.int32)
+        w = np.zeros((n, SLOTS), np.int16)
+        flag = np.zeros((n, SLOTS), bool)
+        for r, row in enumerate(self.rows):
+            for s, syn in enumerate(row):
+                if syn is not None:
+                    post[r, s] = syn.post
+                    w[r, s] = np.int16(np.clip(syn.weight, -32768, 32767))
+                    flag[r, s] = syn.output_flag
+        return post, w, flag
+
+
+def compile_network(axon_syn: Dict[int, List[Tuple[int, int]]],
+                    neuron_syn: Dict[int, List[Tuple[int, int]]],
+                    neuron_model_ids: Dict[int, int],
+                    outputs: Sequence[int],
+                    n_neurons: int,
+                    dense_pack: bool = True) -> HBMImage:
+    """Build the HBM image.
+
+    axon_syn / neuron_syn: item id -> [(post_neuron, weight), ...]
+    neuron_model_ids: neuron id -> model group id (pointers grouped by model)
+    dense_pack: start each item's search at the current frontier (the
+    compiler's density optimization); False = segment-aligned placement
+    (each item starts on a fresh segment — the naive baseline the paper's
+    compiler improves on).
+    """
+    out_set = set(outputs)
+    mapper = HBMMapper(n_neurons)
+    img_axon_ptr: Dict[int, Pointer] = {}
+    img_neuron_ptr: Dict[int, Pointer] = {}
+    frontier = 0
+
+    def mk(syns, is_out_src=False):
+        return [Synapse(post=p, weight=w,
+                        output_flag=(p in out_set)) for p, w in syns]
+
+    def advance():
+        # items own disjoint row ranges (phase-2 reads a pointer's rows in
+        # full); dense packing starts the next item on the very next row,
+        # the naive baseline pads to a segment boundary.
+        f = len(mapper.rows)
+        if not dense_pack:
+            f += (-f) % ROWS_PER_SEGMENT
+        return f
+
+    # Fig. 7: axons first
+    for aid in sorted(axon_syn):
+        ptr = mapper.place_item(mk(axon_syn[aid]), frontier)
+        img_axon_ptr[aid] = ptr
+        frontier = advance()
+    # neurons grouped by model (§A.3 step 1)
+    groups: Dict[int, List[int]] = {}
+    for nid, mid in neuron_model_ids.items():
+        groups.setdefault(mid, []).append(nid)
+    for mid in sorted(groups):
+        for nid in sorted(groups[mid]):
+            syns = mk(neuron_syn.get(nid, []))
+            if not syns:
+                # A.3: a zero-fanout neuron still gets a full segment of 16
+                # zero-weight synapses; if it is an output neuron the filler
+                # records carry its output flag.
+                syns = [Synapse(post=s, weight=0,
+                                output_flag=(nid in out_set))
+                        for s in range(SLOTS)]
+            ptr = mapper.place_item(syns, frontier)
+            img_neuron_ptr[nid] = ptr
+            frontier = advance()
+    post, w, flag = mapper.finalize()
+    return HBMImage(post, w, flag, img_axon_ptr, img_neuron_ptr,
+                    {m: sorted(g) for m, g in groups.items()})

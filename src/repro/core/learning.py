@@ -1,0 +1,90 @@
+"""On-line synaptic learning — §3: "support synaptic learning algorithms
+that require careful accounting for time differences between pre- and
+postsynaptic spikes, such as variations of spike-timing-dependent
+plasticity (STDP)". Weight updates execute host-side (the paper's server
+CPUs program updates over PCIe) against the same synapse tables.
+
+Trace-based STDP with 1 ms-resolution exponential traces:
+    pre-trace  x_j += 1 on pre spike,  decays by 2^-tau_shift each step
+    post-trace y_i += 1 on post spike, same decay (integer shift decay,
+    matching the platform's fixed-point arithmetic)
+    Δw_ij = A_plus * x_j  on a postsynaptic spike   (potentiation)
+            -A_minus * y_i on a presynaptic spike   (depression)
+Weights clip to int16.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+W_MAX = 32767
+
+
+@dataclass
+class STDPConfig:
+    a_plus: int = 8
+    a_minus: int = 6
+    tau_shift: int = 2          # trace decay: t -= t >> tau_shift
+    w_min: int = -W_MAX
+    w_max: int = W_MAX
+
+
+class STDP:
+    """Operates on a CRI_network (simulator or engine backend) by replaying
+    its spike history through read/write_synapse — the PCIe path."""
+
+    def __init__(self, net, cfg: STDPConfig = STDPConfig()):
+        self.net = net
+        self.cfg = cfg
+        self.pre_trace = {k: 0 for k in
+                          list(net.axon_keys) + list(net.neuron_keys)}
+        self.post_trace = {k: 0 for k in net.neuron_keys}
+        # pre -> [(post, ...)] adjacency in key space
+        ids = {i: k for k, i in net._nid.items()}
+        self.adj = {}
+        for k in net.axon_keys:
+            self.adj[k] = [ids[p] for p, _ in net._axon_syn[net._aid[k]]]
+        for k in net.neuron_keys:
+            self.adj[k] = [ids[p] for p, _ in net._neuron_syn[net._nid[k]]]
+
+    def _decay(self):
+        sh = self.cfg.tau_shift
+        for d in (self.pre_trace, self.post_trace):
+            for k in d:
+                d[k] -= d[k] >> sh
+
+    def step(self, inputs, fired_keys):
+        """Call after each net.step: inputs = axon keys driven this step,
+        fired_keys = neuron keys that spiked this step."""
+        cfg = self.cfg
+        self._decay()
+        fired = set(fired_keys)
+        pres = list(inputs) + list(fired)
+        # depression: pre spike against existing post trace
+        for pre in pres:
+            for post in self.adj.get(pre, ()):
+                yt = self.post_trace.get(post, 0)
+                if yt:
+                    w = self.net.read_synapse(pre, post)
+                    w2 = int(np.clip(w - cfg.a_minus * yt,
+                                     cfg.w_min, cfg.w_max))
+                    if w2 != w:
+                        self.net.write_synapse(pre, post, w2)
+        # potentiation: post spike against pre traces
+        for pre, posts in self.adj.items():
+            xt = self.pre_trace.get(pre, 0)
+            if not xt:
+                continue
+            for post in posts:
+                if post in fired:
+                    w = self.net.read_synapse(pre, post)
+                    w2 = int(np.clip(w + cfg.a_plus * xt,
+                                     cfg.w_min, cfg.w_max))
+                    if w2 != w:
+                        self.net.write_synapse(pre, post, w2)
+        # bump traces after applying (classic trace ordering)
+        for pre in pres:
+            self.pre_trace[pre] = self.pre_trace.get(pre, 0) + 1
+        for post in fired:
+            self.post_trace[post] = self.post_trace.get(post, 0) + 1

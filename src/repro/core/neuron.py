@@ -1,0 +1,118 @@
+"""Neuron models — Table 1 of the paper, bit-exact fixed-point semantics.
+
+Two model classes:
+  LIF  (θ, ν, λ): leaky integrate-and-fire, int32 membrane
+  ANN  (θ, ν):    binary/memoryless ("spike or not each step")
+
+Within-timestep order (§5.1 + Fig. 8 simulator excerpt):
+  1. noise update   V += ξ,  ξ = (u | 1) << ν  (>> -ν if ν < 0), where
+                    u ~ U{-2^16 .. 2^16-1} (17-bit signed), LSB forced to 1
+                    to balance the distribution around zero
+  2. spike update   S = (V > θ)  (strict >), spiking neurons reset V ← 0
+  3. membrane update
+       LIF: V ← V - V // 2^λ + Σ_j w_ij S_j   (floor division, exactly
+            Fig. 8's `V - V // np.power(2, λ)`)
+       ANN: V ← Σ_j w_ij S_j                  (no carry-over)
+
+The synaptic input Σ_j w_ij S_j integrates the spikes detected in THIS
+timestep (phase split below mirrors the two-phase HBM routing of §4).
+λ = 63 approximates an IF neuron; ν > -17 on an ANN neuron makes it a
+Boltzmann-like stochastic binary neuron. ν is a 6-bit signed integer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NOISE_BITS = 17
+MAX_LAMBDA = 63
+_NU_MIN, _NU_MAX = -32, 31      # 6-bit signed
+
+
+@dataclass(frozen=True)
+class LIF_neuron:
+    threshold: int
+    nu: int = -32               # noise shift (<= -17 disables noise)
+    lam: int = MAX_LAMBDA       # leak: V -= V // 2^lam
+
+    def __post_init__(self):
+        if not _NU_MIN <= self.nu <= _NU_MAX:
+            raise ValueError(f"nu must be 6-bit signed, got {self.nu}")
+        if not 0 <= self.lam <= MAX_LAMBDA:
+            raise ValueError(f"lambda in [0,63], got {self.lam}")
+
+    @property
+    def kind(self):
+        return "LIF"
+
+
+@dataclass(frozen=True)
+class ANN_neuron:
+    threshold: int
+    nu: int = -32
+
+    def __post_init__(self):
+        if not _NU_MIN <= self.nu <= _NU_MAX:
+            raise ValueError(f"nu must be 6-bit signed, got {self.nu}")
+
+    @property
+    def kind(self):
+        return "ANN"
+
+    @property
+    def lam(self):
+        return MAX_LAMBDA       # unused; uniform param layout
+
+
+def noise_sample(key, n, nu):
+    """ξ per neuron: 17-bit signed uniform, LSB set to 1, shifted by ν.
+    nu: (n,) int32 per-neuron shift. Matches Fig. 8's
+    (randint | 1) << ν  /  >> -ν."""
+    u = jax.random.randint(key, (n,), -(2 ** (NOISE_BITS - 1)),
+                           2 ** (NOISE_BITS - 1), dtype=jnp.int32)
+    u = u | 1
+    pos = jnp.minimum(jnp.maximum(nu, 0), 31)
+    neg = jnp.minimum(jnp.maximum(-nu, 0), 31)
+    # Right shift truncates toward zero (sign-magnitude shift): ν <= -17
+    # must yield exactly 0 so that "noise disabled" neurons are bit-exact
+    # deterministic (Table 1 note: ν > -17 makes an ANN neuron stochastic).
+    mag = jnp.abs(u) >> neg
+    right = jnp.sign(u) * mag
+    return jnp.where(nu >= 0, u << pos, right)
+
+
+def leak(V, lam):
+    """V - V // 2^lam with floor semantics (Fig. 8 numpy floor division).
+    |V| < 2^31, so for lam >= 31 the floor quotient is 0 (V >= 0) or -1
+    (V < 0) — computed as an arithmetic shift, avoiding int64 entirely."""
+    pow2 = jnp.int32(1) << jnp.minimum(lam, 30)
+    small = V // pow2          # floor division, exact for lam <= 30
+    big = V >> 31              # 0 or -1: floor(V / 2^lam) for lam >= 31
+    return V - jnp.where(lam >= 31, big, small)
+
+
+def fire_phase(V, theta, nu, lam, is_lif, key):
+    """Phase 1 of a timestep: noise, threshold, reset, leak/zero.
+    Returns (V_mid, spikes). V_mid still lacks this step's synaptic input."""
+    V = V + noise_sample(key, V.shape[0], nu)
+    spikes = V > theta
+    V = jnp.where(spikes, 0, V)
+    V = jnp.where(is_lif, leak(V, lam), 0)
+    return V, spikes
+
+
+def integrate_phase(V_mid, syn_in):
+    """Phase 2: integrate Σ_j w_ij S_j (this step's spikes + axon events)."""
+    return V_mid + syn_in
+
+
+def pack_models(models):
+    """Stack per-neuron model params into dense vectors.
+    models: list of LIF_neuron/ANN_neuron, one per neuron id."""
+    theta = jnp.array([m.threshold for m in models], jnp.int32)
+    nu = jnp.array([m.nu for m in models], jnp.int32)
+    lam = jnp.array([m.lam for m in models], jnp.int32)
+    is_lif = jnp.array([m.kind == "LIF" for m in models], bool)
+    return theta, nu, lam, is_lif

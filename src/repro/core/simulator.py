@@ -1,0 +1,58 @@
+"""Pure-software simulator — the jnp equivalent of the paper's Fig. 8 code.
+
+The network is represented by two (sparse-in-spirit, dense-in-storage for
+XLA) integer weight matrices — axonW (A, N) and neuronW (N, N) — and the
+membrane update follows the exact Fig. 8 order. This is the semantic oracle
+the event-driven engine (engine.py) and the Pallas spike kernel are tested
+against, and doubles as the local `hs_api`-style backend users run on their
+own machines before submitting to the cluster.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neuron as nrn
+
+
+class DenseSimulator:
+    def __init__(self, axonW, neuronW, theta, nu, lam, is_lif, seed=0):
+        self.axonW = jnp.asarray(axonW, jnp.int32)      # (A, N)
+        self.neuronW = jnp.asarray(neuronW, jnp.int32)  # (N, N)
+        self.theta = jnp.asarray(theta, jnp.int32)
+        self.nu = jnp.asarray(nu, jnp.int32)
+        self.lam = jnp.asarray(lam, jnp.int32)
+        self.is_lif = jnp.asarray(is_lif, bool)
+        self.n_axons = self.axonW.shape[0]
+        self.n_neurons = self.neuronW.shape[0]
+        self.V = jnp.zeros((self.n_neurons,), jnp.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(self._step_impl)
+
+    def reset(self):
+        self.V = jnp.zeros((self.n_neurons,), jnp.int32)
+
+    def _step_impl(self, V, key, fired_axons, axonW, neuronW):
+        key, sub = jax.random.split(key)
+        V_mid, spikes = nrn.fire_phase(V, self.theta, self.nu, self.lam,
+                                       self.is_lif, sub)
+        syn = (fired_axons.astype(jnp.int32) @ axonW
+               + spikes.astype(jnp.int32) @ neuronW)
+        V_next = nrn.integrate_phase(V_mid, syn)
+        return V_next, key, spikes
+
+    def step(self, axon_inputs):
+        """axon_inputs: iterable of axon indices active this timestep.
+        Returns bool (N,) spike vector (this step's fired neurons)."""
+        fired = jnp.zeros((self.n_axons,), bool)
+        if len(axon_inputs):
+            fired = fired.at[jnp.asarray(list(axon_inputs))].set(True)
+        self.V, self.key, spikes = self._step(self.V, self.key, fired,
+                                              self.axonW, self.neuronW)
+        return spikes
+
+    def run(self, steps_axon_inputs):
+        return [self.step(a) for a in steps_axon_inputs]

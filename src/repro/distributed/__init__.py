@@ -1,0 +1,5 @@
+from repro.distributed.context import (batch_axes, get_mesh, mesh_context,
+                                       set_mesh, tp_axis, tp_size)
+
+__all__ = ["batch_axes", "get_mesh", "mesh_context", "set_mesh", "tp_axis",
+           "tp_size"]

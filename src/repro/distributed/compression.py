@@ -1,0 +1,95 @@
+"""Gradient compression with error feedback — the distributed-optimization
+hooks for scarce cross-pod (DCN) bandwidth.
+
+Two compressors, both with error-feedback state (residual carried into the
+next step so compression error doesn't bias convergence):
+  * int8 blockwise quantization  (~4x over f32, exact scale per 256-block)
+  * top-k magnitude sparsification (k as a fraction; indices+values)
+
+They plug into make_train_step(compressor=...) and are applied to gradients
+before the optimizer. On a real multi-pod run they sit between the
+intra-pod reduce (full precision over ICI) and the cross-pod all-reduce
+(compressed over DCN) — the HiAER principle again: full-rate traffic on
+fast local links, summarized traffic on slow global links.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad(x, m):
+    n = x.size
+    pad = (-n) % m
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def int8_compress(g):
+    """g (any shape) -> (q int8, scale f32 per block)."""
+    flat, n = _pad(g.astype(jnp.float32), BLOCK)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale, n
+
+
+def int8_decompress(q, scale, n, shape):
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return out.reshape(shape)
+
+
+def topk_compress(g, frac: float):
+    flat = g.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx, flat.size
+
+
+def topk_decompress(vals, idx, size, shape):
+    return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+class ErrorFeedback:
+    """Stateful wrapper: grads <- decompress(compress(grads + residual));
+    residual <- (grads + residual) - decompressed."""
+
+    def __init__(self, mode: str = "int8", topk_frac: float = 0.01):
+        self.mode = mode
+        self.topk_frac = topk_frac
+
+    def init(self, grads):
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def apply(self, grads, residual):
+        """Returns (compressed-then-decompressed grads, new residual)."""
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            if self.mode == "int8":
+                q, s, n = int8_compress(x)
+                d = int8_decompress(q, s, n, x.shape)
+            else:
+                v, i, n = topk_compress(x, self.topk_frac)
+                d = topk_decompress(v, i, n, x.shape)
+            return d.astype(g.dtype), x - d
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = tdef.flatten_up_to(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+
+def compressed_bytes(grads, mode="int8", topk_frac=0.01) -> int:
+    total = 0
+    for g in jax.tree.leaves(grads):
+        if mode == "int8":
+            total += g.size + 4 * (g.size // BLOCK + 1)
+        else:
+            k = max(1, int(g.size * topk_frac))
+            total += 8 * k
+    return total

@@ -1,0 +1,84 @@
+"""Mesh context shared by model code.
+
+Model code needs the mesh (a) to build shard_map'd blocks (MoE dispatch,
+hierarchical HiAER exchange) and (b) to phrase sharding constraints in terms
+of whatever axes exist ('pod' only on the multi-pod mesh). A context variable
+avoids threading the mesh through every layer signature.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Mesh:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        # default: trivial 1x1 mesh over the available devices[0]
+        dev = jax.devices()[0]
+        mesh = Mesh(
+            __import__("numpy").array([[dev]]), ("data", "model"))
+        _state.mesh = mesh
+    return mesh
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Axes the global batch is sharded over ('pod' included when present)."""
+    mesh = get_mesh()
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def tp_axis() -> str:
+    return "model"
+
+
+def tp_size() -> int:
+    return get_mesh().shape[tp_axis()]
+
+
+def dp_size() -> int:
+    mesh = get_mesh()
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the context mesh.
+
+    'batch' resolves to the batch axes ('pod','data' on multi-pod meshes);
+    axes whose size does not divide the dim are dropped (e.g. batch=1 in the
+    long_500k cell stays replicated instead of erroring)."""
+    mesh = get_mesh()
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        s = batch_axes() if s == "batch" else s
+        axes = s if isinstance(s, tuple) else (s,) if s else ()
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        resolved.append(s if size and dim % max(size, 1) == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

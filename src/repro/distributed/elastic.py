@@ -1,0 +1,68 @@
+"""Elastic scaling + straggler mitigation.
+
+Node-failure story for 1000+ node deployments:
+  1. a heartbeat/watchdog detects the failure (StepWatchdog below at step
+     granularity; the real cluster agent at process granularity);
+  2. surviving hosts rebuild a smaller mesh (drop the failed pod / data
+     row — mesh shapes stay rectangular);
+  3. the latest checkpoint is restored ONTO THE NEW MESH: `reshard_tree`
+     re-derives sharding specs from the same ShardingRules against the new
+     mesh and device_puts the restored host arrays — no dependence on the
+     old layout (checkpoints store global arrays / reassemblable shards);
+  4. the data pipeline cursor (saved in checkpoint aux) resumes exactly;
+     global batch is either kept (more grad-accum microbatches per device)
+     or rescaled with the LR (config policy).
+
+StepWatchdog also implements straggler *mitigation*: a step exceeding
+`factor` x the rolling median is flagged; after `patience` consecutive
+flags the runner is told to trigger the elastic path (or, with
+backup-workers enabled in the launcher, to cut over to the spare).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+
+from repro.launch.sharding import ShardingRules, to_named
+
+
+def reshard_tree(host_tree, cfg, new_mesh, kind="params", layout="heads"):
+    """Re-device_put a restored host tree onto a (possibly different) mesh."""
+    rules = ShardingRules(cfg, new_mesh, layout)
+    import jax.numpy as jnp
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), host_tree)
+    if kind == "params":
+        specs = rules.params_specs(shapes)
+    elif kind == "opt":
+        specs = rules.opt_specs(shapes["mu"],
+                                rules.params_specs(shapes["mu"]))
+    else:
+        raise ValueError(kind)
+    sh = to_named(specs, new_mesh)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), host_tree, sh)
+
+
+class StepWatchdog:
+    def __init__(self, factor: float = 3.0, patience: int = 3,
+                 window: int = 32):
+        self.factor = factor
+        self.patience = patience
+        self.times = deque(maxlen=window)
+        self.strikes = 0
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> dict:
+        dt = time.monotonic() - self._t0
+        med = sorted(self.times)[len(self.times) // 2] if self.times else dt
+        straggling = len(self.times) >= 8 and dt > self.factor * med
+        self.strikes = self.strikes + 1 if straggling else 0
+        self.times.append(dt)
+        return {"step_s": dt, "median_s": med, "straggler": straggling,
+                "evict": self.strikes >= self.patience}

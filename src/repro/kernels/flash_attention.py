@@ -1,0 +1,262 @@
+"""Blocked online-softmax (flash) attention forward — the TPU runtime path
+for 32k-token prefill (models/attention.py uses the rematerialized-XLA
+equivalent in dry-run lowering; this kernel is the hardware hot-spot).
+
+Grid (B*H, nq, nk), kv innermost; VMEM scratch carries the running
+(max, denom, accum) across kv blocks; causal block-skipping via @pl.when
+(a query block never touches kv blocks in its future — the same
+event-gating shape as spike_matmul, applied to the attention mask).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq, bk, causal, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def _kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, bq, bk, causal, scale):
+    """Forward that additionally emits logsumexp rows (for the backward)."""
+    _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            bq=bq, bk=bk, causal=causal, scale=scale)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        lse_ref[0] = m_ref[...] + jnp.log(
+            jnp.maximum(l_ref[...], 1e-30))
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, bq, bk, causal, scale):
+    """Grid (bh, nk, nq): accumulate dK/dV for one kv block across q blocks.
+    p recomputed from (q, k, lse); ds = p * (do v^T - delta)."""
+    kj = pl.program_id(1)
+    qi = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_ref[0] = jnp.zeros_like(dk_ref[0])
+        dv_ref[0] = jnp.zeros_like(dv_ref[0])
+
+    run = (not causal) or (kj * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        s = q @ k.T                                    # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
+        p = jnp.exp(s - lse_ref[0][:, None])           # softmax rows
+        dv_ref[0] += (p.T @ do).astype(dv_ref.dtype)
+        dp = do @ v.T                                  # (bq, bk)
+        ds = p * (dp - delta_ref[0][:, None])
+        dk_ref[0] += (ds.T @ q).astype(dk_ref.dtype)   # dK (scale folded in q)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, *, bq, bk, causal, scale):
+    """Grid (bh, nq, nk): accumulate dQ for one q block across kv blocks."""
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        dq_ref[0] = jnp.zeros_like(dq_ref[0])
+
+    run = (not causal) or (kj * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        s = q @ k.T
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        dp = do @ v.T
+        ds = p * (dp - delta_ref[0][:, None])
+        dq_ref[0] += (scale * (ds @ k)).astype(dq_ref.dtype)
+
+
+def _flash_fwd_lse(q, k, v, causal, bq, bk, interpret):
+    B, H, S, D = q.shape
+    scale = D ** -0.5
+    qq, kk, vv = (t.reshape(B * H, S, D) for t in (q, k, v))
+    grid = (B * H, S // bq, S // bk)
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel_lse, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+                   pl.BlockSpec((1, bq), lambda b, i, j: (b, i))],
+        out_shape=[jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+                   jax.ShapeDtypeStruct((B * H, S), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qq, kk, vv)
+    return out.reshape(B, H, S, D), lse
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, bq=128,
+                        bk=128, interpret=None):
+    """Flash backward: returns (dq, dk, dv). delta = rowsum(do * o)."""
+    B, H, S, D = q.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = D ** -0.5
+    qq, kk, vv, oo, ddo = (t.reshape(B * H, S, D)
+                           for t in (q, k, v, o, do))
+    delta = jnp.sum(oo.astype(jnp.float32) * ddo.astype(jnp.float32),
+                    axis=-1)                               # (BH, S)
+    qspec = pl.BlockSpec((1, bq, D), lambda b, j, i: (b, i, 0))
+    kspec = pl.BlockSpec((1, bk, D), lambda b, j, i: (b, j, 0))
+    rowq = pl.BlockSpec((1, bq), lambda b, j, i: (b, i))
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid=(B * H, S // bk, S // bq),
+        in_specs=[qspec, kspec, kspec, qspec, rowq, rowq],
+        out_specs=[kspec, kspec],
+        out_shape=[jax.ShapeDtypeStruct((B * H, S, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B * H, S, D), jnp.float32)],
+        interpret=interpret,
+    )(qq, kk, vv, ddo, lse, delta)
+    qspec2 = pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0))
+    kspec2 = pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0))
+    rowq2 = pl.BlockSpec((1, bq), lambda b, i, j: (b, i))
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid=(B * H, S // bq, S // bk),
+        in_specs=[qspec2, kspec2, kspec2, qspec2, rowq2, rowq2],
+        out_specs=qspec2,
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), jnp.float32),
+        interpret=interpret,
+    )(qq, kk, vv, ddo, lse, delta)
+    rs = lambda t: t.reshape(B, H, S, D)
+    return rs(dq).astype(q.dtype), rs(dk).astype(k.dtype), \
+        rs(dv).astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_trainable(q, k, v, causal=True, bq=128, bk=128,
+                              interpret=None):
+    """Differentiable flash attention (fwd + bwd both Pallas kernels)."""
+    o, _ = _flash_fwd_lse(q, k, v, causal, bq, bk,
+                          interpret if interpret is not None
+                          else jax.default_backend() != "tpu")
+    return o
+
+
+def _fat_fwd(q, k, v, causal, bq, bk, interpret):
+    interp = interpret if interpret is not None \
+        else jax.default_backend() != "tpu"
+    o, lse = _flash_fwd_lse(q, k, v, causal, bq, bk, interp)
+    return o, (q, k, v, o, lse)
+
+
+def _fat_bwd(causal, bq, bk, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                     bq=bq, bk=bk, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128, interpret=None):
+    """q,k,v: (B, H, S, D) — S % bq == 0, D <= VMEM tile. fp32 accumulate."""
+    B, H, S, D = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = D ** -0.5
+    qq = q.reshape(B * H, S, D)
+    kk = k.reshape(B * H, S, D)
+    vv = v.reshape(B * H, S, D)
+    grid = (B * H, S // bq, S // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),     # acc
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+        ],
+        interpret=interpret,
+    )(qq, kk, vv)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,59 @@
+"""Fused LIF/ANN membrane-update kernel — the VMEM-resident analogue of the
+paper's URAM membrane registers (DESIGN.md §2).
+
+One pass over the neuron state vector does noise-shift, threshold/reset,
+leak, and synaptic integration — V never round-trips to HBM between the
+sub-steps (on the FPGA it never leaves URAM within a timestep). All math is
+int32 and bit-exact against core.neuron (ref.lif_step_ref).
+
+Noise bits are pre-generated 17-bit draws (uniform, from the host PRNG) so
+the kernel is deterministic and byte-for-byte testable; on TPU the same
+kernel can seed pltpu.prng_random_bits instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _kernel(V_ref, syn_ref, u_ref, theta_ref, nu_ref, lam_ref, lif_ref,
+            Vout_ref, spike_ref):
+    V = V_ref[...]
+    u = u_ref[...] | 1
+    nu = nu_ref[...]
+    pos = jnp.minimum(jnp.maximum(nu, 0), 31)
+    neg = jnp.minimum(jnp.maximum(-nu, 0), 31)
+    mag = jnp.abs(u) >> neg
+    xi = jnp.where(nu >= 0, u << pos, jnp.sign(u) * mag)
+    V = V + xi
+    spikes = V > theta_ref[...]
+    V = jnp.where(spikes, 0, V)
+    lam = lam_ref[...]
+    pow2 = jnp.int32(1) << jnp.minimum(lam, 30)
+    leaked = V - jnp.where(lam >= 31, V >> 31, V // pow2)
+    V = jnp.where(lif_ref[...] != 0, leaked, 0)
+    Vout_ref[...] = V + syn_ref[...]
+    spike_ref[...] = spikes.astype(jnp.int32)
+
+
+def lif_step(V, syn_in, noise_u, theta, nu, lam, is_lif, *, interpret=None):
+    """All inputs (N,) int32 (is_lif: bool). Returns (V_next, spikes_bool).
+    N must be a multiple of 256 (pad the membrane file)."""
+    n = V.shape[0]
+    assert n % BLOCK == 0, n
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    V_next, spikes = pl.pallas_call(
+        _kernel,
+        grid=(n // BLOCK,),
+        in_specs=[spec] * 7,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(V, syn_in, noise_u, theta, nu, lam, is_lif.astype(jnp.int32))
+    return V_next, spikes.astype(bool)

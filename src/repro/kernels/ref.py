@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spike_matmul_ref(spikes, weights):
+    """Event-driven synaptic accumulation oracle.
+    spikes: (Npre,) bool/int; weights: (Npre, Npost) int16.
+    Returns (Npost,) int32 = Σ_pre spike * w."""
+    return jnp.einsum("p,pn->n", spikes.astype(jnp.int32),
+                      weights.astype(jnp.int32))
+
+
+def lif_step_ref(V, syn_in, noise_u, theta, nu, lam, is_lif):
+    """Fused LIF/ANN timestep oracle (Table 1 semantics; noise bits are
+    pre-generated 17-bit draws, shift applied inside)."""
+    from repro.core.neuron import leak
+    u = noise_u | 1
+    pos = jnp.minimum(jnp.maximum(nu, 0), 31)
+    neg = jnp.minimum(jnp.maximum(-nu, 0), 31)
+    mag = jnp.abs(u) >> neg
+    xi = jnp.where(nu >= 0, u << pos, jnp.sign(u) * mag)
+    V = V + xi
+    spikes = V > theta
+    V = jnp.where(spikes, 0, V)
+    V = jnp.where(is_lif, leak(V, lam), 0)
+    return V + syn_in, spikes
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (B, H, S, D). fp32 softmax. Returns (B, H, S, D)."""
+    S = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

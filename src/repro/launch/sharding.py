@@ -1,0 +1,196 @@
+"""Parameter/optimizer/input sharding rules.
+
+Specs are derived from leaf *paths* in the params pytree plus the arch
+config. Two regimes:
+  TP    — weights sharded over 'model' only (heads / d_ff / experts / vocab),
+          replicated over 'data' (+'pod'); right for <100B params.
+  FSDP  — additionally shard the residual-stream dim over 'data' (ZeRO-3);
+          required for llama3-405b / deepseek-v2-236b (memory table in
+          EXPERIMENTS.md §Dry-run).
+Optimizer moments get ZeRO-1 treatment for TP archs: the first unsharded,
+divisible dim is additionally sharded over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import batch_axes
+
+
+def _names(path) -> tuple:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(k.key)
+        elif hasattr(k, "name"):
+            out.append(k.name)
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return tuple(out)
+
+
+def _div(dim_size: int, mesh, axis) -> bool:
+    if axis is None:
+        return False
+    return dim_size % mesh.shape[axis] == 0
+
+
+class ShardingRules:
+    def __init__(self, cfg, mesh, layout: str):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.layout = layout                      # attention layout
+        self.fsdp = "data" if cfg.fsdp else None
+
+    def _m(self, size, axis="model"):
+        return axis if _div(size, self.mesh, axis) else None
+
+    def _f(self, size):
+        return self.fsdp if _div(size, self.mesh, self.fsdp) else None
+
+    def param_spec(self, path, leaf) -> P:
+        names = _names(path)
+        shp = leaf.shape
+        # leading layer-stack axis present for block params
+        stacked = any(n in ("blocks", "dense_blocks", "groups", "tail")
+                      for n in names)
+        lead = (None,) if stacked else ()
+        s = shp[1:] if stacked else shp
+        name = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+
+        def spec(*axes):
+            return P(*(lead + tuple(axes)))
+
+        if name in ("scale", "bias", "a_log", "dt_bias", "d_skip", "lam",
+                    "conv_b"):
+            # norms / small vectors: lam & conv_b are width-sharded in rglru
+            if name in ("lam", "conv_b") and parent != "ssm" \
+                    and self.cfg.rglru is not None and len(s) == 1 \
+                    and s[0] == self.cfg.rglru.lru_width:
+                return spec(self._m(s[0]))
+            return spec(*([None] * len(s)))
+        if name == "table":                        # (Vp, d)
+            return P(self._m(s[0]), self._f(s[1]))
+        if name == "out" and parent == "embed":    # (d, Vp)
+            return P(self._f(s[0]), self._m(s[1]))
+        if name in ("wq", "wk", "wv"):             # (d, H, hd)
+            h_ax = self._m(s[1]) if self.layout == "heads" else None
+            return spec(self._f(s[0]), h_ax, None)
+        if name in ("bq", "bk", "bv"):
+            h_ax = self._m(s[0]) if self.layout == "heads" else None
+            return spec(h_ax, None)
+        if name == "wo":                           # (H, hd, d)
+            h_ax = self._m(s[0]) if self.layout == "heads" else None
+            return spec(h_ax, None, self._f(s[2]))
+        # --- MLA ---
+        if name in ("w_dq", "w_dkv"):              # (d, r)
+            return spec(self._f(s[0]), None)
+        if name in ("w_uq", "w_uk", "w_uv"):       # (r, H, k)
+            return spec(None, self._m(s[1]), None)
+        if name == "w_o":                          # (H, v, d)
+            return spec(self._m(s[0]), None, self._f(s[2]))
+        # --- SSM (before generic mlp names: w_in is a fused projection whose
+        # output mixes z/x/B/C/dt -- keep it unsharded on the out dim) ---
+        if parent == "ssm":
+            if name == "w_in":
+                return spec(self._f(s[0]), None)
+            if name == "conv_w":
+                return spec(None, None)
+            if name == "w_out":                    # (d_in, d)
+                return spec(self._m(s[0]), self._f(s[1]))
+        # --- MoE ---
+        if name == "router":                       # (d, E)
+            return spec(None, None)
+        if parent == "shared" or (self.cfg.moe is None):
+            if name in ("w_in", "w_gate"):         # (d, ff)
+                return spec(self._f(s[0]), self._m(s[1]))
+            if name == "w_out":                    # (ff, d)
+                return spec(self._m(s[0]), self._f(s[1]))
+        if self.cfg.moe is not None and len(s) == 3 \
+                and name in ("w_in", "w_gate", "w_out"):
+            # routed experts (E, d, ff) / (E, ff, d): experts over 'model'
+            if name == "w_out":
+                return spec(self._m(s[0]), None, self._f(s[2]))
+            return spec(self._m(s[0]), self._f(s[1]), None)
+        if name in ("w_in", "w_gate"):             # dense mlp fallback (d,ff)
+            return spec(self._f(s[0]), self._m(s[1]))
+        if name == "w_out":
+            return spec(self._m(s[0]), self._f(s[1]))
+        # --- SSM ---
+        if parent == "ssm" or name == "conv_w":
+            if name == "w_in":
+                return spec(self._f(s[0]), None)
+            if name == "conv_w":                   # (K, C)
+                return spec(None, None)
+            if name == "w_out":                    # (d_in, d)
+                return spec(self._m(s[0]), self._f(s[1]))
+        # --- RG-LRU ---
+        if name in ("w_x", "w_y"):                 # (d, W)
+            return spec(self._f(s[0]), self._m(s[1]))
+        if name in ("w_i", "w_r"):                 # (W, W)
+            return spec(self._m(s[0]), None)
+        return spec(*([None] * len(s)))
+
+    def params_specs(self, params_shapes):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: self.param_spec(p, l), params_shapes)
+
+    def zero1_spec(self, spec: P, shape) -> P:
+        """Extend a param spec over 'data' for optimizer moments (ZeRO-1)."""
+        if self.fsdp:                               # already data-sharded
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (ax, dim) in enumerate(zip(parts, shape)):
+            if ax is None and _div(dim, self.mesh, "data"):
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    def opt_specs(self, params_shapes, param_specs):
+        mom = jax.tree.map(
+            lambda l, s: self.zero1_spec(s, l.shape),
+            params_shapes, param_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return {"mu": mom, "nu": mom, "step": P()}
+
+    def _bdiv(self, dim) -> bool:
+        n = 1
+        for a in batch_axes():
+            n *= self.mesh.shape[a]
+        return dim % n == 0
+
+    def batch_specs(self, batch_shapes):
+        b = batch_axes()
+        return jax.tree.map(
+            lambda l: P(b if self._bdiv(l.shape[0]) else None,
+                        *([None] * (len(l.shape) - 1))), batch_shapes)
+
+    def cache_specs(self, cache_shapes):
+        b = batch_axes()
+
+        def per_leaf(l):
+            # (L, B, T, ...): batch over data axes; long seq dims (>=4096)
+            # additionally over 'model' (2D KV-cache sharding).
+            rest = [None] * (len(l.shape) - 2)
+            if len(l.shape) >= 4 and l.shape[2] >= 4096 \
+                    and _div(l.shape[2], self.mesh, "model"):
+                rest[0] = "model"
+            return P(None, b if self._bdiv(l.shape[1]) else None, *rest)
+        return jax.tree.map(per_leaf, cache_shapes)
+
+
+def to_named(specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def as_sds(shapes, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes, shardings)

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+shardable, zero allocation) plus eval_shape'd params / optimizer / cache
+trees — the substrate of the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract input batch for a (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    n_patch = cfg.n_patch_tokens if cfg.frontend == "vision_patches" else 0
+    out = {"tokens": jax.ShapeDtypeStruct((B, S - n_patch), jnp.int32)}
+    if n_patch:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_patch, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def params_shapes(cfg: ArchConfig, dtype=jnp.bfloat16):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k, dtype), key)
+
+
+def opt_shapes(cfg: ArchConfig, oc: AdamWConfig, dtype=jnp.bfloat16):
+    p = params_shapes(cfg, dtype)
+    return jax.eval_shape(lambda pp: adamw_init(pp, oc), p)
+
+
+def cache_shapes(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def concretize(tree, seed=0):
+    """Materialize an SDS tree (smoke tests / examples only — never for the
+    full configs)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, l in enumerate(leaves):
+        if jnp.issubdtype(l.dtype, jnp.integer):
+            out.append(jnp.zeros(l.shape, l.dtype))
+        else:
+            out.append(jax.random.normal(jax.random.fold_in(key, i), l.shape,
+                                         jnp.float32).astype(l.dtype) * 0.02)
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,64 @@
+"""Jitted step functions: train_step / prefill_step / decode_step.
+
+``train_step`` optionally runs gradient accumulation over microbatches
+(compute/comm overlap: each microbatch's reduce-scatter overlaps the next
+microbatch's compute under GSPMD scheduling) and optional gradient
+compression hooks (repro.distributed.compression).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, oc: AdamWConfig, layout="heads", microbatches=1,
+                    compressor=None):
+    def loss(params, batch):
+        l, parts = lm.loss_fn(params, cfg, batch, layout=layout)
+        return l, parts
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(c, mb):
+                (l, parts), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(jnp.add, c[0], g)
+                return (gacc, c[1] + l), parts
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            l = lsum / microbatches
+        else:
+            (l, parts), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+        if compressor is not None:
+            grads = compressor(grads)
+        params, opt_state, om = adamw_update(params, grads, opt_state, oc)
+        metrics = {"loss": l, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, layout="heads"):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, layout=layout)
+    return prefill_step
+
+
+def make_decode_step(cfg, layout="heads"):
+    def decode_step(params, token, cache, cache_pos):
+        return lm.decode_step(params, cfg, token, cache, cache_pos,
+                              layout=layout)
+    return decode_step

@@ -1,0 +1,144 @@
+"""Shared layers: norms, init, RoPE/sinusoidal positions, MLPs, embeddings,
+and the sequence-chunked cross-entropy loss (never materializes full logits).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def norm_init(dim, dtype, kind="rmsnorm"):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- positions
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim - ang.ndim >= 2:                         # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, cfg, d_ff, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, d_ff), dtype),
+         "w_out": dense_init(ks[1], (d_ff, d), dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], (d, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p, x, cfg):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif cfg.act == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ---------------------------------------------------------------- embeddings
+def padded_vocab(cfg) -> int:
+    return ((cfg.vocab_size + 127) // 128) * 128
+
+
+def embed_init(key, cfg, dtype):
+    vp, d = padded_vocab(cfg), cfg.d_model
+    ks = jax.random.split(key, 2)
+    p = {"table": dense_init(ks[0], (vp, d), dtype, fan_in=d)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(ks[1], (d, vp), dtype)
+    return p
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, h, cfg):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, p["table"])
+    return jnp.einsum("...d,dv->...v", h, p["out"])
+
+
+def chunked_ce_loss(emb_params, h, labels, mask, cfg):
+    """Cross entropy over next tokens, seq-chunked so (B,S,Vp) logits never
+    materialize (Vp up to 256k). Differentiable; each chunk rematerialized."""
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    while S % chunk:        # largest divisor of S not above loss_chunk
+        chunk -= 1
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)          # (n,B,c,D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hx, lx, mx = xs
+        logits = unembed(emb_params, hx, cfg).astype(jnp.float32)
+        # mask vocab padding
+        vp = logits.shape[-1]
+        pad = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mx
+        return (carry[0] + ce.sum(), carry[1] + mx.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,333 @@
+"""LM assembly: builds any assigned architecture from its ArchConfig.
+
+All backbones are layer-stacked ``lax.scan``s over homogeneous segments
+(dense: one segment; MoE: leading-dense + MoE segments; hybrid: 8 scanned
+(rglru, rglru, local_attn) groups + 2 tail rglru layers; ssm: one segment),
+with ``jax.checkpoint`` per block in training. Vocab logits are never
+materialized over the full sequence (layers.chunked_ce_loss).
+
+Three entry points lowered by the dry-run:
+  loss_fn      — training loss (batch -> scalar)
+  prefill      — full-sequence forward building the KV/state cache
+  decode_step  — one token with a seq_len-deep cache
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, chunked_ce_loss, embed_init,
+                                 embed_lookup, norm_init, mlp_init, mlp_apply,
+                                 sinusoidal_positions, unembed)
+
+
+# ------------------------------------------------------------------ blocks
+def _mix_kind(cfg) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.attn_kind == "mla":
+        return "mla"
+    return "attn"
+
+
+def init_block(key, cfg, kind, dtype, use_moe=False):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": norm_init(cfg.d_model, dtype, cfg.norm)}
+    if kind == "attn" or kind == "local_attn":
+        p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif kind == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+        return p                      # mamba2 block: norm + mixer only
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.rglru_init(ks[0], cfg, dtype)
+    p["ln2"] = norm_init(cfg.d_model, dtype, cfg.norm)
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        d_ff = cfg.d_ff if cfg.moe is None else (cfg.moe.d_ff_dense or cfg.d_ff)
+        p["mlp"] = mlp_init(ks[1], cfg, d_ff, dtype)
+    return p
+
+
+def block_apply(p, x, cfg, kind, positions, layout, cache=None,
+                cache_pos=None, decode=False):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    new_cache = None
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn"):
+        window = cfg.rglru.window if (kind == "local_attn" and cfg.rglru) else None
+        y, new_cache = attn.gqa_apply(p["attn"], h, cfg, positions,
+                                      layout=layout, window=window,
+                                      cache=cache, cache_pos=cache_pos)
+    elif kind == "mla":
+        y, new_cache = attn.mla_apply(p["attn"], h, cfg, positions,
+                                      cache=cache, cache_pos=cache_pos)
+    elif kind == "ssm":
+        y, new_cache = ssm_mod.ssm_apply(p["ssm"], h, cfg, cache=cache)
+        return x + y, new_cache, aux
+    elif kind == "rglru":
+        y, new_cache = rglru_mod.rglru_apply(p["rec"], h, cfg, cache=cache)
+    x = x + y
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if "moe" in p:
+        y2, aux = moe_mod.moe_apply(p["moe"], h2, cfg, decode=decode)
+    else:
+        y2 = mlp_apply(p["mlp"], h2, cfg)
+    x = x + y2
+    if cfg.seq_parallel and x.shape[1] > 1:
+        # sequence-parallel residual: stays S-sharded over 'model' between
+        # blocks (norms are per-token); attention/MoE reshard as needed.
+        x = constrain(x, "batch", "model", None)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ init
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg, dtype),
+        "final_norm": norm_init(cfg.d_model, dtype, cfg.norm),
+    }
+    kind = _mix_kind(cfg)
+    if cfg.family == "hybrid":
+        g = len(cfg.rglru.pattern)
+        n_groups = cfg.n_layers // g           # 8 full groups
+        n_tail = cfg.n_layers - n_groups * g   # 2 trailing rglru layers
+
+        def init_group(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"rec1": init_block(k1, cfg, "rglru", dtype),
+                    "rec2": init_block(k2, cfg, "rglru", dtype),
+                    "attn": init_block(k3, cfg, "local_attn", dtype)}
+        params["groups"] = jax.vmap(init_group)(
+            jax.random.split(keys[1], n_groups))
+        if n_tail:
+            params["tail"] = jax.vmap(
+                lambda k: init_block(k, cfg, "rglru", dtype))(
+                jax.random.split(keys[2], n_tail))
+    elif cfg.moe is not None:
+        kd = cfg.moe.first_k_dense
+        params["dense_blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind, dtype, use_moe=False))(
+            jax.random.split(keys[1], kd))
+        params["blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind, dtype, use_moe=True))(
+            jax.random.split(keys[2], cfg.n_layers - kd))
+    else:
+        params["blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind, dtype))(
+            jax.random.split(keys[1], cfg.n_layers))
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def _remat(cfg, fn):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan_segment(params_stack, x, cfg, kind, positions, layout, remat,
+                  cache_stack=None, cache_pos=None, decode=False,
+                  with_cache=False):
+    """Scan a homogeneous layer segment; returns (x, aux_sum, new_caches)."""
+
+    def body(carry, xs):
+        xc, auxc = carry
+        if cache_stack is not None:
+            pl, cl = xs
+        else:
+            pl, cl = xs, None
+        xc, nc, aux = block_apply(pl, xc, cfg, kind, positions, layout,
+                                  cache=cl, cache_pos=cache_pos,
+                                  decode=decode)
+        if nc is None and with_cache:
+            nc = ()
+        return (xc, auxc + aux), (nc if with_cache else None)
+
+    if remat:
+        body = _remat(cfg, body)
+    xs = (params_stack, cache_stack) if cache_stack is not None else params_stack
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, caches
+
+
+def _embed_input(params, cfg, batch, positions):
+    tokens = batch["tokens"]
+    h = embed_lookup(params["embed"], tokens)
+    if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+        h = jnp.concatenate([batch["patch_embeds"].astype(h.dtype), h], axis=1)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+def _attn_layout(cfg, tp: int) -> str:
+    return "heads" if cfg.n_heads % max(tp, 1) == 0 else "seq"
+
+
+def backbone(params, cfg, batch, positions=None, layout="heads",
+             caches=None, cache_pos=None, decode=False, remat=None):
+    """Returns (h, aux, new_caches)."""
+    remat = cfg.remat if remat is None else remat
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    S_total = tokens.shape[1] + (
+        cfg.n_patch_tokens if cfg.frontend == "vision_patches"
+        and "patch_embeds" in batch else 0)
+    if positions is None:
+        positions = jnp.arange(S_total)
+    h = _embed_input(params, cfg, batch, positions)
+    h = constrain(h, "batch", None, None)
+    kind = _mix_kind(cfg)
+    new_caches: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    with_cache = caches is not None
+    if cfg.family == "hybrid":
+        def group_body(carry, xs):
+            xc, auxc = carry
+            gp = xs[0] if with_cache else xs
+            gc = xs[1] if with_cache else {"rec1": None, "rec2": None,
+                                           "attn": None}
+            ncs = {}
+            xc, ncs["rec1"], a1 = block_apply(
+                gp["rec1"], xc, cfg, "rglru", positions, layout,
+                cache=gc["rec1"], cache_pos=cache_pos, decode=decode)
+            xc, ncs["rec2"], a2 = block_apply(
+                gp["rec2"], xc, cfg, "rglru", positions, layout,
+                cache=gc["rec2"], cache_pos=cache_pos, decode=decode)
+            xc, ncs["attn"], a3 = block_apply(
+                gp["attn"], xc, cfg, "local_attn", positions, layout,
+                cache=gc["attn"], cache_pos=cache_pos, decode=decode)
+            return (xc, auxc + a1 + a2 + a3), (ncs if with_cache else None)
+        gb = _remat(cfg, group_body) if remat else group_body
+        xs = ((params["groups"], caches["groups"]) if with_cache
+              else params["groups"])
+        (h, aux_total), gc = jax.lax.scan(
+            gb, (h, aux_total), xs)
+        if with_cache:
+            new_caches["groups"] = gc
+        if "tail" in params:
+            h, aux2, tc = _scan_segment(
+                params["tail"], h, cfg, "rglru", positions, layout, remat,
+                cache_stack=caches["tail"] if with_cache else None,
+                cache_pos=cache_pos, decode=decode, with_cache=with_cache)
+            aux_total = aux_total + aux2
+            if with_cache:
+                new_caches["tail"] = tc
+    elif cfg.moe is not None:
+        h, a1, dc = _scan_segment(
+            params["dense_blocks"], h, cfg, kind, positions, layout, remat,
+            cache_stack=caches["dense_blocks"] if with_cache else None,
+            cache_pos=cache_pos, decode=decode, with_cache=with_cache)
+        h, a2, mc = _scan_segment(
+            params["blocks"], h, cfg, kind, positions, layout, remat,
+            cache_stack=caches["blocks"] if with_cache else None,
+            cache_pos=cache_pos, decode=decode, with_cache=with_cache)
+        aux_total = a1 + a2
+        if with_cache:
+            new_caches = {"dense_blocks": dc, "blocks": mc}
+    else:
+        h, aux_total, bc = _scan_segment(
+            params["blocks"], h, cfg, kind, positions, layout, remat,
+            cache_stack=caches["blocks"] if with_cache else None,
+            cache_pos=cache_pos, decode=decode, with_cache=with_cache)
+        if with_cache:
+            new_caches = {"blocks": bc}
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    return h, aux_total, (new_caches if with_cache else None)
+
+
+# ------------------------------------------------------------------ losses
+def loss_fn(params, cfg, batch, layout="heads"):
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    h, aux, _ = backbone(params, cfg, batch, layout=layout)
+    n_patch = h.shape[1] - S_text
+    h_text = h[:, n_patch:] if n_patch else h
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones((B, S_text), jnp.float32).at[:, -1].set(0.0)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"]
+    loss = chunked_ce_loss(params["embed"], h_text, labels, mask, cfg)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg, batch_size, max_len, dtype=jnp.bfloat16):
+    kind = _mix_kind(cfg)
+
+    def stack(fn, n):
+        leaves = fn()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            leaves)
+    if cfg.family == "hybrid":
+        g = len(cfg.rglru.pattern)
+        n_groups = cfg.n_layers // g
+        n_tail = cfg.n_layers - n_groups * g
+        group = {
+            "rec1": rglru_mod.rglru_cache_shape(cfg, batch_size, dtype),
+            "rec2": rglru_mod.rglru_cache_shape(cfg, batch_size, dtype),
+            "attn": attn.gqa_cache_shape(cfg, batch_size, max_len,
+                                         window=cfg.rglru.window,
+                                         dtype=dtype),
+        }
+        out = {"groups": stack(lambda: group, n_groups)}
+        if n_tail:
+            out["tail"] = stack(
+                lambda: rglru_mod.rglru_cache_shape(cfg, batch_size, dtype),
+                n_tail)
+        return out
+    if cfg.family == "ssm":
+        return {"blocks": stack(
+            lambda: ssm_mod.ssm_cache_shape(cfg, batch_size, dtype),
+            cfg.n_layers)}
+    if kind == "mla":
+        layer = lambda: attn.mla_cache_shape(cfg, batch_size, max_len, dtype)
+    else:
+        layer = lambda: attn.gqa_cache_shape(cfg, batch_size, max_len,
+                                             dtype=dtype)
+    if cfg.moe is not None:
+        kd = cfg.moe.first_k_dense
+        return {"dense_blocks": stack(layer, kd),
+                "blocks": stack(layer, cfg.n_layers - kd)}
+    return {"blocks": stack(layer, cfg.n_layers)}
+
+
+def _pad_cache_to(cache_leaf, max_len, seq_axis_hint=1):
+    return cache_leaf
+
+
+def prefill(params, cfg, batch, layout="heads"):
+    """Full-sequence forward; returns (last_token_logits, caches). Cache seq
+    dims equal the prefill length (extend before decoding further)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    caches = init_cache(cfg, B, S)
+    h, _, new_caches = backbone(params, cfg, batch, caches=caches,
+                                layout=layout, remat=False)
+    logits = unembed(params["embed"], h[:, -1], cfg)
+    return logits.astype(jnp.float32), new_caches
+
+
+def decode_step(params, cfg, token, cache, cache_pos, layout="heads"):
+    """token (B,1) int32; cache from init_cache(cfg, B, max_len); cache_pos
+    scalar int32 = number of tokens already in the cache."""
+    positions = cache_pos + jnp.arange(1)
+    batch = {"tokens": token}
+    h, _, new_caches = backbone(params, cfg, batch, positions=positions,
+                                caches=cache, cache_pos=cache_pos,
+                                decode=True, layout=layout, remat=False)
+    logits = unembed(params["embed"], h[:, -1], cfg)
+    return logits.astype(jnp.float32), new_caches

@@ -1,0 +1,300 @@
+"""Mixture-of-Experts with HiAER-style address-event routing.
+
+The paper's core routing insight — spikes are *events* multicast through a
+hierarchy (NoC within an FPGA, FireFly within a server, Ethernet between
+servers), with dense local traffic kept on fast links — maps directly onto
+MoE token dispatch: a token choosing top-k experts is an address-event; the
+expert-parallel all-to-all is the multicast fabric.
+
+Layout: experts are sharded over the 'model' axis (= cores within an FPGA).
+Tokens are sharded over (batch-axes, 'model'): each device routes its own
+token shard, packs per-expert capacity buffers ordered by owner device, and
+exchanges them with a single all_to_all over 'model' (phase 1 = pointer
+lookup, phase 2 = payload delivery — the paper's two-phase routing).
+
+``hierarchical_a2a`` (beyond-paper optimization, §Perf): on the multi-pod
+mesh the exchange is split into an intra-pod all_to_all followed by a
+cross-pod exchange of aggregated buffers, mirroring HiAER's level-by-level
+multicast so the slow (DCN) hop carries each payload once.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import batch_axes, get_mesh, tp_axis
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg, dtype):
+    mo, d = cfg.moe, cfg.d_model
+    E, F = mo.n_routed, mo.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_in": dense_init(ks[1], (E, d, F), dtype, fan_in=d),
+        "w_gate": dense_init(ks[2], (E, d, F), dtype, fan_in=d),
+        "w_out": dense_init(ks[3], (E, F, d), dtype, fan_in=F),
+    }
+    if mo.n_shared:
+        Fs = mo.n_shared * F
+        p["shared"] = {
+            "w_in": dense_init(ks[4], (d, Fs), dtype),
+            "w_gate": dense_init(ks[5], (d, Fs), dtype),
+            "w_out": dense_init(ks[6], (Fs, d), dtype),
+        }
+    return p
+
+
+def _act(cfg, g, h):
+    if cfg.act == "geglu":
+        return jax.nn.gelu(g) * h
+    return jax.nn.silu(g) * h
+
+
+def _route(x_tok, router, cfg):
+    """x_tok (T,d) -> top-k weights/ids + aux load-balance loss."""
+    mo = cfg.moe
+    logits = jnp.einsum("td,de->te", x_tok.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, mo.top_k)            # (T,k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch style): E * sum_e f_e * p_e
+    E = mo.n_routed
+    f = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(f.sum(), 1.0)
+    pbar = probs.mean(0)
+    aux = E * jnp.sum(f * pbar) * mo.router_aux_weight
+    return w, ids, aux
+
+
+def _capacity(T, cfg):
+    mo = cfg.moe
+    c = int(math.ceil(T * mo.top_k / mo.n_routed * mo.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _pack(x_tok, ids, w, C, E):
+    """Scatter tokens into (E*C, d) capacity buffers; returns buffers and the
+    (slot, keep) addressing needed to unpack. Event-packing = phase 1."""
+    T, d = x_tok.shape
+    k = ids.shape[1]
+    flat_e = ids.reshape(-1)                            # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot           # position within expert
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)
+    buf = jnp.zeros((E * C + 1, d), x_tok.dtype)
+    src = jnp.repeat(x_tok, k, axis=0)                  # token per (t,k) event
+    buf = buf.at[slot].add(src)
+    return buf[:-1], slot, keep
+
+
+def _unpack(buf, slot, keep, w, T, k):
+    buf = jnp.concatenate([buf, jnp.zeros_like(buf[:1])], axis=0)
+    y = buf[slot]                                       # (T*k, d)
+    y = y * (keep[:, None] * w.reshape(-1)[:, None]).astype(y.dtype)
+    return y.reshape(T, k, -1).sum(1)
+
+
+def _expert_ffn(p, cfg, toks):
+    """toks (E_loc, N, d) -> (E_loc, N, d), gated FFN per local expert."""
+    h = jnp.einsum("end,edf->enf", toks, p["w_in"])
+    g = jnp.einsum("end,edf->enf", toks, p["w_gate"])
+    h = _act(cfg, g, h)
+    return jnp.einsum("enf,efd->end", h, p["w_out"])
+
+
+def moe_apply(p, x, cfg, decode=False):
+    """x (B,S,d) -> (y, aux). Sharded dispatch via shard_map (train/prefill);
+    replicated dispatch + psum for single-token decode."""
+    mesh = get_mesh()
+    tp = mesh.shape[tp_axis()]
+    mo = cfg.moe
+    E = mo.n_routed
+    E_loc = E // tp
+    baxes = batch_axes()
+
+    expert_specs = {"router": P(), "w_in": P(tp_axis()), "w_gate": P(tp_axis()),
+                    "w_out": P(tp_axis())}
+    if "shared" in p:
+        expert_specs["shared"] = {k: P() for k in p["shared"]}
+
+    if (decode or x.shape[1] == 1) and cfg.fsdp and tp > 1 \
+            and "data" in mesh.axis_names:
+        return _decode_moe_2d(p, x, cfg)
+    if decode or x.shape[1] == 1 or tp == 1:
+        x_spec = P(baxes, None, None)
+        out_specs = (P(baxes, None, None), P())
+
+        def f(pp, xx):
+            B, S, d = xx.shape
+            xt = xx.reshape(B * S, d)
+            w, ids, aux = _route(xt, pp["router"], cfg)
+            C = _capacity(B * S, cfg)
+            buf, slot, keep = _pack(xt, ids, w, C, E)
+            idx = jax.lax.axis_index(tp_axis())
+            mine = jax.lax.dynamic_slice_in_dim(
+                buf.reshape(E, C, d), idx * E_loc, E_loc, axis=0)
+            out = _expert_ffn(pp, cfg, mine)
+            full = jnp.zeros((E, C, d), out.dtype)
+            full = jax.lax.dynamic_update_slice_in_dim(full, out, idx * E_loc,
+                                                       axis=0)
+            full = jax.lax.psum(full, tp_axis())
+            y = _unpack(full.reshape(E * C, d), slot, keep, w, B * S,
+                        mo.top_k)
+            y = y.reshape(B, S, d)
+            if "shared" in pp:
+                y = y + _shared_ffn(pp["shared"], cfg, xx)
+            aux = jax.lax.pmean(aux, baxes + (tp_axis(),))
+            return y, aux
+    else:
+        x_spec = P(baxes, tp_axis(), None)
+        out_specs = (P(baxes, tp_axis(), None), P())
+
+        def f(pp, xx):
+            B, S, d = xx.shape
+            T = B * S
+            xt = xx.reshape(T, d)
+            w, ids, aux = _route(xt, pp["router"], cfg)
+            C = _capacity(T, cfg)
+            buf, slot, keep = _pack(xt, ids, w, C, E)   # (E*C, d) peer-ordered
+            if mo.hierarchical_a2a and "pod" in mesh.axis_names:
+                ex = _hiaer_exchange(buf, tp, E_loc, C, d)
+            else:
+                ex = jax.lax.all_to_all(
+                    buf.reshape(tp, E_loc * C, d), tp_axis(), 0, 0,
+                    tiled=False)
+            # ex: (tp, E_loc*C, d) -- axis0 = source peer
+            toks = ex.reshape(tp, E_loc, C, d).transpose(1, 0, 2, 3) \
+                     .reshape(E_loc, tp * C, d)
+            out = _expert_ffn(pp, cfg, toks)
+            back = out.reshape(E_loc, tp, C, d).transpose(1, 0, 2, 3)
+            back = jax.lax.all_to_all(back.reshape(tp, E_loc * C, d),
+                                      tp_axis(), 0, 0, tiled=False)
+            y = _unpack(back.reshape(E * C, d), slot, keep, w, T, mo.top_k)
+            y = y.reshape(B, S, d)
+            if "shared" in pp:
+                y = y + _shared_ffn(pp["shared"], cfg, xx)
+            aux = jax.lax.pmean(aux, baxes + (tp_axis(),))
+            return y, aux
+
+    fn = shard_map(f, mesh=mesh, in_specs=(expert_specs, x_spec),
+                   out_specs=out_specs, check_vma=False)
+    return fn(p, x)
+
+
+def _decode_moe_2d(p, x, cfg):
+    """Decode-path MoE against 2D-sharded experts (E over 'model', d over
+    'data' — the FSDP layout of 236B-scale MoE). §Perf hillclimb #3.
+
+    Baseline GSPMD gathers each layer's full expert weights over 'data'
+    (~472 MB/layer for deepseek-v2) to serve a handful of tokens. Here the
+    WEIGHTS never move: the few routed tokens are all-gathered to their
+    expert's (model-row, data-col) shards, each shard contracts its own
+    d-slice, and pre-activation partials are psum'd over 'data' (exact for
+    the gated nonlinearity). Token traffic is ~10 MB/layer — the paper's
+    own principle that events (tokens), not synapse tables (weights),
+    should traverse the interconnect."""
+    mesh = get_mesh()
+    tp = mesh.shape[tp_axis()]
+    dp = mesh.shape["data"]
+    mo = cfg.moe
+    E = mo.n_routed
+    E_loc = E // tp
+    baxes = batch_axes()
+
+    especs = {"router": P(),
+              "w_in": P(tp_axis(), "data", None),
+              "w_gate": P(tp_axis(), "data", None),
+              "w_out": P(tp_axis(), None, "data")}
+    if "shared" in p:
+        especs["shared"] = {"w_in": P("data", tp_axis()),
+                            "w_gate": P("data", tp_axis()),
+                            "w_out": P(tp_axis(), "data")}
+    x_spec = P(baxes, None, None)
+
+    def f(pp, xx):
+        B, S, d = xx.shape
+        T = B * S
+        d_loc = d // dp
+        i_d = jax.lax.axis_index("data")
+        i_m = jax.lax.axis_index(tp_axis())
+        xt = xx.reshape(T, d)
+        w, ids, aux = _route(xt, pp["router"], cfg)
+        C = _capacity(T, cfg)
+        buf, slot, keep = _pack(xt, ids, w, C, E)      # (E*C, d) local toks
+        mine = jax.lax.dynamic_slice_in_dim(
+            buf.reshape(E, C, d), i_m * E_loc, E_loc, axis=0)
+        # gather this expert-row's tokens from every data shard
+        toks = jax.lax.all_gather(mine, "data", axis=1, tiled=True)
+        # contract own d-slice; psum partial pre-activations (exact)
+        x_d = jax.lax.dynamic_slice_in_dim(toks, i_d * d_loc, d_loc, axis=2)
+        g = jnp.einsum("ecd,edf->ecf", x_d, pp["w_gate"])
+        h = jnp.einsum("ecd,edf->ecf", x_d, pp["w_in"])
+        g, h = jax.lax.psum((g, h), "data")
+        act = _act(cfg, g, h)
+        out_d = jnp.einsum("ecf,efd->ecd", act, pp["w_out"])  # d-sliced out
+        out = jax.lax.all_gather(out_d, "data", axis=2, tiled=True)
+        own = jax.lax.dynamic_slice_in_dim(out, i_d * C, C, axis=1)
+        full = jnp.zeros((E, C, d), own.dtype)
+        full = jax.lax.dynamic_update_slice_in_dim(full, own, i_m * E_loc,
+                                                   axis=0)
+        full = jax.lax.psum(full, tp_axis())
+        y = _unpack(full.reshape(E * C, d), slot, keep, w, T, mo.top_k)
+        y = y.reshape(B, S, d)
+        if "shared" in pp:
+            # shared experts 2D-sharded (d over 'data', ff over 'model'):
+            # psum pre-activation over 'data', psum output over 'model'
+            sp = pp["shared"]
+            xs_d = jax.lax.dynamic_slice_in_dim(xx, i_d * d_loc, d_loc,
+                                                axis=2)
+            gs = jnp.einsum("bsd,df->bsf", xs_d, sp["w_gate"])
+            hs = jnp.einsum("bsd,df->bsf", xs_d, sp["w_in"])
+            gs, hs = jax.lax.psum((gs, hs), "data")
+            ys_d = jnp.einsum("bsf,fd->bsd", _act(cfg, gs, hs),
+                              sp["w_out"])
+            ys_d = jax.lax.psum(ys_d, tp_axis())
+            ys = jax.lax.all_gather(ys_d, "data", axis=2, tiled=True)
+            y = y + ys
+        aux = jax.lax.pmean(aux, baxes + (tp_axis(),))
+        return y, aux
+
+    fn = shard_map(f, mesh=mesh, in_specs=(especs, x_spec),
+                   out_specs=(P(baxes, None, None), P()), check_vma=False)
+    return fn(p, x)
+
+
+def _shared_ffn(sp, cfg, x):
+    h = jnp.einsum("bsd,df->bsf", x, sp["w_in"])
+    g = jnp.einsum("bsd,df->bsf", x, sp["w_gate"])
+    return jnp.einsum("bsf,fd->bsd", _act(cfg, g, h), sp["w_out"])
+
+
+def _hiaer_exchange(buf, tp, E_loc, C, d):
+    """Hierarchical (HiAER) dispatch on the multi-pod mesh.
+
+    Design choice mirroring the paper's level-by-level multicast: expert
+    weights are REPLICATED per pod (specs never shard experts over 'pod'),
+    so token events all_to_all only over the fast intra-pod 'model' axis
+    (ICI ≈ NoC/FireFly) and NO token ever crosses the DCN (≈ Ethernet) —
+    the slow hop carries only the once-per-step gradient reduction. This is
+    the "keep event traffic on fast local links" principle; the function is
+    therefore the same intra-pod exchange, kept as an explicit seam for
+    pod-sharded-expert variants (which would add a cross-pod hop here)."""
+    ex = jax.lax.all_to_all(buf.reshape(tp, E_loc * C, d), tp_axis(), 0, 0,
+                            tiled=False)
+    return ex
+
+
+def moe_flops(cfg, n_tokens: int) -> int:
+    """Active FLOPs for roofline (§Roofline MODEL_FLOPS)."""
+    mo = cfg.moe
+    per_tok = (mo.top_k + mo.n_shared) * 3 * 2 * cfg.d_model * mo.d_ff_expert
+    return per_tok * n_tokens

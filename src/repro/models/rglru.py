@@ -1,0 +1,98 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU gated linear
+recurrence. Train/prefill use an associative scan over the sequence; decode
+carries (conv_state, h_state) — O(1) per token, so recurrentgemma-2b is
+long_500k-eligible (together with its 2048-window local attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.layers import dense_init
+
+_C = 8.0   # Griffin's fixed recurrence sharpness
+
+
+def _gate_blocks(cfg):
+    W = cfg.rglru.lru_width
+    bw = min(cfg.rglru.gate_block, W)
+    assert W % bw == 0, (W, bw)
+    return W // bw, bw
+
+
+def rglru_init(key, cfg, dtype):
+    d, W = cfg.d_model, cfg.rglru.lru_width
+    K = cfg.rglru.d_conv
+    nb, bw = _gate_blocks(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d, W), dtype),
+        "w_y": dense_init(ks[1], (d, W), dtype),       # gate branch
+        "conv_w": dense_init(ks[2], (K, W), dtype, fan_in=K),
+        "conv_b": jnp.zeros((W,), dtype),
+        # Griffin input/recurrence gates are BLOCK-DIAGONAL (width 256):
+        # faithful to the arch and collective-free under W-sharding (tiny
+        # replicated weights instead of (W,W) sharded contractions)
+        "w_i": dense_init(ks[3], (nb, bw, bw), dtype, fan_in=bw),
+        "w_r": dense_init(ks[4], (nb, bw, bw), dtype, fan_in=bw),
+        "lam": jnp.full((W,), 2.0, jnp.float32),       # Lambda param
+        "w_out": dense_init(ks[5], (W, d), dtype),
+    }
+
+
+def _conv(w, b, x, state=None):
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state, x], axis=1)
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return y, (pad[:, -(K - 1):] if K > 1 else None)
+
+
+def rglru_apply(p, x, cfg, cache=None):
+    """x (B,S,d) -> (y, new_cache). cache = {'conv', 'h'} for decode."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u = constrain(u, "batch", None, "model")
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _conv(p["conv_w"], p["conv_b"], u, conv_state)
+    uf = u.astype(jnp.float32)
+    nb, bw = _gate_blocks(cfg)
+    ub = uf.reshape(*uf.shape[:-1], nb, bw)
+    r = jax.nn.sigmoid(jnp.einsum("bshw,hwv->bshv", ub,
+                                  p["w_r"].astype(jnp.float32)))
+    r = r.reshape(uf.shape)
+    i = jax.nn.sigmoid(jnp.einsum("bshw,hwv->bshv", ub,
+                                  p["w_i"].astype(jnp.float32)))
+    i = i.reshape(uf.shape)
+    log_a = -_C * r * jax.nn.softplus(p["lam"])        # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = i * uf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if cache is not None and S == 1:
+        h = cache["h"].astype(jnp.float32)
+        h = a[:, 0] * h + b[:, 0]
+        y = h[:, None]
+        new_cache = {"conv": new_conv, "h": h.astype(cache["h"].dtype)}
+    else:
+        # associative linear recurrence h_t = a_t h_{t-1} + b_t
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        aa, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+        if cache is not None:   # prefill
+            new_cache = {"conv": new_conv, "h": y[:, -1].astype(x.dtype)}
+    y = y.astype(x.dtype) * gate
+    y = constrain(y, "batch", None, "model")
+    return jnp.einsum("bsw,wd->bsd", y, p["w_out"]), new_cache
+
+
+def rglru_cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    W, K = cfg.rglru.lru_width, cfg.rglru.d_conv
+    return {"conv": jnp.zeros((batch, K - 1, W), dtype),
+            "h": jnp.zeros((batch, W), dtype)}

@@ -1,0 +1,140 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan formulation.
+
+Train/prefill run the blocked SSD algorithm (intra-chunk quadratic +
+inter-chunk state recurrence, chunk=cfg.ssm.chunk_size); decode runs the O(1)
+recurrent update against carried (conv_state, ssd_state) — which is why
+mamba2-780m is long_500k-eligible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.layers import dense_init, apply_norm
+
+
+def ssm_init(key, cfg, dtype):
+    s, d = cfg.ssm, cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.d_state
+    conv_dim = d_in + 2 * N            # x_ssm + B + C (single group)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype,
+                             fan_in=s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((d_in,), dtype)},
+        "w_out": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split_in(cfg, proj):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    N = s.d_state
+    H = d_in // s.head_dim
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xbc, dt, d_in, N, H
+
+
+def _causal_conv(w, b, x, state=None):
+    """Depthwise causal conv, width K. x (B,S,C). state (B,K-1,C) for decode.
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state, x], axis=1)
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = pad[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(xh, a, Bm, Cm, chunk, init_state=None):
+    """Blocked SSD. xh (B,S,H,P) inputs (dt-scaled); a (B,S,H) decay factors
+    in (0,1); Bm/Cm (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    r = lambda t: t.reshape(B, nc, chunk, *t.shape[2:])
+    xc, ac, Bc, Cc = r(xh), r(a), r(Bm), r(Cm)
+    la = jnp.log(jnp.maximum(ac.astype(jnp.float32), 1e-20))   # (B,nc,c,H)
+    cum = jnp.cumsum(la, axis=2)                               # within-chunk
+    # intra-chunk (quadratic in chunk): y_t = sum_{s<=t} C_t.B_s prod a
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    M = cb[..., None] * decay                                  # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xc.astype(jnp.float32))
+    # chunk-final states: sum_s prod_{s<u<=c} a * B_s x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                    # (B,nc,c,H)
+    st = jnp.einsum("bcsh,bcsn,bcshp->bchpn", tail, Bc.astype(jnp.float32),
+                    xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st_c, dec_c = inp
+        h_new = h * dec_c[:, :, None, None] + st_c
+        return h_new, h
+    h0 = (jnp.zeros((B, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    hT, h_prev = jax.lax.scan(scan_fn, h0,
+                              (st.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                             # (B,nc,H,P,N)
+    # inter-chunk contribution: C_t . (decay-to-t * h_prev)
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp", jnp.exp(cum), Cc.astype(jnp.float32),
+                         h_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, hT
+
+
+def ssm_apply(p, x, cfg, cache=None):
+    """x (B,S,d). cache = {'conv': (B,K-1,C), 'ssd': (B,H,P,N)} for decode."""
+    s = cfg.ssm
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt, d_in, N, H = _split_in(cfg, proj)
+    Pd = s.head_dim
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(p["conv_w"], p["conv_b"], xbc, conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["a_log"]) * dt)                        # (B,S,H)
+    xh = xs.reshape(*xs.shape[:2], H, Pd)
+    xh = constrain(xh, "batch", None, "model", None)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    if cache is not None and x.shape[1] == 1:
+        # recurrent decode step: h = a h + B x_dt ; y = C.h
+        h = cache["ssd"].astype(jnp.float32)                      # (B,H,P,N)
+        h = h * a[:, 0, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt[:, 0], Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "ssd": h.astype(cache["ssd"].dtype)}
+    else:
+        y, hT = ssd_chunked(xdt, a, Bm, Cm, min(s.chunk_size, x.shape[1]))
+        new_cache = None
+        if cache is not None:   # prefill
+            new_cache = {"conv": new_conv, "ssd": hT.astype(x.dtype)}
+    y = y + xh.astype(jnp.float32) * p["d_skip"][..., None]
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(p["out_norm"], y)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), new_cache
+
+
+def ssm_cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+            "ssd": jnp.zeros((batch, H, s.head_dim, s.d_state), dtype)}

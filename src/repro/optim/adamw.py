@@ -1,0 +1,85 @@
+"""AdamW (decoupled weight decay) + global-norm clipping + cosine schedule.
+
+Written from scratch (no optax in this environment). Moment dtype is
+configurable per arch (bf16 for llama3-405b / deepseek-v2 to fit HBM —
+see EXPERIMENTS.md §Dry-run memory table); math is performed in fp32 and
+cast back on store.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_schedule(oc: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = oc.lr * step / max(oc.warmup_steps, 1)
+    frac = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * oc.lr * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def adamw_init(params, oc: AdamWConfig):
+    dt = jnp.dtype(oc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                     grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(params, grads, state, oc: AdamWConfig):
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    step = state["step"] + 1
+    lr = cosine_schedule(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(oc.moment_dtype)
+
+    def upd(p, g, m, v):
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay \
+            * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mf.astype(mdt), vf.astype(mdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

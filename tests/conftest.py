@@ -1,0 +1,6 @@
+import warnings
+
+import pytest
+
+warnings.filterwarnings("ignore", category=UserWarning)
+warnings.filterwarnings("ignore", category=DeprecationWarning)

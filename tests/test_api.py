@@ -1,0 +1,107 @@
+"""CRI_network API (A.1) + simulator/engine parity — the paper's 'identical
+local-simulator and accelerator results' claim."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import ANN_neuron, CRI_network, LIF_neuron
+
+
+def example_network(backend, seed=7):
+    lif = LIF_neuron(threshold=3, nu=-32, lam=60)
+    axons = {"alpha": [("a", 3), ("c", 2)], "beta": [("b", 3)]}
+    neurons = {"a": ([("b", 1), ("a", 2)], lif),
+               "b": ([], lif),
+               "c": ([], LIF_neuron(threshold=4, nu=-32, lam=2)),
+               "d": ([("c", 1)], ANN_neuron(threshold=5, nu=0))}
+    return CRI_network(axons=axons, neurons=neurons, outputs=["a", "b"],
+                       backend=backend, seed=seed)
+
+
+def test_a1_example_runs_and_monitors_outputs():
+    net = example_network("engine")
+    fired = net.step(["alpha", "beta"])
+    assert isinstance(fired, list)
+    fired, pots = net.step(["alpha"], membranePotential=True)
+    assert len(pots) == 4 and all(isinstance(v, int) for _, v in pots)
+
+
+def test_simulator_engine_parity_50_steps():
+    random.seed(3)
+    seq = [random.sample(["alpha", "beta"], k=random.randint(0, 2))
+           for _ in range(50)]
+    sim = example_network("simulator")
+    eng = example_network("engine")
+    for inp in seq:
+        assert sim.step(inp) == eng.step(inp)
+    assert sim.read_membrane("a", "b", "c", "d") == \
+        eng.read_membrane("a", "b", "c", "d")
+
+
+def test_read_write_synapse():
+    net = example_network("engine")
+    w = net.read_synapse("a", "b")
+    assert w == 1
+    net.write_synapse("a", "b", w + 1)       # the A.1 increment example
+    assert net.read_synapse("a", "b") == w + 1
+    assert net.read_synapse("alpha", "c") == 2
+    with pytest.raises(KeyError):
+        net.read_synapse("alpha", "b")
+
+
+def test_unknown_output_rejected():
+    with pytest.raises(KeyError):
+        CRI_network(axons={}, neurons={"a": ([], ANN_neuron(threshold=1))},
+                    outputs=["zz"])
+
+
+@st.composite
+def random_network(draw):
+    n_ax = draw(st.integers(1, 6))
+    n_nr = draw(st.integers(2, 24))
+    nrs = [f"n{i}" for i in range(n_nr)]
+    axons = {}
+    for i in range(n_ax):
+        fanout = draw(st.lists(st.tuples(st.sampled_from(nrs),
+                                         st.integers(-50, 50)),
+                               max_size=6, unique_by=lambda t: t[0]))
+        axons[f"a{i}"] = fanout
+    neurons = {}
+    for k in nrs:
+        fanout = draw(st.lists(st.tuples(st.sampled_from(nrs),
+                                         st.integers(-50, 50)),
+                               max_size=5, unique_by=lambda t: t[0]))
+        if draw(st.booleans()):
+            model = LIF_neuron(threshold=draw(st.integers(0, 40)),
+                               nu=draw(st.sampled_from([-32, -20, 0, 2])),
+                               lam=draw(st.integers(0, 63)))
+        else:
+            model = ANN_neuron(threshold=draw(st.integers(0, 40)),
+                               nu=draw(st.sampled_from([-32, 1])))
+        neurons[k] = (fanout, model)
+    outputs = draw(st.lists(st.sampled_from(nrs), min_size=1, max_size=4,
+                            unique=True))
+    return axons, neurons, outputs
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_network(), st.integers(0, 10_000))
+def test_parity_property_random_networks(netdef, seed):
+    """Engine (HBM routing table) and simulator (dense matrices) are
+    bit-identical on arbitrary topologies — the system invariant."""
+    axons, neurons, outputs = netdef
+    sim = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="simulator", seed=seed)
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=seed)
+    rng = random.Random(seed)
+    ax_keys = list(axons)
+    for _ in range(12):
+        inp = rng.sample(ax_keys, k=rng.randint(0, len(ax_keys))) \
+            if ax_keys else []
+        f1, p1 = sim.step(inp, membranePotential=True)
+        f2, p2 = eng.step(inp, membranePotential=True)
+        assert f1 == f2
+        assert p1 == p2

@@ -1,0 +1,78 @@
+"""A.2 conversion pipeline: QAT -> int16 quantize -> adjacency network;
+HiAER membrane potentials must equal the integer reference exactly
+(Table 2's Software Acc == HiAER Acc)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.convert import (LayerSpec, QATModel, apply_quantized,
+                                infer_image, quantize, to_network, train_qat)
+from repro.data.synthetic import digits
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, y = digits(700, shape=(12, 12), seed=3)
+    return X, y, X.reshape(-1, 1, 12, 12).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def mlp(data):
+    X, y, Xf = data
+    model = QATModel(input_shape=(1, 12, 12),
+                     layers=[LayerSpec("dense", out_features=24)],
+                     n_classes=10)
+    params = train_qat(model, Xf[:500], y[:500], epochs=4)
+    return model, params
+
+
+def test_qat_learns(data, mlp):
+    X, y, Xf = data
+    model, params = mlp
+    import jax
+    logits = np.asarray(model.apply(params, jnp.asarray(Xf[500:])))
+    acc = (logits.argmax(1) == y[500:]).mean()
+    assert acc > 0.5, acc                     # 10 classes, chance = 0.1
+
+
+def test_quantization_preserves_predictions(data, mlp):
+    X, y, Xf = data
+    model, params = mlp
+    qp, bits = quantize(params)
+    assert 1 <= bits <= 14
+    ref_int = apply_quantized(model, qp, Xf[500:600])
+    logits = np.asarray(model.apply(params, jnp.asarray(Xf[500:600]),
+                                    quantized=False))
+    agree = (ref_int.argmax(1) == logits.argmax(1)).mean()
+    assert agree > 0.9, agree
+
+
+@pytest.mark.parametrize("backend", ["simulator", "engine"])
+def test_converted_network_is_bit_exact(data, mlp, backend):
+    X, y, Xf = data
+    model, params = mlp
+    qp, _ = quantize(params)
+    ref_int = apply_quantized(model, qp, Xf[600:620])
+    net, out_keys = to_network(model, qp, backend=backend)
+    for i in range(20):
+        _, pots = infer_image(net, X[600 + i], model, out_keys)
+        np.testing.assert_array_equal(np.asarray(pots), ref_int[i])
+
+
+def test_conv_network_bit_exact(data):
+    X, y, Xf = data
+    model = QATModel(input_shape=(1, 12, 12),
+                     layers=[LayerSpec("conv", channels=3, kernel=5,
+                                       stride=2),
+                             LayerSpec("dense", out_features=16)],
+                     n_classes=10)
+    params = train_qat(model, Xf[:400], y[:400], epochs=2)
+    qp, _ = quantize(params)
+    ref_int = apply_quantized(model, qp, Xf[600:608])
+    net, out_keys = to_network(model, qp, backend="engine")
+    for i in range(8):
+        _, pots = infer_image(net, X[600 + i], model, out_keys)
+        np.testing.assert_array_equal(np.asarray(pots), ref_int[i])
+    # energy/latency accounting active (Table 2 instrumentation)
+    d = net.counter.as_dict()
+    assert d["total_accesses"] > 0 and d["energy_uJ"] > 0

@@ -1,0 +1,68 @@
+"""Energy/latency model: counting, calibration arithmetic, and the Fig. 10
+linear-scaling reproduction (energy/latency linear in neuron count)."""
+import numpy as np
+
+from repro.core.costmodel import (E_ACCESS_PJ, NS_PER_ACCESS, AccessCounter)
+from repro.core.api import ANN_neuron, CRI_network
+
+
+def test_counter_arithmetic():
+    c = AccessCounter(pointer_reads=100, row_reads=900, timesteps=10)
+    assert c.total_accesses == 1000
+    assert abs(c.energy_uJ() - 1000 * E_ACCESS_PJ * 1e-6) < 1e-12
+    assert c.latency_us() > 1000 * NS_PER_ACCESS * 1e-3
+
+
+def _mlp_net(n_hidden, seed=0):
+    rng = np.random.default_rng(seed)
+    n_in = 64
+    axons = {f"x{i}": [(f"h{j}", int(rng.integers(1, 9)))
+                       for j in range(n_hidden)] for i in range(n_in)}
+    neurons = {f"h{j}": ([(f"o{k}", int(rng.integers(1, 9)))
+                          for k in range(10)],
+                         ANN_neuron(threshold=int(n_in * 2)))
+               for j in range(n_hidden)}
+    for k in range(10):
+        neurons[f"o{k}"] = ([], ANN_neuron(threshold=2 ** 30))
+    return CRI_network(axons=axons, neurons=neurons,
+                       outputs=[f"o{k}" for k in range(10)],
+                       backend="engine", seed=seed), n_in
+
+
+def test_fig10_energy_latency_linear_in_neurons():
+    """Fig. 10: per-inference HBM energy/latency grows linearly with the
+    number of neurons (R^2 ~ 0.99 in the paper)."""
+    sizes = [16, 32, 64, 128, 256]
+    es, ls = [], []
+    rng = np.random.default_rng(1)
+    for nh in sizes:
+        net, n_in = _mlp_net(nh)
+        net.counter.reset()
+        for _ in range(5):                   # 5 'inferences', 2 steps each
+            active = [f"x{i}" for i in
+                      rng.choice(n_in, n_in // 4, replace=False)]
+            net.reset()
+            net.step(active)
+            net.step([])
+        es.append(net.counter.energy_uJ() / 5)
+        ls.append(net.counter.latency_us() / 5)
+    x = np.array(sizes, float)
+    for ys in (np.array(es), np.array(ls)):
+        A = np.vstack([x, np.ones_like(x)]).T
+        coef, res, *_ = np.linalg.lstsq(A, ys, rcond=None)
+        ss_tot = ((ys - ys.mean()) ** 2).sum()
+        r2 = 1 - (res[0] / ss_tot if len(res) else 0.0)
+        assert coef[0] > 0                   # cost grows with neurons
+        assert r2 > 0.95, r2                 # strongly linear (paper: 0.99)
+
+
+def test_event_driven_sparsity_saves_energy():
+    """Fewer active axons -> fewer HBM accesses (the event-driven claim)."""
+    net, n_in = _mlp_net(64)
+    net.reset(); net.counter.reset()
+    net.step([f"x{i}" for i in range(4)]); net.step([])
+    low = net.counter.total_accesses
+    net.reset(); net.counter.reset()
+    net.step([f"x{i}" for i in range(n_in)]); net.step([])
+    high = net.counter.total_accesses
+    assert low < high

@@ -1,0 +1,32 @@
+"""Integration: one real dry-run cell compiles in a fresh subprocess with
+512 virtual devices (the XLA_FLAGS isolation the dry-run requires), and the
+artifact carries roofline-usable analysis."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("mamba2_780m", "decode_32k", "multi"),
+])
+def test_dryrun_cell_subprocess(tmp_path, arch, shape, mesh):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path),
+         "--force"],
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=500, cwd=str(ROOT))
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    arts = list(tmp_path.glob("*.json"))
+    assert len(arts) == 1
+    rec = json.loads(arts[0].read_text())
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 512
+    a = rec["analysis"]
+    assert a["hbm_bytes"] > 0 and a["collective_bytes"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] > 0

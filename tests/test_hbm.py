@@ -1,0 +1,109 @@
+"""HBM layout invariants — §4 / Fig. 2 / Fig. 7 / A.3."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hbm
+
+
+def _compile(axon_syn, neuron_syn, n, dense=True):
+    model_ids = {i: 0 for i in range(n)}
+    return hbm.compile_network(axon_syn, neuron_syn, model_ids,
+                               outputs=[0], n_neurons=n, dense_pack=dense)
+
+
+def test_slot_alignment_invariant():
+    """Every stored synapse occupies slot == post % 16 (Fig. 2)."""
+    img = _compile({0: [(i, i + 1) for i in range(40)]},
+                   {i: [((i * 7 + 3) % 40, 5)] for i in range(40)}, 40)
+    rows, slots = np.nonzero(img.syn_post >= 0)
+    posts = img.syn_post[rows, slots]
+    valid = img.syn_weight[rows, slots] != 0
+    np.testing.assert_array_equal(slots[valid], posts[valid] % hbm.SLOTS)
+
+
+def test_pointer_regions_disjoint_and_cover():
+    img = _compile({0: [(i, 1) for i in range(20)]},
+                   {i: [((i + 1) % 20, 2)] for i in range(20)}, 20)
+    spans = []
+    for ptr in list(img.axon_ptr.values()) + list(img.neuron_ptr.values()):
+        spans.append((ptr.base_row, ptr.base_row + ptr.n_rows))
+    spans.sort()
+    for (a1, b1), (a2, b2) in zip(spans, spans[1:]):
+        assert b1 <= a2, "pointer regions overlap"
+
+
+def test_zero_fanout_neuron_gets_filler_segment():
+    img = _compile({}, {0: [], 1: [(0, 3)]}, 2)
+    ptr = img.neuron_ptr[0]
+    region = img.syn_post[ptr.base_row:ptr.base_row + ptr.n_rows]
+    assert (region >= 0).sum() == hbm.SLOTS          # 16 zero-weight fillers
+    w = img.syn_weight[ptr.base_row:ptr.base_row + ptr.n_rows]
+    assert (w[region >= 0] == 0).all()
+
+
+def test_output_flag_set():
+    img = _compile({}, {0: [], 1: [(0, 3)]}, 2)      # output neuron = 0
+    ptr = img.neuron_ptr[1]
+    rows = slice(ptr.base_row, ptr.base_row + ptr.n_rows)
+    hit = img.syn_post[rows] == 0
+    assert img.syn_outflag[rows][hit].all()
+
+
+def test_dense_packing_no_worse_than_segment_aligned():
+    axon_syn = {a: [((a * 3 + i) % 50, 1) for i in range(7)]
+                for a in range(30)}
+    neuron_syn = {i: [((i + 13) % 50, 2)] for i in range(50)}
+    dense = hbm.compile_network(axon_syn, neuron_syn,
+                                {i: 0 for i in range(50)}, [0], 50, True)
+    naive = hbm.compile_network(axon_syn, neuron_syn,
+                                {i: 0 for i in range(50)}, [0], 50, False)
+    assert dense.stats()["packing_density"] >= \
+        naive.stats()["packing_density"]
+    assert dense.stats()["hbm_bytes"] <= naive.stats()["hbm_bytes"]
+
+
+def test_pointer_relative_rows_small():
+    """Pointers store (base, n_rows) — n_rows must equal actual span."""
+    img = _compile({0: [(i, 1) for i in range(33)]}, {}, 40)
+    ptr = img.axon_ptr[0]
+    region = img.syn_post[ptr.base_row:ptr.base_row + ptr.n_rows]
+    assert (region >= 0).sum() == 33
+    # 33 synapses over 40 posts -> ceil per-slot occupancy rows
+    assert ptr.n_rows <= 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(4, 40), st.integers(0, 4))
+def test_all_synapses_stored_exactly_once(n_axons, n_neurons, seed):
+    rng = np.random.default_rng(seed)
+    axon_syn = {a: [(int(p), int(rng.integers(-9, 9)) or 1)
+                    for p in rng.choice(n_neurons,
+                                        rng.integers(1, n_neurons + 1),
+                                        replace=False)]
+                for a in range(n_axons)}
+    neuron_syn = {i: [(int(p), int(rng.integers(-9, 9)) or 1)
+                      for p in rng.choice(n_neurons,
+                                          rng.integers(0, n_neurons),
+                                          replace=False)]
+                  for i in range(n_neurons)}
+    img = hbm.compile_network(axon_syn, neuron_syn,
+                              {i: 0 for i in range(n_neurons)}, [0],
+                              n_neurons)
+    n_expected = sum(len(v) for v in axon_syn.values()) + \
+        sum(len(v) if v else hbm.SLOTS for v in neuron_syn.values()) + \
+        sum(1 for i in [0] if not neuron_syn.get(i))
+    stored = int((img.syn_post >= 0).sum())
+    # each synapse appears exactly once (fillers included)
+    assert stored >= sum(len(v) for v in axon_syn.values())
+    # every item's region reproduces its weights
+    for a, syns in axon_syn.items():
+        ptr = img.axon_ptr[a]
+        rows = slice(ptr.base_row, ptr.base_row + ptr.n_rows)
+        got = {}
+        for (r, s) in zip(*np.nonzero(img.syn_post[rows] >= 0)):
+            p = int(img.syn_post[rows][r, s])
+            got[p] = got.get(p, 0) + int(img.syn_weight[rows][r, s])
+        want = {}
+        for p, w in syns:
+            want[p] = want.get(p, 0) + w
+        assert got == want

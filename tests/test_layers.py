@@ -1,0 +1,128 @@
+"""Layer-level properties: chunked CE == direct CE, RoPE norm preservation,
+attention q-chunking equivalence, MoE dispatch/unpack inverse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.distributed.context import mesh_context
+from repro.launch.mesh import make_local_mesh
+
+
+def test_chunked_ce_equals_direct():
+    from repro.models.layers import chunked_ce_loss, embed_init, unembed
+    cfg = get_reduced("qwen2_7b")
+    key = jax.random.PRNGKey(0)
+    with mesh_context(make_local_mesh()):
+        emb = embed_init(key, cfg, jnp.float32)
+        B, S, D = 2, 24, cfg.d_model
+        h = jax.random.normal(key, (B, S, D))
+        labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        mask = jnp.ones((B, S))
+        got = chunked_ce_loss(emb, h, labels, mask, cfg)
+        logits = unembed(emb, h, cfg).astype(jnp.float32)
+        vp = logits.shape[-1]
+        logits = jnp.where(jnp.arange(vp) >= cfg.vocab_size, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        want = jnp.mean(lse - gold)
+        assert abs(float(got) - float(want)) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_rope_preserves_norm_and_relativity(seed):
+    from repro.models.layers import apply_rope
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x)),
+                               np.linalg.norm(np.asarray(y)), rtol=1e-5)
+    # relativity: <q_m, k_n> depends only on m - n
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = apply_rope(jnp.broadcast_to(q, (1, 1, 1, 16)),
+                        jnp.asarray([m]), 10_000.0)
+        kn = apply_rope(jnp.broadcast_to(k, (1, 1, 1, 16)),
+                        jnp.asarray([n]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+
+
+def test_attention_qchunk_equivalence():
+    from repro.models.attention import attend
+    cfg = get_reduced("gemma_7b")
+    key = jax.random.PRNGKey(1)
+    B, S, H, hd = 2, 64, 4, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    with mesh_context(make_local_mesh()):
+        full = attend(q, k, v, cfg, q_chunk=64)      # single block
+        chunked = attend(q, k, v, cfg, q_chunk=16)   # 4 remat'd chunks
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-5)
+
+
+def test_moe_pack_unpack_inverse():
+    from repro.models.moe import _capacity, _pack, _unpack
+    cfg = get_reduced("deepseek_moe_16b")
+    key = jax.random.PRNGKey(2)
+    T, d = 32, 16
+    E, k = cfg.moe.n_routed, cfg.moe.top_k
+    x = jax.random.normal(key, (T, d))
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (T, k), 0, E)
+    w = jnp.full((T, k), 1.0 / k)
+    C = _capacity(T, cfg)
+    buf, slot, keep = _pack(x, ids, w, C, E)
+    y = _unpack(buf, slot, keep, w, T, k)
+    # identity experts + dropless capacity => unpack(pack(x)) == x
+    assert bool(jnp.all(keep))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(3)
+    B, S, H, P, N = 1, 32, 2, 4, 8
+    xh = jax.random.normal(key, (B, S, H, P))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (B, S, H))) * 0.9 + 0.05
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (B, S, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, N))
+    y, hT = ssd_chunked(xh, a, Bm, Cm, chunk=8)
+    # naive recurrence oracle
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        h = h * np.asarray(a)[:, t, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", np.asarray(xh)[:, t], np.asarray(Bm)[:, t])
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(Cm)[:, t], h))
+    want = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), h, atol=1e-3, rtol=1e-3)
+
+
+def test_rglru_scan_matches_stepwise():
+    from repro.models.rglru import rglru_apply, rglru_cache_shape, rglru_init
+    cfg = get_reduced("recurrentgemma_2b")
+    key = jax.random.PRNGKey(4)
+    with mesh_context(make_local_mesh()):
+        p = rglru_init(key, cfg, jnp.float32)
+        B, S = 2, 12
+        x = jax.random.normal(jax.random.fold_in(key, 1),
+                              (B, S, cfg.d_model)) * 0.3
+        y_scan, _ = rglru_apply(p, x, cfg)
+        cache = jax.tree.map(lambda a: a.astype(jnp.float32),
+                             rglru_cache_shape(cfg, B, jnp.float32))
+        ys = []
+        for t in range(S):
+            yt, cache = rglru_apply(p, x[:, t:t + 1], cfg, cache=cache)
+            ys.append(yt)
+        y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,88 @@
+"""Table 1 neuron-model semantics (bit-exact fixed point)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import neuron as nrn
+
+
+def test_leak_matches_numpy_floor_division():
+    V = [-(2**30), -1025, -17, -1, 0, 1, 17, 1025, 2**30]
+    for lam in [0, 1, 2, 5, 30, 31, 40, 63]:
+        got = np.asarray(nrn.leak(jnp.asarray(V, jnp.int32),
+                                  jnp.full((len(V),), lam, jnp.int32)))
+        want = np.array([v - v // (2 ** lam) for v in V], np.int64)
+        np.testing.assert_array_equal(got, want.astype(np.int32),
+                                      err_msg=f"lam={lam}")
+
+
+def test_noise_disabled_below_minus17():
+    key = jax.random.PRNGKey(0)
+    for nu in (-17, -20, -32):
+        xi = nrn.noise_sample(key, 1000, jnp.full((1000,), nu, jnp.int32))
+        assert int(jnp.max(jnp.abs(xi))) == 0, nu
+
+
+def test_noise_is_odd_and_bounded_at_nu0():
+    xi = np.asarray(nrn.noise_sample(jax.random.PRNGKey(1), 4096,
+                                     jnp.zeros((4096,), jnp.int32)))
+    assert np.all(xi % 2 != 0)          # LSB forced to 1
+    assert np.all(np.abs(xi) <= 2 ** 16)
+    assert abs(xi.mean()) < 2 ** 16 * 0.05   # balanced around zero
+
+
+def test_noise_shift_left():
+    x0 = np.asarray(nrn.noise_sample(jax.random.PRNGKey(2), 256,
+                                     jnp.zeros((256,), jnp.int32)))
+    x3 = np.asarray(nrn.noise_sample(jax.random.PRNGKey(2), 256,
+                                     jnp.full((256,), 3, jnp.int32)))
+    np.testing.assert_array_equal(x3, x0 << 3)
+
+
+def test_strict_threshold_and_reset():
+    V = jnp.array([2, 3, 4], jnp.int32)
+    theta = jnp.array([3, 3, 3], jnp.int32)
+    V2, spikes = nrn.fire_phase(V, theta, jnp.full((3,), -32, jnp.int32),
+                                jnp.full((3,), 63, jnp.int32),
+                                jnp.ones((3,), bool), jax.random.PRNGKey(0))
+    # spike iff V > theta (strict), spiking neuron resets to 0
+    np.testing.assert_array_equal(np.asarray(spikes), [False, False, True])
+    assert int(V2[2]) == 0
+    assert int(V2[0]) == 2 and int(V2[1]) == 3   # lam=63 -> no leak (V>=0)
+
+
+def test_ann_zeroes_membrane():
+    V = jnp.array([1, -7, 2], jnp.int32)
+    V2, _ = nrn.fire_phase(V, jnp.full((3,), 100, jnp.int32),
+                           jnp.full((3,), -32, jnp.int32),
+                           jnp.full((3,), 63, jnp.int32),
+                           jnp.zeros((3,), bool), jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(V2), [0, 0, 0])
+
+
+def test_param_validation():
+    with pytest.raises(ValueError):
+        nrn.LIF_neuron(threshold=1, nu=40)
+    with pytest.raises(ValueError):
+        nrn.LIF_neuron(threshold=1, lam=70)
+    with pytest.raises(ValueError):
+        nrn.ANN_neuron(threshold=1, nu=-64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(-2**30, 2**30), st.integers(0, 63))
+def test_leak_property_matches_python_floor(v, lam):
+    got = int(nrn.leak(jnp.asarray([v], jnp.int32),
+                       jnp.asarray([lam], jnp.int32))[0])
+    assert got == np.int32(v - v // 2 ** lam)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(-16, 16))
+def test_integrate_is_plain_addition(v, s):
+    v = v % 1000
+    out = int(nrn.integrate_phase(jnp.asarray([v], jnp.int32),
+                                  jnp.asarray([s], jnp.int32))[0])
+    assert out == v + s

@@ -1,0 +1,81 @@
+"""Hierarchical partitioner [10]: locality, capacity, cost model, job
+allocation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (Hierarchy, Job, allocate, partition,
+                                  random_assignment, traffic_cost)
+
+
+def clustered_net(n_clusters=8, size=24, p_in=0.4, p_out=0.01, seed=0):
+    rng = np.random.default_rng(seed)
+    adj = {}
+    n = n_clusters * size
+    for i in range(n):
+        posts = []
+        ci = i // size
+        for j in range(n):
+            if j == i:
+                continue
+            p = p_in if j // size == ci else p_out
+            if rng.random() < p:
+                posts.append((j, int(rng.integers(1, 10))))
+        adj[i] = posts
+    return adj
+
+
+HIER = Hierarchy(n_servers=2, fpgas_per_server=2, cores_per_fpga=2,
+                 neurons_per_core=32)
+
+
+def test_capacity_respected():
+    adj = clustered_net()
+    asg = partition(adj, HIER)
+    counts = np.bincount(list(asg.values()), minlength=HIER.n_cores)
+    assert counts.max() <= HIER.neurons_per_core
+    assert len(asg) == len(adj)
+
+
+def test_bfs_beats_random_on_clustered_topology():
+    adj = clustered_net()
+    asg = partition(adj, HIER)
+    cost = traffic_cost(adj, asg, HIER)
+    rnd = traffic_cost(adj, random_assignment(adj, HIER, seed=1), HIER)
+    assert cost["cost"] < 0.7 * rnd["cost"]
+    assert cost["local_frac"] > rnd["local_frac"]
+
+
+def test_level_ordering():
+    h = Hierarchy(2, 2, 2, 10)
+    assert h.level(0, 0) == 0
+    assert h.level(0, 1) == 1          # same FPGA
+    assert h.level(0, 2) == 2          # same server, other FPGA
+    assert h.level(0, 4) == 3          # other server
+
+
+def test_capacity_error():
+    with pytest.raises(ValueError):
+        partition({i: [] for i in range(1000)},
+                  Hierarchy(1, 1, 1, 10))
+
+
+def test_allocate_first_fit():
+    h = Hierarchy(1, 2, 4, 100)        # 8 cores
+    jobs = [Job("a", 250), Job("b", 90), Job("c", 350)]
+    out = allocate(jobs, h)
+    assert len(out["c"]) == 4 and len(out["a"]) == 3 and len(out["b"]) == 1
+    used = sum(out.values(), [])
+    assert len(set(used)) == len(used)     # no core shared
+    with pytest.raises(ValueError):
+        allocate([Job("x", 10_000)], h)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_partition_deterministic_and_total(seed):
+    adj = clustered_net(n_clusters=3, size=10, seed=seed)
+    a1 = partition(adj, HIER)
+    a2 = partition(adj, HIER)
+    assert a1 == a2
+    assert set(a1) == set(adj)

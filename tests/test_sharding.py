@@ -1,0 +1,78 @@
+"""Sharding rules: every param/optimizer/cache spec must divide evenly on
+the production meshes for every arch — validated symbolically (no 512
+devices needed in the test process)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_arch
+from repro.launch.sharding import ShardingRules
+from repro.launch.specs import batch_shapes, cache_shapes, params_shapes
+from repro.models.lm import _attn_layout
+from repro.distributed import context
+
+
+class FakeMesh:
+    """Shape-only stand-in for the production mesh."""
+    def __init__(self, multi):
+        self.shape = ({"pod": 2, "data": 16, "model": 16} if multi
+                      else {"data": 16, "model": 16})
+        self.axis_names = tuple(self.shape)
+
+
+def _check(specs, shapes, mesh, where):
+    flat_specs = jax.tree.flatten(specs,
+                                  is_leaf=lambda x: isinstance(x, P))[0]
+    flat_shapes = jax.tree.leaves(shapes)
+    assert len(flat_specs) == len(flat_shapes), where
+    for sp, sh in zip(flat_specs, flat_shapes):
+        for dim, axes in zip(sh.shape, tuple(sp)):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (where, sh.shape, tuple(sp))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_and_cache_specs_divisible(arch, multi):
+    cfg = get_arch(arch)
+    mesh = FakeMesh(multi)
+    prev = getattr(context._state, "mesh", None)
+
+    class _M:
+        axis_names = mesh.axis_names
+        shape = mesh.shape
+    context._state.mesh = _M()
+    try:
+        layout = _attn_layout(cfg, 16)
+        rules = ShardingRules(cfg, mesh, layout)
+        ps = params_shapes(cfg)
+        _check(rules.params_specs(ps), ps, mesh, f"{arch} params")
+        for shape in cells(arch):
+            bs = batch_shapes(cfg, shape)
+            _check(rules.batch_specs(bs), bs, mesh,
+                   f"{arch} batch {shape.name}")
+            if shape.kind != "train":
+                cs = cache_shapes(cfg, shape)
+                _check(rules.cache_specs(cs), cs, mesh,
+                       f"{arch} cache {shape.name}")
+    finally:
+        context._state.mesh = prev
+
+
+def test_long500k_only_subquadratic():
+    runnable = {a for a in ARCH_IDS
+                if any(s.name == "long_500k" for s in cells(a))}
+    assert runnable == {"mamba2_780m", "recurrentgemma_2b"}
+
+
+def test_attention_layout_fallback():
+    # ragged head counts use the sequence-sharded layout
+    assert _attn_layout(get_arch("qwen2_7b"), 16) == "seq"        # 28 heads
+    assert _attn_layout(get_arch("musicgen_medium"), 16) == "seq"  # 24
+    assert _attn_layout(get_arch("llama3_405b"), 16) == "heads"   # 128
+    assert _attn_layout(get_arch("gemma_7b"), 16) == "heads"      # 16

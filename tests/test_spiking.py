@@ -1,0 +1,61 @@
+"""Spiking CNN (DVS-gesture family, Table 2 rows 5-8): surrogate-gradient
+training, int16 quantization, LIF(λ=63) conversion, engine bit-exactness,
+rate decoding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.convert import LayerSpec, quantize
+from repro.core.spiking import (SpikingModel, infer_frames,
+                                simulate_quantized, spiking_to_network,
+                                train_spiking)
+from repro.data.synthetic import event_frames
+
+
+@pytest.fixture(scope="module")
+def trained():
+    F, y = event_frames(260, shape=(13, 13), n_classes=4, frames=5, seed=2)
+    model = SpikingModel(input_shape=(2, 13, 13),
+                         layers=[LayerSpec("conv", channels=3, kernel=5,
+                                           stride=2),
+                                 LayerSpec("dense", out_features=16)],
+                         n_classes=4)
+    params = train_spiking(model, F[:220].astype(np.float32), y[:220],
+                           epochs=3)
+    return F, y, model, params
+
+
+def test_snn_learns(trained):
+    F, y, model, params = trained
+    rates = np.asarray(model.apply(params, jnp.asarray(
+        F[220:].astype(np.float32))))
+    assert (rates.argmax(1) == y[220:]).mean() > 0.5     # chance = 0.25
+
+
+def test_engine_matches_integer_oracle(trained):
+    F, y, model, params = trained
+    qp, _ = quantize(params)
+    ref = simulate_quantized(model, qp, F[220:226])
+    net, out_keys = spiking_to_network(model, qp, backend="engine")
+    for i in range(6):
+        _, counts = infer_frames(net, F[220 + i], model, out_keys)
+        np.testing.assert_array_equal(counts, ref[i])
+
+
+def test_simulator_backend_matches_too(trained):
+    F, y, model, params = trained
+    qp, _ = quantize(params)
+    ref = simulate_quantized(model, qp, F[226:229])
+    net, out_keys = spiking_to_network(model, qp, backend="simulator")
+    for i in range(3):
+        _, counts = infer_frames(net, F[226 + i], model, out_keys)
+        np.testing.assert_array_equal(counts, ref[i])
+
+
+def test_rate_decoding_counts_bounded(trained):
+    F, y, model, params = trained
+    qp, _ = quantize(params)
+    T = F.shape[1]
+    depth = len(model.layers) + 1
+    ref = simulate_quantized(model, qp, F[220:224])
+    assert ref.max() <= T + depth            # a neuron spikes <= once/step
