@@ -1,9 +1,15 @@
 """Kernel micro-benchmarks (interpret mode on CPU: correctness + relative
 cost; Mosaic timings require real TPUs). Reports event-driven savings: the
 spike kernel's gated-block fraction at representative activity levels —
-the quantity that scales HBM traffic on hardware (paper §4/§6)."""
+the quantity that scales HBM traffic on hardware (paper §4/§6) — plus the
+two-phase routing kernels (segment-sum vs fan-in-gather accumulate, and
+the fused route+LIF Pallas step vs its unfused oracle).
+
+`--smoke` runs one small size per kernel (the CI job).
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -13,10 +19,76 @@ import numpy as np
 from repro.kernels import ops, ref
 
 
-def run(quiet=False):
+def _bench_routing(quiet=False, smoke=False):
+    """Routing-path parity + relative cost on a random HBM image."""
+    from repro.core import hbm
+    from repro.kernels import route as route_k
+
+    rng = np.random.default_rng(0)
+    n = 256
+    axon_syn = {a: [(int(p), int(rng.integers(-20, 20)) or 1)
+                    for p in rng.choice(n, 16, replace=False)]
+                for a in range(32)}
+    neuron_syn = {i: [(int(p), int(rng.integers(-20, 20)) or 1)
+                      for p in rng.choice(n, 8, replace=False)]
+                  for i in range(n)}
+    img = hbm.compile_network(axon_syn, neuron_syn,
+                              {i: 0 for i in range(n)}, [0], n)
+    tables = route_k.RouteTables.from_flat(img.flatten(), n)
+    counts = np.zeros((len(img.axon_ptr),), np.int32)
+    counts[rng.choice(len(counts), 4, replace=False)] = 1
+    counts = jnp.asarray(counts)
+    spikes = jnp.asarray(rng.random(n) < 0.05)
+
+    gate, _, _ = route_k.route_event_counts(tables, counts, spikes)
+    iters = 3 if smoke else 20
+    rows = []
+    for name, fn in (("fanin_gather", route_k.accumulate),
+                     ("segment_sum", route_k.accumulate_scatter)):
+        f = jax.jit(lambda g, fn=fn: fn(tables, g, n))
+        out = f(gate)
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(iters):
+            out = f(gate)
+        out.block_until_ready()
+        us = (time.time() - t0) / iters * 1e6
+        rows.append((f"route_{name}", us))
+        if not quiet:
+            print(f"kernel,route_{name},us={us:.0f}")
+    a = jax.jit(lambda g: route_k.accumulate(tables, g, n))(gate)
+    b = jax.jit(lambda g: route_k.accumulate_scatter(tables, g, n))(gate)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # fused route+LIF Pallas step vs the unfused two-phase oracle
+    from repro.core import neuron as nrn
+    V = jnp.asarray(rng.integers(-1000, 1000, n), jnp.int32)
+    u = jnp.asarray(rng.integers(-(2**16), 2**16, n), jnp.int32)
+    theta = jnp.asarray(rng.integers(0, 50, n), jnp.int32)
+    nu = jnp.full((n,), -32, jnp.int32)
+    lam = jnp.asarray(rng.integers(0, 64, n), jnp.int32)
+    is_lif = jnp.asarray(rng.random(n) < 0.7)
+    V_f, spk_f, _, _ = route_k.fused_route_lif_step(
+        tables, counts, V, u, theta, nu, lam, is_lif)
+    # oracle: fire -> route -> integrate with materialized V_mid
+    xi = nrn.noise_from_u(u, nu)
+    spk = (V + xi) > theta
+    V_mid = jnp.where(spk, 0, V + xi)
+    V_mid = jnp.where(is_lif, nrn.leak(V_mid, lam), 0)
+    syn, _, _ = route_k.route(tables, counts, spk, n)
+    V_o = nrn.integrate_phase(V_mid, syn)
+    assert np.array_equal(np.asarray(V_f), np.asarray(V_o))
+    assert np.array_equal(np.asarray(spk_f), np.asarray(spk))
+    if not quiet:
+        print("kernel,fused_route_lif,parity=ok")
+    return rows
+
+
+def run(quiet=False, smoke=False):
     key = jax.random.PRNGKey(0)
     rows = []
-    for density in (0.01, 0.05, 0.2):
+    densities = (0.05,) if smoke else (0.01, 0.05, 0.2)
+    for density in densities:
         spikes = jax.random.bernoulli(key, density, (2048,))
         w = jax.random.randint(key, (2048, 1024), -300, 300, jnp.int16)
         out = ops.spike_matmul(spikes, w)
@@ -28,16 +100,22 @@ def run(quiet=False):
         if not quiet:
             print(f"kernel,spike_matmul,density={density},"
                   f"live_blocks={live:.2f}")
-    q = jax.random.normal(key, (1, 2, 256, 64))
+    S, bqk = (128, 64) if smoke else (256, 128)
+    q = jax.random.normal(key, (1, 2, S, 64))
     t0 = time.time()
-    o = ops.flash_attention(q, q, q, bq=128, bk=128)
+    o = ops.flash_attention(q, q, q, bq=bqk, bk=bqk)
     dt = (time.time() - t0) * 1e6
     err = float(jnp.max(jnp.abs(o - ref.flash_attention_ref(q, q, q))))
     assert err < 2e-5
     if not quiet:
         print(f"kernel,flash_attention,us={dt:.0f},maxerr={err:.2e}")
+    rows += _bench_routing(quiet=quiet, smoke=smoke)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small size per kernel (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -1,0 +1,44 @@
+"""Version-compat shims for the pinned toolchain.
+
+The repo targets the container's jax 0.4.37, where `shard_map` still lives
+in `jax.experimental.shard_map` and its replication-check kwarg is named
+`check_rep`. Newer jax (>= 0.6) promotes it to `jax.shard_map` and renames
+the kwarg to `check_vma`. Call sites import `shard_map` from here and may
+pass `check_vma=...` uniformly; the shim forwards it under whichever name
+the installed jax understands.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:                     # jax 0.4.x: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+__all__ = ["shard_map", "make_mesh"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """`jax.shard_map` with the modern keyword surface on any jax version."""
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """`jax.make_mesh` with explicit Auto axis types where supported.
+
+    jax >= 0.6 takes `axis_types` (and `jax.sharding.AxisType` exists);
+    jax 0.4.x has neither — every mesh axis is implicitly auto there, so
+    dropping the kwarg is semantically identical."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types, devices=devices)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             devices=devices)

@@ -17,16 +17,28 @@ event-driven HBM engine (the accelerator path, with energy/latency
 accounting) — backend="simulator" | "engine". Results are bit-identical
 (tests/test_api.py); this mirrors the paper's seamless local-to-cluster
 transition.
+
+Batched execution (both backends, bit-exact vs the per-step loop):
+
+    fired_per_step = net.run(schedule)        # T steps, one lax.scan
+    spikes = net.run_batch(batch_schedules)   # (B, T, n_outputs) bool
+
+`run` takes a length-T sequence of axon-key lists (or a (T, A) int32
+event-count array) and advances the network exactly as T `step` calls
+would, counter included. `run_batch` evaluates B independent samples per
+dispatch (each from V = 0 under PRNG stream fold_in(key, sample)) — the
+Table-2 evaluation path (core.spiking.infer_frames_batch).
 """
 from __future__ import annotations
 
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hbm
 from repro.core.costmodel import AccessCounter
-from repro.core.engine import EventEngine
+from repro.core.engine import EventEngine, _check_count_dtype
 from repro.core.neuron import ANN_neuron, LIF_neuron, pack_models
 from repro.core.simulator import DenseSimulator
 
@@ -36,7 +48,8 @@ __all__ = ["CRI_network", "LIF_neuron", "ANN_neuron"]
 class CRI_network:
     def __init__(self, axons: Dict, neurons: Dict, outputs: Sequence,
                  backend: str = "engine", seed: int = 0,
-                 dense_pack: bool = True):
+                 dense_pack: bool = True, vectorized: bool = True,
+                 use_pallas: bool = False):
         self.axon_keys = list(axons.keys())
         self.neuron_keys = list(neurons.keys())
         self._aid = {k: i for i, k in enumerate(self.axon_keys)}
@@ -87,7 +100,9 @@ class CRI_network:
                                         out_ids, N, dense_pack=dense_pack)
             self.image = image
             self._impl = EventEngine(image, theta, nu, lam, is_lif, N,
-                                     out_ids, seed=seed)
+                                     out_ids, seed=seed,
+                                     vectorized=vectorized,
+                                     use_pallas=use_pallas)
             self.counter = self._impl.counter
         else:
             raise ValueError(f"unknown backend {backend!r}")
@@ -108,6 +123,73 @@ class CRI_network:
 
     def reset(self):
         self._impl.reset()
+
+    # ----------------------------------------------------- batched running
+    def _encode_schedule(self, schedule) -> np.ndarray:
+        """Length-T sequence of axon-key sequences -> (T, A) int32 event
+        counts (an axon listed twice in a step is driven twice, the event
+        queue semantics)."""
+        if isinstance(schedule, (np.ndarray, jnp.ndarray)) \
+                and schedule.dtype != object:
+            if schedule.ndim != 2:
+                raise ValueError(
+                    f"count-array schedule must be 2-D (T, A), "
+                    f"got shape {schedule.shape}")
+            _check_count_dtype(schedule)
+            return np.asarray(schedule, np.int32)
+        counts = np.zeros((len(schedule), len(self.axon_keys)), np.int32)
+        for t, keys in enumerate(schedule):
+            for k in keys:
+                counts[t, self._aid[k]] += 1
+        return counts
+
+    def run(self, schedule) -> List[List]:
+        """T timesteps in one backend dispatch (lax.scan on both backends).
+        schedule: length-T sequence of axon-key sequences, or a (T, A)
+        int32 count array (A = len(axon_keys), axon order = insertion
+        order). Returns the per-step fired output keys — exactly what T
+        `step` calls would return, state and access counter included."""
+        counts = self._encode_schedule(schedule)
+        spikes = self._impl.run(self._pad_axons(counts))
+        return [[k for k in self.outputs if spikes[t, self._nid[k]]]
+                for t in range(counts.shape[0])]
+
+    def run_batch(self, schedules) -> np.ndarray:
+        """B samples × T timesteps per dispatch (vmap over the scan).
+        schedules: (B, T, A) int32 counts or a length-B sequence of
+        `run`-style schedules. Each sample starts from V = 0 under an
+        independent PRNG stream (fold_in(key, sample)); the network's own
+        membrane state and last-spike record are untouched, but the PRNG
+        key advances once (so a later batch draws fresh streams — noisy
+        sequential stepping after a run_batch therefore continues from a
+        different stream). Returns (B, T, n_outputs) bool output-neuron
+        spikes, ordered like `self.outputs`."""
+        if len(schedules) == 0:
+            return np.zeros((0, 0, len(self.outputs)), bool)
+        if isinstance(schedules, (np.ndarray, jnp.ndarray)) \
+                and schedules.dtype != object and schedules.ndim == 3:
+            _check_count_dtype(schedules)
+            counts = np.asarray(schedules, np.int32)
+        else:
+            counts = np.stack([self._encode_schedule(s) for s in schedules])
+        spikes = self._impl.run_batch(self._pad_axons(counts))
+        out_ids = np.asarray([self._nid[k] for k in self.outputs])
+        return spikes[..., out_ids]
+
+    def _pad_axons(self, counts: np.ndarray) -> np.ndarray:
+        """Validate the schedule width (must be exactly len(axon_keys)),
+        then pad only for the empty-network case: the engine's flattened
+        axon table is never narrower than 1 slot."""
+        if counts.shape[-1] != len(self.axon_keys):
+            raise ValueError(
+                f"schedule width {counts.shape[-1]} != number of axons "
+                f"{len(self.axon_keys)}")
+        want = getattr(self._impl, "n_axon_slots", counts.shape[-1])
+        if counts.shape[-1] < want:
+            pad = [(0, 0)] * (counts.ndim - 1) + \
+                [(0, want - counts.shape[-1])]
+            counts = np.pad(counts, pad)
+        return counts
 
     # ------------------------------------------------------------ synapses
     def read_synapse(self, pre, post) -> int:
@@ -151,7 +233,7 @@ class CRI_network:
             col_post = img.syn_post[rows, slot]
             hit = np.nonzero(col_post == pid)[0]
             img.syn_weight[ptr.base_row + hit[0], slot] = np.int16(weight)
-            self._impl._w = np.asarray(img.syn_weight, np.int32)
+            self._impl.update_weights(img.syn_weight)
 
     def read_membrane(self, *keys) -> List[int]:
         V = np.asarray(self._impl.V)

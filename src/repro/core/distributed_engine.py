@@ -30,7 +30,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import neuron as nrn

@@ -9,6 +9,18 @@ Per timestep:
             postsynaptic membrane potentials (16 parallel lanes = the slot
             alignment constraint's purpose).
 
+Two interchangeable execution paths, bit-exact against each other:
+
+  * vectorized (default) — the pointer dicts are lowered once to dense
+    arrays (`HBMImage.flatten`) and both phases run as gathers +
+    `segment_sum` inside a single jit-compiled step (`kernels/route.py`);
+    `run(schedule)` folds T timesteps into one `lax.scan` dispatch and
+    `run_batch(schedules)` vmaps that scan over B independent samples
+    (per-sample PRNG stream = fold_in(key, sample), fresh V = 0).
+  * reference — the seed per-pointer host loop, kept as the oracle the
+    vectorized path is property-tested against (and as the "before" side
+    of benchmarks/sim_throughput.py).
+
 Neuron state dynamics are shared with the dense simulator (core.neuron), so
 engine-vs-simulator equivalence is bit-exact given the same PRNG stream —
 that parity is the reproduction of the paper's claim that hs_api networks
@@ -16,7 +28,7 @@ run identically on the local simulator and the accelerator.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence
+from typing import Iterable, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +37,21 @@ import numpy as np
 from repro.core import neuron as nrn
 from repro.core.costmodel import AccessCounter
 from repro.core.hbm import HBMImage
+from repro.kernels import route as route_k
+
+
+def _check_count_dtype(a) -> None:
+    """Reject non-integer count matrices: silently truncating a float
+    schedule (e.g. spike probabilities) to int32 would drop events."""
+    if not (np.issubdtype(a.dtype, np.integer) or a.dtype == np.bool_):
+        raise ValueError(
+            f"count schedules must be integer or bool, got {a.dtype}")
 
 
 class EventEngine:
     def __init__(self, image: HBMImage, theta, nu, lam, is_lif,
-                 n_neurons: int, outputs: Sequence[int], seed: int = 0):
+                 n_neurons: int, outputs: Sequence[int], seed: int = 0,
+                 vectorized: bool = True, use_pallas: bool = False):
         self.image = image
         self.theta = jnp.asarray(theta, jnp.int32)
         self.nu = jnp.asarray(nu, jnp.int32)
@@ -40,18 +62,127 @@ class EventEngine:
         self.V = jnp.zeros((n_neurons,), jnp.int32)
         self.key = jax.random.PRNGKey(seed)
         self.counter = AccessCounter()
+        # `vectorized` and `use_pallas` are trace-time constants: they are
+        # baked into the jit caches on the first step/run call, so set
+        # them at construction (or before the first call) — toggling
+        # afterwards is not supported for `use_pallas` (the cached
+        # executable keeps its original path).
+        self.vectorized = vectorized
+        self.use_pallas = use_pallas
         self._spikes = np.zeros((n_neurons,), bool)
-        # numpy views of the table for host-side routing
+        # numpy views of the table for the host-side reference routing
         self._post = np.asarray(image.syn_post)
         self._w = np.asarray(image.syn_weight, np.int32)
+        # dense pointer tables (cheap, O(rows)); the fan-in transpose is
+        # built lazily on the first vectorized dispatch so reference-only
+        # engines never pay for it.
+        self.flat = image.flatten()
+        self.n_axon_slots = int(self.flat.axon_rows.shape[0])
+        self._tables = None
+        self._use_fanin = True
+        if vectorized:
+            self._build_tables()
+        self._jit_step = jax.jit(self._step_impl)
+        self._jit_run = jax.jit(self._run_impl)
+        self._jit_run_batch = jax.jit(self._run_batch_impl)
 
+    def _build_tables(self):
+        self._use_fanin = route_k.fanin_is_economical(self.flat, self.n)
+        self._tables = route_k.RouteTables.from_flat(
+            self.flat, self.n, build_fanin=self._use_fanin)
+
+    @property
+    def tables(self) -> route_k.RouteTables:
+        if self._tables is None:
+            self._build_tables()
+        return self._tables
+
+    # ------------------------------------------------------------- state
     def reset(self):
         self.V = jnp.zeros((self.n,), jnp.int32)
         self._spikes = np.zeros((self.n,), bool)
 
-    def _route(self, fired_axons: Iterable[int],
-               fired_neurons: np.ndarray) -> np.ndarray:
-        """Two-phase routing; returns int32 syn_in (n,). Counts accesses."""
+    def update_weights(self, syn_weight) -> None:
+        """Refresh both routing paths after an in-place `syn_weight` edit
+        (CRI_network.write_synapse). The routing tables are traced
+        arguments of the jitted paths, so this is a pure data swap — no
+        retrace/recompile."""
+        self._w = np.asarray(syn_weight, np.int32)
+        self.flat.syn_weight = np.ascontiguousarray(self._w)
+        if self._tables is not None:
+            self._tables = self._tables.with_weights(self._w)
+
+    # -------------------------------------------------- vectorized core
+    # `tables` is passed as a (pytree) argument rather than captured, so
+    # weight edits swap arrays under the same compiled executable.
+    def _step_impl(self, V, key, axon_counts, tables):
+        """One timestep as pure jax: returns (V', key', spikes, ptr, rows)."""
+        key, sub = jax.random.split(key)
+        if self.use_pallas:
+            u = nrn.noise_draw(sub, self.n)
+            V_next, spikes, pr, rr = route_k.fused_route_lif_step(
+                tables, axon_counts, V, u, self.theta, self.nu,
+                self.lam, self.is_lif)
+        else:
+            V_mid, spikes = nrn.fire_phase(V, self.theta, self.nu, self.lam,
+                                           self.is_lif, sub)
+            syn, pr, rr = route_k.route(tables, axon_counts, spikes,
+                                        self.n, use_fanin=self._use_fanin)
+            V_next = nrn.integrate_phase(V_mid, syn)
+        return V_next, key, spikes, pr, rr
+
+    def _run_impl(self, V, key, counts, tables):
+        """T timesteps under one lax.scan. counts: (T, A) int32. The
+        access tallies come back per step (int32 is safe within a step);
+        callers sum them host-side in exact Python ints so long runs
+        cannot wrap the counter."""
+        def body(carry, c):
+            V, key = carry
+            V, key, spikes, pr, rr = self._step_impl(V, key, c, tables)
+            return (V, key), (spikes, pr, rr)
+
+        (V, key), (spikes, prs, rrs) = jax.lax.scan(body, (V, key), counts)
+        return V, key, spikes, prs, rrs
+
+    def _run_batch_impl(self, key, counts, tables):
+        """B independent samples per dispatch. counts: (B, T, A) int32.
+        Sample b runs from V = 0 under PRNG stream fold_in(key, b)."""
+        B = counts.shape[0]
+        keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(jnp.arange(B))
+        V0 = jnp.zeros((B, self.n), jnp.int32)
+        _, _, spikes, prs, rrs = jax.vmap(
+            self._run_impl, in_axes=(0, 0, 0, None))(V0, keys, counts,
+                                                     tables)
+        return spikes, prs, rrs
+
+    # -------------------------------------------------- schedule encoding
+    def encode_axons(self, axon_inputs: Iterable[int]) -> np.ndarray:
+        """Axon id sequence -> (A,) occurrence counts. Unknown ids are
+        dropped, matching the reference path's `dict.get` skip."""
+        ids = np.asarray(list(axon_inputs), np.int64).reshape(-1)
+        ids = ids[(ids >= 0) & (ids < self.n_axon_slots)]
+        return np.bincount(ids, minlength=self.n_axon_slots) \
+            .astype(np.int32)
+
+    def _encode_schedule(self, schedule) -> np.ndarray:
+        if isinstance(schedule, (np.ndarray, jnp.ndarray)) \
+                and schedule.ndim >= 2:
+            # already (..., A) counts
+            if schedule.shape[-1] != self.n_axon_slots:
+                raise ValueError(
+                    f"schedule width {schedule.shape[-1]} != axon table "
+                    f"width {self.n_axon_slots}")
+            _check_count_dtype(schedule)
+            return np.asarray(schedule, np.int32)
+        if len(schedule) == 0:
+            return np.zeros((0, self.n_axon_slots), np.int32)
+        return np.stack([self.encode_axons(s) for s in schedule])
+
+    # ------------------------------------------------------ reference path
+    def _route_reference(self, fired_axons: Iterable[int],
+                         fired_neurons: np.ndarray) -> np.ndarray:
+        """Seed two-phase routing: host loop over pointers. Returns int32
+        syn_in (n,). Counts accesses."""
         syn = np.zeros((self.n,), np.int64)
         queue = []                                   # phase 1: pointer fetch
         for a in fired_axons:
@@ -74,17 +205,91 @@ class EventEngine:
             np.add.at(syn, np.clip(post[valid], 0, self.n - 1), w[valid])
         return syn.astype(np.int32)
 
-    def step(self, axon_inputs: Sequence[int]) -> np.ndarray:
-        """One timestep; returns bool (n,) spikes fired this step."""
-        self.counter.timesteps += 1
+    def _step_reference(self, axon_inputs: Sequence[int]) -> np.ndarray:
         self.key, sub = jax.random.split(self.key)
         V_mid, spikes = nrn.fire_phase(self.V, self.theta, self.nu, self.lam,
                                        self.is_lif, sub)
         spikes_np = np.asarray(spikes)
-        syn = self._route(axon_inputs, spikes_np)
+        syn = self._route_reference(axon_inputs, spikes_np)
         self.V = nrn.integrate_phase(V_mid, jnp.asarray(syn))
-        self._spikes = spikes_np
         return spikes_np
+
+    # ----------------------------------------------------------- stepping
+    def step(self, axon_inputs: Sequence[int]) -> np.ndarray:
+        """One timestep; returns bool (n,) spikes fired this step."""
+        self.counter.timesteps += 1
+        if not self.vectorized:
+            self._spikes = self._step_reference(axon_inputs)
+            return self._spikes
+        counts = jnp.asarray(self.encode_axons(axon_inputs))
+        self.V, self.key, spikes, pr, rr = self._jit_step(
+            self.V, self.key, counts, self.tables)
+        self.counter.pointer_reads += int(pr)
+        self.counter.row_reads += int(rr)
+        self._spikes = np.asarray(spikes)
+        return self._spikes
+
+    def run(self, schedule) -> np.ndarray:
+        """T timesteps in one dispatch. schedule: (T, A) int count array or
+        a length-T sequence of axon-id sequences. Returns (T, n) bool
+        spikes; engine state (V, key, counter) advances exactly as T
+        `step` calls would."""
+        counts = self._encode_schedule(schedule)
+        T = counts.shape[0]
+        self.counter.timesteps += T
+        if not self.vectorized:
+            out = np.zeros((T, self.n), bool)
+            for t in range(T):
+                ids = np.repeat(np.arange(self.n_axon_slots), counts[t])
+                out[t] = self._step_reference(ids)
+            self._spikes = out[-1] if T else self._spikes
+            return out
+        self.V, self.key, spikes, prs, rrs = self._jit_run(
+            self.V, self.key, jnp.asarray(counts), self.tables)
+        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
+        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
+        spikes = np.asarray(spikes)
+        if T:
+            self._spikes = spikes[-1]
+        return spikes
+
+    def run_batch(self, schedules) -> np.ndarray:
+        """B samples × T timesteps per dispatch. schedules: (B, T, A) int
+        count array or nested per-sample schedules. Every sample starts
+        from V = 0 with PRNG stream fold_in(key, sample); the engine's own
+        sequential state (V, last spikes) is left untouched, but its key
+        is advanced once so a later batch draws fresh streams — noisy
+        sequential stepping after a run_batch continues from a different
+        stream than it would otherwise. Returns (B, T, n) bool spikes;
+        the access counter accumulates the whole batch."""
+        if len(schedules) == 0:
+            return np.zeros((0, 0, self.n), bool)
+        if isinstance(schedules, (np.ndarray, jnp.ndarray)) \
+                and schedules.ndim == 3:
+            counts = self._encode_schedule(np.asarray(schedules))
+        else:
+            counts = np.stack([self._encode_schedule(s) for s in schedules])
+        B, T = counts.shape[0], counts.shape[1]
+        self.counter.timesteps += B * T
+        if not self.vectorized:
+            saveV, saveS, saveK = self.V, self._spikes, self.key
+            out = np.zeros((B, T, self.n), bool)
+            for b in range(B):
+                self.V = jnp.zeros((self.n,), jnp.int32)
+                self.key = jax.random.fold_in(saveK, b)
+                for t in range(T):
+                    ids = np.repeat(np.arange(self.n_axon_slots),
+                                    counts[b, t])
+                    out[b, t] = self._step_reference(ids)
+            self.V, self._spikes = saveV, saveS
+            self.key, _ = jax.random.split(saveK)
+            return out
+        spikes, prs, rrs = self._jit_run_batch(self.key, jnp.asarray(counts),
+                                               self.tables)
+        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
+        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
+        self.key, _ = jax.random.split(self.key)
+        return np.asarray(spikes)
 
     def read_membrane(self, ids: Sequence[int]) -> List[int]:
         V = np.asarray(self.V)

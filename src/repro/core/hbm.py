@@ -21,7 +21,9 @@ Memory model (8 GB HBM per FPGA card):
 This module reproduces the mapping algorithm of Fig. 7 and reports the
 packing/access statistics that drive the paper's energy & latency model
 (costmodel.py). The event-driven engine (engine.py) executes directly from
-this table.
+this table; `HBMImage.flatten()` lowers the pointer dicts to dense
+id-indexed arrays + row-owner/CSR inverse maps (`FlatImage`) for the
+vectorized routing path (kernels/route.py).
 """
 from __future__ import annotations
 
@@ -50,6 +52,66 @@ class Synapse:
 
 
 @dataclass
+class FlatImage:
+    """`HBMImage` lowered to dense arrays for the vectorized engine.
+
+    The `Dict[int, Pointer]` tables become id-indexed int32 vectors plus two
+    inverse maps over the synapse rows, so phase-1 (pointer fetch) and
+    phase-2 (row fetch + 16-lane accumulate) are pure gathers:
+
+      * `axon_base/axon_rows/axon_present`  — (A,) pointer table, A =
+        max axon id + 1 (present=False marks ids with no pointer);
+      * `neuron_base/neuron_rows/neuron_present` — (N,) likewise;
+      * `row_owner_axon/row_owner_neuron`   — (R,) inverse pointer maps:
+        the item id whose span covers row r, or -1.  The Fig. 7 mapper
+        gives every row at most one owner (items occupy disjoint ranges),
+        which is what makes the dense row-gate formulation exact;
+      * `axon_row_indptr/axon_row_indices` (and the neuron pair) — the
+        per-item row-span CSR: rows of item i are
+        `indices[indptr[i]:indptr[i+1]]`, for gather-style routing of only
+        the fired items (sparse dispatch; the dense engine path uses the
+        owner maps instead).
+
+    `syn_weight` is widened to int32 once here so the accumulate path never
+    re-casts per step."""
+    syn_post: np.ndarray           # (R, SLOTS) int32, -1 = empty
+    syn_weight: np.ndarray         # (R, SLOTS) int32 (widened from int16)
+    axon_base: np.ndarray          # (A,) int32
+    axon_rows: np.ndarray          # (A,) int32
+    axon_present: np.ndarray       # (A,) bool
+    neuron_base: np.ndarray        # (N,) int32
+    neuron_rows: np.ndarray        # (N,) int32
+    neuron_present: np.ndarray     # (N,) bool
+    row_owner_axon: np.ndarray     # (R,) int32, -1 = unowned
+    row_owner_neuron: np.ndarray   # (R,) int32, -1 = unowned
+    axon_row_indptr: np.ndarray    # (A + 1,) int32
+    axon_row_indices: np.ndarray   # (sum axon_rows,) int32
+    neuron_row_indptr: np.ndarray  # (N + 1,) int32
+    neuron_row_indices: np.ndarray  # (sum neuron_rows,) int32
+
+
+def _flatten_ptr_table(ptr: Dict[int, Pointer], n_rows: int):
+    """Lower one pointer dict to (base, rows, present, owner, CSR)."""
+    n = max(ptr.keys(), default=-1) + 1
+    n = max(n, 1)                  # keep zero-item tables indexable
+    base = np.zeros((n,), np.int32)
+    rows = np.zeros((n,), np.int32)
+    present = np.zeros((n,), bool)
+    owner = np.full((n_rows,), -1, np.int32)
+    indptr = np.zeros((n + 1,), np.int32)
+    indices: List[int] = []
+    for i in range(n):
+        p = ptr.get(i)
+        if p is not None:
+            base[i], rows[i], present[i] = p.base_row, p.n_rows, True
+            owner[p.base_row:p.base_row + p.n_rows] = i
+            indices.extend(range(p.base_row, p.base_row + p.n_rows))
+        indptr[i + 1] = len(indices)
+    return (base, rows, present, owner, indptr,
+            np.asarray(indices, np.int32))
+
+
+@dataclass
 class HBMImage:
     """The packed routing table: a dense (rows, SLOTS) record array."""
     syn_post: np.ndarray       # (rows, SLOTS) int32, -1 = empty
@@ -62,6 +124,23 @@ class HBMImage:
     @property
     def n_rows(self) -> int:
         return self.syn_post.shape[0]
+
+    def flatten(self) -> FlatImage:
+        """Lower the pointer dicts to dense id-indexed arrays (see
+        `FlatImage`). Call again after in-place `syn_weight` edits if a
+        consumer snapshotted the weights."""
+        ab, ar, ap, aown, a_indptr, aidx = _flatten_ptr_table(
+            self.axon_ptr, self.n_rows)
+        nb, nr, npr, nown, n_indptr, nidx = _flatten_ptr_table(
+            self.neuron_ptr, self.n_rows)
+        return FlatImage(
+            syn_post=np.ascontiguousarray(self.syn_post, np.int32),
+            syn_weight=np.ascontiguousarray(self.syn_weight, np.int32),
+            axon_base=ab, axon_rows=ar, axon_present=ap,
+            neuron_base=nb, neuron_rows=nr, neuron_present=npr,
+            row_owner_axon=aown, row_owner_neuron=nown,
+            axon_row_indptr=a_indptr, axon_row_indices=aidx,
+            neuron_row_indptr=n_indptr, neuron_row_indices=nidx)
 
     def stats(self) -> Dict[str, float]:
         used = int((self.syn_post >= 0).sum())

@@ -66,21 +66,36 @@ class ANN_neuron:
         return MAX_LAMBDA       # unused; uniform param layout
 
 
+def noise_from_u(u, nu):
+    """ξ from pre-drawn 17-bit signed uniforms u: LSB forced to 1, then
+    shifted by ν — (u | 1) << ν for ν >= 0, sign-magnitude >> -ν for
+    ν < 0. Right shift truncates toward zero: ν <= -17 must yield exactly
+    0 so that "noise disabled" neurons are bit-exact deterministic
+    (Table 1 note: ν > -17 makes an ANN neuron stochastic). The single
+    definition of the fixed-point noise formula — the Pallas kernels and
+    benchmark oracles call this rather than re-deriving it."""
+    u = u | 1
+    pos = jnp.minimum(jnp.maximum(nu, 0), 31)
+    neg = jnp.minimum(jnp.maximum(-nu, 0), 31)
+    mag = jnp.abs(u) >> neg
+    right = jnp.sign(u) * mag
+    return jnp.where(nu >= 0, u << pos, right)
+
+
+def noise_draw(key, n):
+    """The raw 17-bit signed uniform draw feeding `noise_from_u` — the
+    single definition of the noise distribution (the fused-kernel engine
+    path draws through this too, keeping its PRNG stream bit-identical
+    to `noise_sample`)."""
+    return jax.random.randint(key, (n,), -(2 ** (NOISE_BITS - 1)),
+                              2 ** (NOISE_BITS - 1), dtype=jnp.int32)
+
+
 def noise_sample(key, n, nu):
     """ξ per neuron: 17-bit signed uniform, LSB set to 1, shifted by ν.
     nu: (n,) int32 per-neuron shift. Matches Fig. 8's
     (randint | 1) << ν  /  >> -ν."""
-    u = jax.random.randint(key, (n,), -(2 ** (NOISE_BITS - 1)),
-                           2 ** (NOISE_BITS - 1), dtype=jnp.int32)
-    u = u | 1
-    pos = jnp.minimum(jnp.maximum(nu, 0), 31)
-    neg = jnp.minimum(jnp.maximum(-nu, 0), 31)
-    # Right shift truncates toward zero (sign-magnitude shift): ν <= -17
-    # must yield exactly 0 so that "noise disabled" neurons are bit-exact
-    # deterministic (Table 1 note: ν > -17 makes an ANN neuron stochastic).
-    mag = jnp.abs(u) >> neg
-    right = jnp.sign(u) * mag
-    return jnp.where(nu >= 0, u << pos, right)
+    return noise_from_u(noise_draw(key, n), nu)
 
 
 def leak(V, lam):

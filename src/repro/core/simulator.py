@@ -14,6 +14,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import neuron as nrn
 
@@ -31,28 +32,107 @@ class DenseSimulator:
         self.V = jnp.zeros((self.n_neurons,), jnp.int32)
         self.key = jax.random.PRNGKey(seed)
         self._step = jax.jit(self._step_impl)
+        self._scan = jax.jit(self._scan_impl)
+        self._scan_batch = jax.jit(self._scan_batch_impl)
 
     def reset(self):
         self.V = jnp.zeros((self.n_neurons,), jnp.int32)
 
-    def _step_impl(self, V, key, fired_axons, axonW, neuronW):
+    def _step_impl(self, V, key, axon_counts, axonW, neuronW):
         key, sub = jax.random.split(key)
         V_mid, spikes = nrn.fire_phase(V, self.theta, self.nu, self.lam,
                                        self.is_lif, sub)
-        syn = (fired_axons.astype(jnp.int32) @ axonW
+        syn = (axon_counts.astype(jnp.int32) @ axonW
                + spikes.astype(jnp.int32) @ neuronW)
         V_next = nrn.integrate_phase(V_mid, syn)
         return V_next, key, spikes
 
     def step(self, axon_inputs):
-        """axon_inputs: iterable of axon indices active this timestep.
-        Returns bool (N,) spike vector (this step's fired neurons)."""
-        fired = jnp.zeros((self.n_axons,), bool)
-        if len(axon_inputs):
-            fired = fired.at[jnp.asarray(list(axon_inputs))].set(True)
-        self.V, self.key, spikes = self._step(self.V, self.key, fired,
+        """axon_inputs: iterable of axon indices active this timestep
+        (event-count semantics: an index listed twice is driven twice,
+        matching the engine's pointer queue). Returns bool (N,) spike
+        vector (this step's fired neurons)."""
+        counts = np.zeros((self.n_axons,), np.int32)
+        ids = np.asarray(list(axon_inputs), np.int64).reshape(-1)
+        ids = ids[(ids >= 0) & (ids < self.n_axons)]   # drop unknown ids,
+        if ids.size:                                   # like the engine
+            counts = np.bincount(ids, minlength=self.n_axons) \
+                .astype(np.int32)
+        self.V, self.key, spikes = self._step(self.V, self.key,
+                                              jnp.asarray(counts),
                                               self.axonW, self.neuronW)
         return spikes
 
-    def run(self, steps_axon_inputs):
-        return [self.step(a) for a in steps_axon_inputs]
+    # ------------------------------------------------------ batched paths
+    # Same per-step semantics and PRNG stream as `step` (split per step),
+    # folded into one XLA dispatch — mirrors EventEngine.run/run_batch so
+    # the two backends stay bit-identical on the batched API too. Schedules
+    # are (T, A) / (B, T, A) int32 axon event COUNTS (counts, not booleans:
+    # an axon driven twice in a step contributes its weights twice, the
+    # event-queue semantics of the engine).
+    def _scan_impl(self, V, key, counts, axonW, neuronW):
+        # weights are traced arguments (like _step_impl's), so
+        # write_synapse edits reach already-compiled scans.
+        def body(carry, c):
+            V, key = carry
+            key, sub = jax.random.split(key)
+            V_mid, spikes = nrn.fire_phase(V, self.theta, self.nu, self.lam,
+                                           self.is_lif, sub)
+            syn = (c.astype(jnp.int32) @ axonW
+                   + spikes.astype(jnp.int32) @ neuronW)
+            return (nrn.integrate_phase(V_mid, syn), key), spikes
+
+        (V, key), spikes = jax.lax.scan(body, (V, key), counts)
+        return V, key, spikes
+
+    def _scan_batch_impl(self, key, counts, axonW, neuronW):
+        B = counts.shape[0]
+        keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(jnp.arange(B))
+        V0 = jnp.zeros((B, self.n_neurons), jnp.int32)
+        _, _, spikes = jax.vmap(
+            self._scan_impl, in_axes=(0, 0, 0, None, None))(
+            V0, keys, counts, axonW, neuronW)
+        return spikes
+
+    def run(self, schedule):
+        """T timesteps in one dispatch. schedule: (T, A) int32 counts or a
+        length-T sequence of axon-index sequences. Returns (T, N) bool."""
+        counts = self._encode(schedule)
+        self.V, self.key, spikes = self._scan(self.V, self.key,
+                                              jnp.asarray(counts),
+                                              self.axonW, self.neuronW)
+        return np.asarray(spikes)
+
+    def run_batch(self, schedules):
+        """(B, T, A) counts or a length-B sequence of `run`-style
+        schedules -> (B, T, N) bool spikes; sample b runs from V = 0 under
+        fold_in(key, b) (identical to EventEngine.run_batch)."""
+        # every per-sample slice goes through _encode so 3-D count arrays
+        # get the same width/dtype validation as 2-D `run` schedules
+        if len(schedules) == 0:
+            return np.zeros((0, 0, self.n_neurons), bool)
+        counts = np.stack([self._encode(s) for s in schedules])
+        spikes = self._scan_batch(self.key, jnp.asarray(counts),
+                                  self.axonW, self.neuronW)
+        self.key, _ = jax.random.split(self.key)
+        return np.asarray(spikes)
+
+    def _encode(self, schedule):
+        # Only an actual ndarray is taken as a pre-encoded counts matrix;
+        # a plain list of axon-index lists (even a rectangular one) is
+        # always per-element events, per run()'s contract.
+        if isinstance(schedule, (np.ndarray, jnp.ndarray)) \
+                and schedule.ndim == 2:
+            if schedule.shape[-1] != self.n_axons:
+                raise ValueError(
+                    f"schedule width {schedule.shape[-1]} != "
+                    f"n_axons {self.n_axons}")
+            from repro.core.engine import _check_count_dtype
+            _check_count_dtype(schedule)
+            return np.asarray(schedule, np.int32)
+        counts = np.zeros((len(schedule), self.n_axons), np.int32)
+        for t, ids in enumerate(schedule):
+            for i in ids:
+                if 0 <= i < self.n_axons:   # drop unknown ids, like step()
+                    counts[t, i] += 1
+        return counts

@@ -139,10 +139,14 @@ def train_spiking(model: SpikingModel, frames, labels, *, epochs=6, lr=1e-3,
 
 # ------------------------------------------------------- integer reference
 def _if_leak(V):
-    """Engine-exact λ=63 'leak': V -= V // 2^63 — a +1/step drift for
-    negative membranes under the published floor-division semantics
-    (core.neuron.leak); positive membranes are untouched."""
-    return V - (V // (1 << 62))
+    """Engine-exact λ=63 'leak': V -= floor(V / 2^63) — a +1/step drift for
+    negative membranes under the published floor-division semantics,
+    positive membranes untouched. For int64 V the floor quotient is just
+    the sign bit, so compute it as an arithmetic shift (V >> 63 is 0 for
+    V >= 0, -1 for V < 0); `core.neuron.leak` does the same with V >> 31
+    on its int32 membranes, and tests/test_leak_exact.py pins all three
+    implementations (neuron.leak, kernels lif_step, this) to each other."""
+    return V - (V >> 63)
 
 
 def simulate_quantized(model: SpikingModel, qparams, frames) -> np.ndarray:
@@ -227,6 +231,7 @@ def infer_frames(net: CRI_network, frames_one, model: SpikingModel,
     T = frames_one.shape[0]
     depth = len(model.layers) + 1
     counts = np.zeros((len(out_keys),), np.int64)
+    out_index = {k: i for i, k in enumerate(out_keys)}
     bias_keys = [f"bias_l{i}" for i in range(depth)]
     for t in range(T + depth):
         active = list(bias_keys)
@@ -235,5 +240,32 @@ def infer_frames(net: CRI_network, frames_one, model: SpikingModel,
             active += [f"x{i}" for i in np.nonzero(flat)[0]]
         fired = net.step(active)
         for k in fired:
-            counts[out_keys.index(k)] += 1
+            counts[out_index[k]] += 1
     return int(np.argmax(counts)), counts
+
+
+def infer_frames_batch(net: CRI_network, frames, model: SpikingModel,
+                       out_keys: Sequence[str]):
+    """Table-2-style evaluation, B samples per dispatch: encode all
+    samples' frames into one (B, T + depth, A) axon-count tensor and run it
+    through `CRI_network.run_batch` (one vmapped lax.scan on the engine).
+    Returns (preds (B,), spike_counts (B, n_outputs)) — per sample exactly
+    what `infer_frames` computes (the converted nets disable noise, so
+    batch PRNG streams cannot introduce divergence)."""
+    frames = np.asarray(frames)
+    B, T = frames.shape[:2]
+    depth = len(model.layers) + 1
+    A = len(net.axon_keys)
+    sched = np.zeros((B, T + depth, A), np.int32)
+    bias_ids = [net._aid[f"bias_l{i}"] for i in range(depth)]
+    sched[:, :, bias_ids] = 1                      # biases fire every step
+    flat = frames.reshape(B, T, -1) != 0
+    pix_ids = np.asarray([net._aid[f"x{i}"]
+                          for i in range(flat.shape[-1])])
+    sched[:, :T, pix_ids] = flat
+    out_spikes = net.run_batch(sched)              # (B, T+depth, n_out)
+    # run_batch orders columns by net.outputs; reorder to out_keys
+    col = {k: i for i, k in enumerate(net.outputs)}
+    order = np.asarray([col[k] for k in out_keys])
+    counts = out_spikes.sum(axis=1).astype(np.int64)[:, order]
+    return counts.argmax(axis=1), counts

@@ -16,13 +16,8 @@ def spike_matmul_ref(spikes, weights):
 def lif_step_ref(V, syn_in, noise_u, theta, nu, lam, is_lif):
     """Fused LIF/ANN timestep oracle (Table 1 semantics; noise bits are
     pre-generated 17-bit draws, shift applied inside)."""
-    from repro.core.neuron import leak
-    u = noise_u | 1
-    pos = jnp.minimum(jnp.maximum(nu, 0), 31)
-    neg = jnp.minimum(jnp.maximum(-nu, 0), 31)
-    mag = jnp.abs(u) >> neg
-    xi = jnp.where(nu >= 0, u << pos, jnp.sign(u) * mag)
-    V = V + xi
+    from repro.core.neuron import leak, noise_from_u
+    V = V + noise_from_u(noise_u, nu)
     spikes = V > theta
     V = jnp.where(spikes, 0, V)
     V = jnp.where(is_lif, leak(V, lam), 0)

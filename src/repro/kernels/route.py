@@ -1,0 +1,305 @@
+"""Vectorized two-phase HiAER event routing — §4 / Fig. 2 in array form.
+
+The seed engine walked the pointer queue in host Python, one pointer and
+one synapse row at a time. Here both phases are data-parallel over the
+whole (rows, 16-slot) HBM table:
+
+  phase 1 (pointer fetch) becomes two gathers through the `FlatImage`
+  inverse-pointer maps: a row is "live" iff its owning axon was driven or
+  its owning neuron fired this step — `row_gate` is the per-row event
+  count (axons may be driven multiple times per step, matching the seed
+  queue semantics);
+
+  phase 2 (synapse fetch + accumulate) becomes a masked gather +
+  `segment_sum` over all (row, slot) lanes: every slot's weight is scaled
+  by its row's gate and scattered to its postsynaptic neuron. Empty slots
+  hold weight 0 and A.3 filler records are zero-weight by construction, so
+  the dense formulation is bit-exact vs the event queue (int32 wraparound
+  addition is associative and order-free).
+
+Two implementations:
+
+  * `route_event_counts` + `accumulate` — pure jnp, jit/vmap/scan friendly;
+    the production path (`EventEngine.step/run/run_batch`).
+  * `fused_route_lif_step` — a Pallas kernel that folds the slot-lane
+    accumulation into the `lif_step` membrane update: the grid walks row
+    blocks accumulating per-lane partial sums in the output ref, and the
+    final grid step applies noise/threshold/reset/leak/integrate in the
+    same VMEM pass, so V is read and written exactly once per timestep
+    (the URAM-resident membrane file of the FPGA; V never round-trips to
+    HBM between the two phases).
+
+Access statistics (`pointer_reads`, `row_reads`) are computed from the
+same gathers and are integer-identical to the seed `AccessCounter`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import neuron as nrn
+from repro.core.hbm import SLOTS, FlatImage
+
+ROW_BLOCK = 32          # synapse rows per fused-kernel grid step
+
+
+class RouteTables(NamedTuple):
+    """Device-resident copy of `FlatImage` (int32/bool jnp arrays), plus a
+    precomputed fan-in transpose of the synapse table.
+
+    XLA's CPU scatter-add makes `segment_sum` the bottleneck (~10x slower
+    than the rest of the step), so the default accumulate path inverts the
+    table once at build time: for every postsynaptic neuron, `fanin_src`
+    lists the flattened (row * SLOTS + slot) positions of all synapse
+    records targeting it, padded to the max in-degree with a sentinel that
+    points at an appended always-zero weight. Phase 2 is then pure
+    gathers + a row-wise sum — no scatter anywhere. int32 wraparound
+    addition is order-free, so this is bit-exact vs the event queue."""
+    syn_post: jnp.ndarray          # (R, SLOTS)
+    syn_weight: jnp.ndarray        # (R, SLOTS)
+    axon_rows: jnp.ndarray         # (A,)
+    axon_present: jnp.ndarray      # (A,) bool
+    neuron_rows: jnp.ndarray       # (N,)
+    neuron_present: jnp.ndarray    # (N,) bool
+    row_owner_axon: jnp.ndarray    # (R,)
+    row_owner_neuron: jnp.ndarray  # (R,)
+    fanin_src: jnp.ndarray         # (n_neurons, max_indeg) int32
+    fanin_row: jnp.ndarray         # (n_neurons, max_indeg) int32
+    syn_weight_ext: jnp.ndarray    # (R * SLOTS + 1,) int32, [-1] == 0
+
+    @classmethod
+    def from_flat(cls, flat: FlatImage, n_neurons: int,
+                  build_fanin: bool = True) -> "RouteTables":
+        """build_fanin=False skips the transpose (placeholder arrays) for
+        topologies where max-in-degree padding would blow up — see
+        `fanin_is_economical`; `route` then uses the scatter path."""
+        if build_fanin:
+            src, row = _fanin_transpose(flat, n_neurons)
+        else:
+            # zero-size placeholders: a real transpose is never empty
+            # (every neuron owns at least one filler synapse), so
+            # `route(use_fanin=True)` can reject these loudly.
+            src = np.zeros((0, 1), np.int32)
+            row = np.zeros((0, 1), np.int32)
+        w_ext = np.append(flat.syn_weight.reshape(-1), np.int32(0))
+        return cls(
+            syn_post=jnp.asarray(flat.syn_post),
+            syn_weight=jnp.asarray(flat.syn_weight),
+            axon_rows=jnp.asarray(flat.axon_rows),
+            axon_present=jnp.asarray(flat.axon_present),
+            neuron_rows=jnp.asarray(flat.neuron_rows),
+            neuron_present=jnp.asarray(flat.neuron_present),
+            row_owner_axon=jnp.asarray(flat.row_owner_axon),
+            row_owner_neuron=jnp.asarray(flat.row_owner_neuron),
+            fanin_src=jnp.asarray(src),
+            fanin_row=jnp.asarray(row),
+            syn_weight_ext=jnp.asarray(w_ext, jnp.int32),
+        )
+
+    def with_weights(self, syn_weight) -> "RouteTables":
+        """Refresh after an in-place weight edit (same sparsity pattern)."""
+        w = np.asarray(syn_weight, np.int32)
+        w_ext = np.append(w.reshape(-1), np.int32(0))
+        return self._replace(syn_weight=jnp.asarray(w),
+                             syn_weight_ext=jnp.asarray(w_ext))
+
+
+def fanin_is_economical(flat: FlatImage, n_neurons: int,
+                        max_expand: float = 8.0) -> bool:
+    """The fan-in transpose pads every neuron to the global max in-degree,
+    so a single hub neuron can inflate it to N x max_indeg. Use it only
+    when the padded size stays within `max_expand` x the actual synapse
+    count; otherwise the engine routes through `accumulate_scatter`
+    (linear in table size, but a serial scatter-add on CPU XLA)."""
+    flat_post = flat.syn_post.reshape(-1)
+    valid = flat_post >= 0
+    nnz = int(valid.sum())
+    if nnz == 0:
+        return True
+    deg = np.bincount(np.clip(flat_post[valid], 0, max(n_neurons - 1, 0)),
+                      minlength=max(n_neurons, 1))
+    return n_neurons * int(deg.max()) <= max_expand * nnz + 1024
+
+
+def _fanin_transpose(flat: FlatImage, n_neurons: int):
+    """(N, max_indeg) source-position and source-row matrices. A.3 filler
+    posts beyond n_neurons - 1 are clipped like the seed loop (their
+    weight is 0 by construction); pad entries use the sentinel R * SLOTS
+    (appended zero weight), so no separate mask is needed."""
+    flat_post = flat.syn_post.reshape(-1)
+    sentinel = flat_post.size
+    pos = np.nonzero(flat_post >= 0)[0]
+    tgt = np.clip(flat_post[pos], 0, max(n_neurons - 1, 0))
+    order = np.argsort(tgt, kind="stable")
+    pos, tgt = pos[order], tgt[order]
+    deg = np.bincount(tgt, minlength=n_neurons)
+    maxdeg = max(int(deg.max()) if deg.size else 0, 1)
+    src = np.full((max(n_neurons, 1), maxdeg), sentinel, np.int32)
+    ptr = np.zeros(n_neurons + 1, np.int64)
+    np.cumsum(deg, out=ptr[1:])
+    if pos.size:
+        # pos is stably sorted by tgt, so each entry's column is its
+        # global rank minus its neuron's group start — one scatter.
+        col = np.arange(pos.size, dtype=np.int64) - ptr[tgt]
+        src[tgt, col] = pos
+    row = np.minimum(src // SLOTS, flat.syn_post.shape[0] - 1).astype(
+        np.int32)
+    return src, row
+
+
+def route_event_counts(tables: RouteTables, axon_counts, spikes):
+    """Phase-1 bookkeeping: per-row event gate + exact HBM access counts.
+
+    axon_counts: (A,) int32 — how many times each axon was driven this
+    step (seed queue enqueued one pointer per occurrence).
+    spikes: (N,) bool — neurons that fired this step.
+
+    Returns (row_gate (R,) int32, pointer_reads, row_reads) where the two
+    scalars match the seed `AccessCounter` increments bit for bit."""
+    ax_ct = axon_counts * tables.axon_present
+    nr_ct = spikes.astype(jnp.int32) * tables.neuron_present
+    n_a = tables.axon_rows.shape[0]
+    n_n = tables.neuron_rows.shape[0]
+    gate_a = jnp.where(
+        tables.row_owner_axon >= 0,
+        ax_ct[jnp.clip(tables.row_owner_axon, 0, n_a - 1)], 0)
+    gate_n = jnp.where(
+        tables.row_owner_neuron >= 0,
+        nr_ct[jnp.clip(tables.row_owner_neuron, 0, n_n - 1)], 0)
+    pointer_reads = ax_ct.sum() + nr_ct.sum()
+    row_reads = ((ax_ct * tables.axon_rows).sum()
+                 + (nr_ct * tables.neuron_rows).sum())
+    return gate_a + gate_n, pointer_reads, row_reads
+
+
+def accumulate_scatter(tables: RouteTables, row_gate, n_neurons: int):
+    """Phase 2 as gated gather + segment_sum over the (R, SLOTS) lanes.
+    Returns syn_in (n_neurons,) int32. A.3 filler posts may exceed
+    n_neurons - 1; they are zero-weight, so the clip is numerically inert
+    (same trick as the seed loop). Kept as the scatter formulation (the
+    natural one on TPU); CPU XLA lowers it to a serial scatter-add, which
+    is why the engine default is `accumulate` below."""
+    w = tables.syn_weight * row_gate[:, None]
+    idx = jnp.clip(tables.syn_post, 0, n_neurons - 1)
+    w = jnp.where(tables.syn_post >= 0, w, 0)
+    return jax.ops.segment_sum(w.reshape(-1), idx.reshape(-1),
+                               num_segments=n_neurons)
+
+
+def accumulate(tables: RouteTables, row_gate, n_neurons: int):
+    """Phase 2 via the precomputed fan-in transpose: per-neuron gathers of
+    (weight, owning-row gate) followed by a row-wise sum — scatter-free.
+    Bit-exact vs `accumulate_scatter` and the seed event queue."""
+    if tables.fanin_src.shape[0] == 0:
+        raise ValueError("tables built with build_fanin=False; use "
+                         "accumulate_scatter (route(use_fanin=False))")
+    w = tables.syn_weight_ext[tables.fanin_src]      # (N, D)
+    g = row_gate[tables.fanin_row]                   # (N, D)
+    return jnp.sum(w * g, axis=1)[:n_neurons]
+
+
+def route(tables: RouteTables, axon_counts, spikes, n_neurons: int,
+          use_fanin: bool = True):
+    """Full two-phase routing step. Returns (syn_in, ptr_reads, row_reads).
+    `use_fanin` is a trace-time switch between the gather (fan-in
+    transpose) and scatter (segment_sum) accumulate formulations."""
+    gate, ptr_reads, row_reads = route_event_counts(tables, axon_counts,
+                                                    spikes)
+    acc = accumulate if use_fanin else accumulate_scatter
+    return acc(tables, gate, n_neurons), ptr_reads, row_reads
+
+
+# ----------------------------------------------------- fused Pallas variant
+def _pad_rows(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=0)
+
+
+def _fused_kernel(post_ref, w_ref, V_ref, u_ref, theta_ref, nu_ref,
+                  lam_ref, lif_ref, Vout_ref):
+    pi = pl.program_id(0)
+    nb = pl.num_programs(0)
+    n16 = Vout_ref.shape[0]
+
+    @pl.when(pi == 0)
+    def _init():
+        Vout_ref[...] = jnp.zeros_like(Vout_ref)
+
+    # --- accumulate this row block's gated weights into the (n16, SLOTS)
+    # lane accumulator (Vout doubles as the accumulator until the final
+    # grid step). Slot alignment (slot == post % 16) means slot s only
+    # ever feeds lane s, so the scatter is a per-lane one-hot reduction.
+    post = post_ref[...]                         # (ROW_BLOCK, SLOTS)
+    w = w_ref[...]                               # gated, 0 where inactive
+    ids16 = jnp.maximum(post, 0) // SLOTS        # target row in the lane file
+    onehot = (ids16[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32,
+                                          (1, 1, n16), 2))
+    contrib = jnp.sum(w[:, :, None] * onehot, axis=0)      # (SLOTS, n16)
+    Vout_ref[...] += contrib.T
+
+    # --- final grid step: the lif_step membrane pass, reading V once and
+    # writing the integrated result over the accumulator in place.
+    @pl.when(pi == nb - 1)
+    def _membrane():
+        V = V_ref[...]
+        V = V + nrn.noise_from_u(u_ref[...], nu_ref[...])
+        spikes = V > theta_ref[...]
+        V = jnp.where(spikes, 0, V)
+        V = jnp.where(lif_ref[...] != 0, nrn.leak(V, lam_ref[...]), 0)
+        Vout_ref[...] = V + Vout_ref[...]
+
+
+def fused_route_lif_step(tables: RouteTables, axon_counts, V, noise_u,
+                         theta, nu, lam, is_lif, *, interpret=None):
+    """One fused engine timestep: fire + route + integrate in one kernel.
+
+    Spikes are derived twice from the same (V, noise) — once here in jnp to
+    gate the synapse rows, once inside the kernel for the reset — which is
+    cheaper than materializing V_mid between phases (the seed engine wrote
+    V after fire_phase and read it back for integrate_phase).
+
+    All neuron vectors are (N,) int32 (is_lif bool); returns
+    (V_next (N,), spikes (N,) bool, ptr_reads, row_reads), bit-exact vs
+    `core.neuron.fire_phase` + `route` + `integrate_phase`."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = V.shape[0]
+    spikes = (V + nrn.noise_from_u(noise_u, nu)) > theta
+    gate, ptr_reads, row_reads = route_event_counts(tables, axon_counts,
+                                                    spikes)
+    w = tables.syn_weight * gate[:, None]
+    w = jnp.where(tables.syn_post >= 0, w, 0)
+    post = _pad_rows(tables.syn_post, ROW_BLOCK)
+    w = _pad_rows(w, ROW_BLOCK)
+
+    # membrane file as (n16, SLOTS) — neuron id n lives at (n // 16, n % 16),
+    # the paper's 16-lane layout. Pad N to a whole number of lane rows; the
+    # pad region only ever receives zero-weight filler contributions.
+    n16 = max((n + SLOTS - 1) // SLOTS, 1)
+
+    def to_lane(x):
+        pad = n16 * SLOTS - n
+        x = jnp.pad(x, (0, pad), constant_values=0)
+        return x.reshape(n16, SLOTS)
+
+    row_blocks = post.shape[0] // ROW_BLOCK
+    rspec = pl.BlockSpec((ROW_BLOCK, SLOTS), lambda i: (i, 0))
+    fspec = pl.BlockSpec((n16, SLOTS), lambda i: (0, 0))
+    V_out = pl.pallas_call(
+        _fused_kernel,
+        grid=(row_blocks,),
+        in_specs=[rspec, rspec] + [fspec] * 6,
+        out_specs=fspec,
+        out_shape=jax.ShapeDtypeStruct((n16, SLOTS), jnp.int32),
+        interpret=interpret,
+    )(post, w, to_lane(V), to_lane(noise_u), to_lane(theta), to_lane(nu),
+      to_lane(lam), to_lane(is_lif.astype(jnp.int32)))
+    return V_out.reshape(-1)[:n], spikes, ptr_reads, row_reads

@@ -12,19 +12,17 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh() -> Mesh:
     """Whatever devices exist, as a (1, n) ('data','model') mesh — used by
     smoke tests and the single-host examples."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, n), ("data", "model"))

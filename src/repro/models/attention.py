@@ -168,7 +168,7 @@ def _shardmap_seq_attention(q, k, v, cfg, window):
     FLOPs + a full-seq all-gather of q). Here the query axis is explicitly
     shard_map'd over 'model': each device all-gathers the (small, GQA) K/V
     once and computes only its S/16 query block."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed.context import batch_axes, get_mesh
     mesh = get_mesh()

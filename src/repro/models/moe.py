@@ -24,7 +24,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.context import batch_axes, get_mesh, tp_axis

@@ -19,7 +19,11 @@ def test_dryrun_cell_subprocess(tmp_path, arch, shape, mesh):
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
          "--shape", shape, "--mesh", mesh, "--out", str(tmp_path),
          "--force"],
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS=cpu: the dry-run compiles against 512 *virtual* host
+        # devices; without the pin, a stray libtpu install makes the fresh
+        # subprocess stall trying to initialize a real TPU backend.
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=500, cwd=str(ROOT))
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     arts = list(tmp_path.glob("*.json"))

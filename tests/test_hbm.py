@@ -1,6 +1,6 @@
 """HBM layout invariants — §4 / Fig. 2 / Fig. 7 / A.3."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import hbm
 

@@ -1,0 +1,69 @@
+"""λ = 63 leak bit-exactness across the three implementations that must
+agree (Table 1: λ=63 approximates an IF neuron):
+
+  * `core.neuron.leak`      — int32 membranes, V >> 31 for λ >= 31;
+  * `kernels lif_step`      — the fused Pallas membrane kernel;
+  * `core.spiking._if_leak` — int64 oracle, V >> 63.
+
+The published floor-division semantics (`V - V // 2^λ`) give a +1/step
+drift for negative membranes and identity for non-negative ones; the
+docstring/constant mismatch this test pins down was `_if_leak` claiming
+2^63 while shifting by 62."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.neuron import leak
+from repro.core.spiking import _if_leak
+from repro.kernels import ops
+
+
+V32 = np.array([0, 1, -1, 2, -2, 1000, -1000, 2**30, -(2**30),
+                2**31 - 1, -(2**31) + 1, 12345, -54321], np.int32)
+
+
+def _floor_ref(V, lam):
+    """Literal Fig. 8 semantics in unbounded Python ints."""
+    return np.array([v - (v // 2**lam) for v in V.tolist()], np.int64)
+
+
+def test_neuron_leak_lambda63_matches_floor_division():
+    got = np.asarray(leak(jnp.asarray(V32), jnp.int32(63)))
+    np.testing.assert_array_equal(got, _floor_ref(V32, 63).astype(np.int32))
+
+
+def test_if_leak_matches_floor_division_int64():
+    V = V32.astype(np.int64)
+    np.testing.assert_array_equal(_if_leak(V), _floor_ref(V, 63))
+    # also at int64 extremes the oracle may visit
+    big = np.array([2**62, -(2**62), 2**62 - 1, -(2**62) + 1], np.int64)
+    np.testing.assert_array_equal(_if_leak(big), _floor_ref(big, 63))
+
+
+def test_if_leak_matches_neuron_leak():
+    a = np.asarray(leak(jnp.asarray(V32), jnp.int32(63)), np.int64)
+    b = _if_leak(V32.astype(np.int64))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_lif_step_kernel_lambda63_matches():
+    """Full kernel pass with noise disabled and huge threshold: the only
+    state change is the λ=63 leak, so V_next - syn == leak(V)."""
+    n = 256
+    rng = np.random.default_rng(0)
+    V = rng.integers(-(2**30), 2**30, n).astype(np.int32)
+    syn = np.zeros(n, np.int32)
+    u = rng.integers(-(2**16), 2**16, n).astype(np.int32)
+    theta = np.full(n, 2**31 - 1, np.int32)      # never fires
+    nu = np.full(n, -32, np.int32)               # noise disabled
+    lam = np.full(n, 63, np.int32)
+    is_lif = np.ones(n, bool)
+    V_next, spikes = ops.lif_step(jnp.asarray(V), jnp.asarray(syn),
+                                  jnp.asarray(u), jnp.asarray(theta),
+                                  jnp.asarray(nu), jnp.asarray(lam),
+                                  jnp.asarray(is_lif))
+    assert not np.asarray(spikes).any()
+    np.testing.assert_array_equal(
+        np.asarray(V_next), _floor_ref(V, 63).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(V_next).astype(np.int64),
+        _if_leak(V.astype(np.int64)))

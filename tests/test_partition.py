@@ -2,7 +2,7 @@
 allocation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.partition import (Hierarchy, Job, allocate, partition,
                                   random_assignment, traffic_cost)

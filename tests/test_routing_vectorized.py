@@ -1,0 +1,272 @@
+"""Vectorized two-phase routing vs the seed per-pointer engine — the
+bit-exactness contract of this PR: spikes, membrane values, and
+AccessCounter statistics must be integer-identical on arbitrary
+topologies, including the A.3 edge cases (filler synapses on zero-fanout
+neurons, empty axons, tiny networks where filler post ids exceed
+n_neurons) and duplicated axon events."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.api import ANN_neuron, CRI_network, LIF_neuron
+from repro.core.hbm import SLOTS
+
+
+def random_net(seed, n_neurons=None, zero_fanout_frac=0.3):
+    rng = np.random.default_rng(seed)
+    n = n_neurons or int(rng.integers(2, 40))
+    n_ax = int(rng.integers(1, 7))
+    names = [f"n{i}" for i in range(n)]
+    axons = {}
+    for i in range(n_ax):
+        fan = int(rng.integers(0, min(n, 8) + 1))     # 0 => empty axon
+        tgt = rng.choice(n, fan, replace=False)
+        axons[f"a{i}"] = [(names[j], int(rng.integers(-50, 50)) or 1)
+                          for j in tgt]
+    neurons = {}
+    for k in names:
+        if rng.random() < zero_fanout_frac:
+            fan = []                                   # A.3 filler segment
+        else:
+            tgt = rng.choice(n, int(rng.integers(1, min(n, 6) + 1)),
+                             replace=False)
+            fan = [(names[j], int(rng.integers(-50, 50)) or 1) for j in tgt]
+        if rng.random() < 0.7:
+            model = LIF_neuron(threshold=int(rng.integers(0, 40)),
+                               nu=int(rng.choice([-32, -20, 0, 2])),
+                               lam=int(rng.integers(0, 64)))
+        else:
+            model = ANN_neuron(threshold=int(rng.integers(0, 40)),
+                               nu=int(rng.choice([-32, 1])))
+        neurons[k] = (fan, model)
+    outputs = [names[j] for j in
+               rng.choice(n, int(rng.integers(1, min(n, 4) + 1)),
+                          replace=False)]
+    return axons, neurons, outputs
+
+
+def make_pair(seed, **net_kw):
+    axons, neurons, outputs = random_net(seed, **net_kw)
+    vec = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=seed)
+    ref = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=seed, vectorized=False)
+    return vec, ref, list(axons)
+
+
+def drive(seed, net, ax_keys, steps=15):
+    rng = random.Random(seed)
+    outs = []
+    for _ in range(steps):
+        inp = rng.sample(ax_keys, k=rng.randint(0, len(ax_keys)))
+        f, p = net.step(inp, membranePotential=True)
+        outs.append((f, p))
+    return outs
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_step_parity_random_networks(seed):
+    vec, ref, ax = make_pair(seed)
+    assert drive(seed, vec, ax) == drive(seed, ref, ax)
+    assert vec.counter.as_dict() == ref.counter.as_dict()
+
+
+def test_step_parity_tiny_net_filler_out_of_range():
+    """n_neurons < SLOTS: A.3 filler posts (0..15) exceed the neuron id
+    range and must stay numerically inert in both paths."""
+    for seed in range(4):
+        vec, ref, ax = make_pair(100 + seed, n_neurons=3,
+                                 zero_fanout_frac=0.8)
+        assert vec._impl.n < SLOTS
+        assert drive(seed, vec, ax) == drive(seed, ref, ax)
+        assert vec.counter.as_dict() == ref.counter.as_dict()
+
+
+def test_duplicate_axon_events_double_count():
+    """An axon listed twice in a step is two events: weights applied twice
+    and two pointer reads — on every path (engine vectorized/reference,
+    simulator, and run() vs the step loop)."""
+    lif = LIF_neuron(threshold=100, nu=-32, lam=63)
+    axons = {"a": [("x", 7)]}
+    neurons = {"x": ([], lif)}
+
+    def mk(backend):
+        return CRI_network(axons=axons, neurons=neurons, outputs=["x"],
+                           backend=backend, seed=0)
+
+    vec = mk("engine")
+    ref = CRI_network(axons=axons, neurons=neurons, outputs=["x"],
+                      backend="engine", seed=0, vectorized=False)
+    sim = mk("simulator")
+    for net in (vec, ref, sim):
+        net.step(["a", "a"])
+        assert net.read_membrane("x") == [14]
+    assert vec.counter.as_dict() == ref.counter.as_dict()
+    assert vec.counter.pointer_reads == 2
+    for backend in ("engine", "simulator"):
+        net = mk(backend)
+        net.run([["a", "a"]])
+        assert net.read_membrane("x") == [14]
+
+
+@pytest.mark.parametrize("dense_pack", [True, False])
+def test_run_matches_sequential_steps(dense_pack):
+    axons, neurons, outputs = random_net(7)
+    mk = lambda: CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                             backend="engine", seed=11,
+                             dense_pack=dense_pack)
+    a, b = mk(), mk()
+    rng = random.Random(5)
+    sched = [rng.sample(list(axons), k=rng.randint(0, len(axons)))
+             for _ in range(25)]
+    fired_run = a.run(sched)
+    fired_seq = [b.step(s) for s in sched]
+    assert fired_run == fired_seq
+    assert a.counter.as_dict() == b.counter.as_dict()
+    assert a.read_membrane(*a.neuron_keys) == b.read_membrane(*b.neuron_keys)
+
+
+def test_run_batch_parity_vectorized_vs_reference():
+    for seed in range(4):
+        vec, ref, ax = make_pair(seed)
+        rng = np.random.default_rng(seed)
+        batch = rng.integers(0, 2, (3, 10, len(ax))).astype(np.int32)
+        sv = vec.run_batch(batch)
+        sr = ref.run_batch(batch)
+        np.testing.assert_array_equal(sv, sr)
+        assert vec.counter.as_dict() == ref.counter.as_dict()
+
+
+def test_run_batch_parity_engine_vs_simulator():
+    """Both backends derive sample streams as fold_in(key, b), so batch
+    results agree bit-for-bit even with noise enabled."""
+    axons, neurons, outputs = random_net(21)
+    e = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                    backend="engine", seed=13)
+    s = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                    backend="simulator", seed=13)
+    rng = np.random.default_rng(2)
+    batch = rng.integers(0, 3, (4, 12, len(axons))).astype(np.int32)
+    np.testing.assert_array_equal(e.run_batch(batch), s.run_batch(batch))
+
+
+def test_run_batch_leaves_sequential_state_untouched():
+    vec, _, ax = make_pair(3)
+    vec.step(ax[:1])
+    V_before = vec.read_membrane(*vec.neuron_keys)
+    rng = np.random.default_rng(0)
+    vec.run_batch(rng.integers(0, 2, (2, 5, len(ax))).astype(np.int32))
+    assert vec.read_membrane(*vec.neuron_keys) == V_before
+
+
+def test_fused_pallas_step_parity():
+    """The fused route+lif Pallas kernel (interpret mode) is bit-exact vs
+    the segment_sum path."""
+    for seed in (0, 5):
+        axons, neurons, outputs = random_net(seed)
+        fused = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                            backend="engine", seed=seed, use_pallas=True)
+        plain = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                            backend="engine", seed=seed)
+        assert drive(seed, fused, list(axons), steps=6) == \
+            drive(seed, plain, list(axons), steps=6)
+        assert fused.counter.as_dict() == plain.counter.as_dict()
+
+
+def test_write_synapse_reaches_vectorized_tables():
+    """Weight edits must reach every execution path — including scans that
+    were already jit-compiled before the edit — on both backends."""
+    lif = LIF_neuron(threshold=1000, nu=-32, lam=63)
+    axons = {"a": [("x", 7)]}
+    neurons = {"x": ([], lif)}
+    for backend in ("engine", "simulator"):
+        net = CRI_network(axons=axons, neurons=neurons, outputs=["x"],
+                          backend=backend, seed=0)
+        net.step(["a"])
+        assert net.read_membrane("x") == [7]
+        net.write_synapse("a", "x", 11)
+        net.step(["a"])
+        assert net.read_membrane("x") == [18]
+        # compiled-scan path sees the edit too
+        net.reset()
+        net.run([["a"]])                  # traces the scan at weight 11
+        assert net.read_membrane("x") == [11]
+        net.write_synapse("a", "x", 2)
+        net.reset()
+        net.run([["a"]])                  # same compiled scan, new weight
+        assert net.read_membrane("x") == [2]
+
+
+def test_jnp_array_schedules_accepted():
+    import jax.numpy as jnp
+    lif = LIF_neuron(threshold=1000, nu=-32, lam=63)
+    for backend in ("engine", "simulator"):
+        net = CRI_network(axons={"a": [("x", 7)]}, neurons={"x": ([], lif)},
+                          outputs=["x"], backend=backend, seed=0)
+        net.run(jnp.ones((2, 1), jnp.int32))
+        assert net.read_membrane("x") == [14]
+        out = net.run_batch(jnp.ones((2, 2, 1), jnp.int32))
+        assert out.shape == (2, 2, 1)
+
+
+def test_hub_topology_scatter_fallback_parity():
+    """A hub neuron whose fan-in dwarfs the median forces the engine off
+    the padded fan-in transpose onto the scatter accumulate — results and
+    stats must not change."""
+    from repro.kernels.route import fanin_is_economical
+    n = 400
+    lif = LIF_neuron(threshold=20, nu=-32, lam=5)
+    names = [f"n{i}" for i in range(n)]
+    neurons = {k: ([("hub", 3)], lif) for k in names}   # all feed the hub
+    neurons["hub"] = ([(names[0], 1)], lif)
+    axons = {"a0": [(names[i], 30) for i in range(0, n, 7)]}
+    vec = CRI_network(axons=axons, neurons=neurons, outputs=["hub"],
+                      backend="engine", seed=1)
+    assert not vec._impl._use_fanin
+    assert not fanin_is_economical(vec._impl.flat, vec._impl.n)
+    ref = CRI_network(axons=axons, neurons=neurons, outputs=["hub"],
+                      backend="engine", seed=1, vectorized=False)
+    for _ in range(6):
+        f1, p1 = vec.step(["a0"], membranePotential=True)
+        f2, p2 = ref.step(["a0"], membranePotential=True)
+        assert (f1, p1) == (f2, p2)
+    assert vec.counter.as_dict() == ref.counter.as_dict()
+
+
+def test_unknown_axon_ids_dropped_on_both_backends():
+    """Out-of-range axon ids are silently dropped (seed engine used
+    dict.get) — engine and simulator must agree."""
+    lif = LIF_neuron(threshold=100, nu=-32, lam=63)
+    for backend in ("engine", "simulator"):
+        net = CRI_network(axons={"a": [("x", 5)]}, neurons={"x": ([], lif)},
+                          outputs=["x"], backend=backend, seed=0)
+        net._impl.step([0, 7, -3])      # raw backend ids, 7/-3 unknown
+        assert net.read_membrane("x") == [5]
+
+
+def test_flatten_invariants():
+    """FlatImage owner maps and CSR agree with the pointer dicts."""
+    axons, neurons, outputs = random_net(17)
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=0)
+    img, flat = net.image, net._impl.flat
+    for aid, ptr in img.axon_ptr.items():
+        assert flat.axon_present[aid]
+        assert flat.axon_base[aid] == ptr.base_row
+        assert flat.axon_rows[aid] == ptr.n_rows
+        span = flat.axon_row_indices[flat.axon_row_indptr[aid]:
+                                     flat.axon_row_indptr[aid + 1]]
+        np.testing.assert_array_equal(
+            span, np.arange(ptr.base_row, ptr.base_row + ptr.n_rows))
+        assert (flat.row_owner_axon[span] == aid).all()
+    for nid, ptr in img.neuron_ptr.items():
+        assert flat.neuron_present[nid]
+        span = flat.neuron_row_indices[flat.neuron_row_indptr[nid]:
+                                       flat.neuron_row_indptr[nid + 1]]
+        np.testing.assert_array_equal(
+            span, np.arange(ptr.base_row, ptr.base_row + ptr.n_rows))
+        assert (flat.row_owner_neuron[span] == nid).all()
+    # every row has at most one owner of each kind, and owners are disjoint
+    both = (flat.row_owner_axon >= 0) & (flat.row_owner_neuron >= 0)
+    assert not both.any()
