@@ -1,0 +1,134 @@
+"""Hierarchical multi-core scaling benchmark — events/sec and measured
+per-level event traffic of the hiaer execution tier vs core count, BFS
+(locality-first partitioner) vs random placement, on a clustered
+topology (the paper's 'grey matter local, white matter sparse' regime).
+
+For each core count C the hierarchy shape activates successively more
+interconnect levels (1 core -> trivial; 2 -> NoC; 4 -> NoC + FireFly;
+8 -> + Ethernet). Events/sec counts synaptic events = HBM row reads x 16
+slot lanes (same metric as sim_throughput.py); traffic is the
+AccessCounter's measured per-level (source -> destination core)
+deliveries, which `partition.traffic_cost` only estimates statically.
+
+Results go to BENCH_hiaer.json (CI artifact). The structural claim the
+paper's partitioner rests on — BFS placement strictly reduces
+cross-level traffic vs random placement on clustered topologies — is
+checked for every C > 1 and recorded per data point; any violation exits
+nonzero so CI catches a partitioner regression.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.api import CRI_network, LIF_neuron
+from repro.core.costmodel import LEVEL_NAMES
+from repro.core.hbm import SLOTS
+from repro.core.partition import Hierarchy, random_assignment
+
+# hierarchy shapes per core count: (servers, fpgas/server, cores/fpga)
+HIER_SHAPES = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2), 8: (2, 2, 2)}
+
+
+def clustered_net(n_clusters, size, fan_in_cluster=6, fan_out_cluster=1,
+                  threshold=40, seed=0):
+    """Clustered random SNN: dense within clusters, sparse across —
+    the topology BFS placement is supposed to exploit."""
+    rng = np.random.default_rng(seed)
+    n = n_clusters * size
+    names = [f"n{i}" for i in range(n)]
+    lif = LIF_neuron(threshold=threshold, nu=-32, lam=3)
+    neurons = {}
+    for i in range(n):
+        c0 = (i // size) * size
+        inside = c0 + rng.choice(size, min(fan_in_cluster, size),
+                                 replace=False)
+        outside = rng.choice(n, fan_out_cluster, replace=False)
+        fan = [(names[int(j)], int(rng.integers(5, 20)))
+               for j in np.concatenate([inside, outside]) if j != i]
+        neurons[names[i]] = (fan, lif)
+    # one driving axon per cluster, fanning into its own cluster
+    axons = {f"a{c}": [(names[c * size + int(j)], 30)
+                       for j in rng.choice(size, min(8, size),
+                                           replace=False)]
+             for c in range(n_clusters)}
+    return axons, neurons, names[:4]
+
+
+def _run_point(axons, neurons, outputs, hier, placement, sched, steps):
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="hiaer", seed=2, hierarchy=hier,
+                      placement=placement)
+    net.run(sched)                        # compile at the timed shape
+    net.reset(); net.counter.reset()
+    t0 = time.time()
+    net.run(sched)
+    dt = time.time() - t0
+    c = net.counter
+    point = {
+        "us_per_step": 1e6 * dt / steps,
+        "events_per_sec": c.row_reads * SLOTS / max(dt, 1e-9),
+        "cross_level_events": c.cross_level_events,
+        "shards": net._impl.shards.stats(),
+    }
+    for k, v in zip(LEVEL_NAMES, c.level_events):
+        point[f"events_{k}"] = v
+    return point
+
+
+def run(n_clusters=16, size=64, steps=100, core_counts=(1, 2, 4, 8),
+        quiet=False, out_json="BENCH_hiaer.json"):
+    axons, neurons, outputs = clustered_net(n_clusters, size)
+    n = len(neurons)
+    rng = np.random.default_rng(1)
+    ax_keys = list(axons)
+    sched = [[k for k in rng.choice(ax_keys, 3, replace=False)]
+             for _ in range(steps)]
+
+    results = {"n_neurons": n, "n_clusters": n_clusters, "steps": steps,
+               "by_cores": {}}
+    failures = []
+    for C in core_counts:
+        s, f, k = HIER_SHAPES[C]
+        hier = Hierarchy(s, f, k, -(-n // C))
+        bfs = _run_point(axons, neurons, outputs, hier, None, sched,
+                         steps)
+        rnd_asg = random_assignment({k: None for k in neurons}, hier,
+                                    seed=3)
+        rnd = _run_point(axons, neurons, outputs, hier, rnd_asg, sched,
+                         steps)
+        entry = {"hierarchy": [s, f, k], "bfs": bfs, "random": rnd}
+        if C > 1:
+            ok = bfs["cross_level_events"] < rnd["cross_level_events"]
+            entry["bfs_beats_random"] = ok
+            if not ok:
+                failures.append(C)
+        results["by_cores"][str(C)] = entry
+        if not quiet:
+            print(f"hiaer_scaling,cores={C},"
+                  f"bfs={bfs['events_per_sec']:.3e}ev/s,"
+                  f"bfs_cross={bfs['cross_level_events']},"
+                  f"rnd_cross={rnd['cross_level_events']}")
+
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(results, fh, indent=2)
+    if failures:
+        raise SystemExit(
+            f"BFS placement did not beat random placement on cross-level "
+            f"traffic at core counts {failures} — partitioner regression")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_clusters=8, size=16, steps=25, core_counts=(1, 2, 4))
+    else:
+        run()

@@ -2,8 +2,8 @@
 cost; Mosaic timings require real TPUs). Reports event-driven savings: the
 spike kernel's gated-block fraction at representative activity levels —
 the quantity that scales HBM traffic on hardware (paper §4/§6) — plus the
-two-phase routing kernels (segment-sum vs fan-in-gather accumulate, and
-the fused route+LIF Pallas step vs its unfused oracle).
+two-phase routing kernels (fan-in-gather vs CSR-segment vs segment-sum
+accumulate, and the fused route+LIF Pallas step vs its unfused oracle).
 
 `--smoke` runs one small size per kernel (the CI job).
 """
@@ -44,6 +44,7 @@ def _bench_routing(quiet=False, smoke=False):
     iters = 3 if smoke else 20
     rows = []
     for name, fn in (("fanin_gather", route_k.accumulate),
+                     ("csr_segment", route_k.accumulate_csr),
                      ("segment_sum", route_k.accumulate_scatter)):
         f = jax.jit(lambda g, fn=fn: fn(tables, g, n))
         out = f(gate)
@@ -58,7 +59,9 @@ def _bench_routing(quiet=False, smoke=False):
             print(f"kernel,route_{name},us={us:.0f}")
     a = jax.jit(lambda g: route_k.accumulate(tables, g, n))(gate)
     b = jax.jit(lambda g: route_k.accumulate_scatter(tables, g, n))(gate)
+    c = jax.jit(lambda g: route_k.accumulate_csr(tables, g, n))(gate)
     assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(a), np.asarray(c))
 
     # fused route+LIF Pallas step vs the unfused two-phase oracle
     from repro.core import neuron as nrn

@@ -12,11 +12,19 @@
     net = CRI_network(axons=axons, neurons=neurons, outputs=outputs)
     fired = net.step(["alpha", "beta"])
 
-The same API runs on the dense software simulator (local development) or the
+The same API runs on the dense software simulator (local development), the
 event-driven HBM engine (the accelerator path, with energy/latency
-accounting) — backend="simulator" | "engine". Results are bit-identical
-(tests/test_api.py); this mirrors the paper's seamless local-to-cluster
-transition.
+accounting), or the hierarchical multi-core HiAER tier (per-core HBM
+shards with level-aware spike exchange and measured NoC/FireFly/Ethernet
+traffic) — backend="simulator" | "engine" | "hiaer". Results are
+bit-identical across all three (tests/test_api.py, tests/test_hiaer.py);
+this mirrors the paper's seamless local-to-cluster transition.
+
+The hiaer backend takes a `partition.Hierarchy` (`hierarchy=...`) plus
+optional explicit placements (`placement={neuron_key: core_id}`,
+`axon_placement={axon_key: core_id}`); by default neurons are placed by
+the locality-first BFS partitioner and axons home with the majority of
+their targets.
 
 Batched execution (both backends, bit-exact vs the per-step loop):
 
@@ -37,19 +45,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hbm
+from repro.core import schedule as sched
 from repro.core.costmodel import AccessCounter
-from repro.core.engine import EventEngine, _check_count_dtype
+from repro.core.engine import EventEngine
+from repro.core.hiaer import HiAERNetwork
 from repro.core.neuron import ANN_neuron, LIF_neuron, pack_models
+from repro.core.partition import Hierarchy
 from repro.core.simulator import DenseSimulator
 
-__all__ = ["CRI_network", "LIF_neuron", "ANN_neuron"]
+__all__ = ["CRI_network", "LIF_neuron", "ANN_neuron", "Hierarchy"]
 
 
 class CRI_network:
     def __init__(self, axons: Dict, neurons: Dict, outputs: Sequence,
                  backend: str = "engine", seed: int = 0,
                  dense_pack: bool = True, vectorized: bool = True,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 hierarchy: Optional[Hierarchy] = None,
+                 placement: Optional[Dict] = None,
+                 axon_placement: Optional[Dict] = None):
         self.axon_keys = list(axons.keys())
         self.neuron_keys = list(neurons.keys())
         self._aid = {k: i for i, k in enumerate(self.axon_keys)}
@@ -104,6 +118,20 @@ class CRI_network:
                                      vectorized=vectorized,
                                      use_pallas=use_pallas)
             self.counter = self._impl.counter
+        elif backend == "hiaer":
+            image = hbm.compile_network(axon_syn, neuron_syn, model_ids,
+                                        out_ids, N, dense_pack=dense_pack)
+            self.image = image
+            pl = None if placement is None else \
+                {self._nid[k]: int(c) for k, c in placement.items()}
+            apl = None if axon_placement is None else \
+                {self._aid[k]: int(c) for k, c in axon_placement.items()}
+            self._impl = HiAERNetwork(image, theta, nu, lam, is_lif, N,
+                                      out_ids, axon_syn=axon_syn,
+                                      neuron_syn=neuron_syn,
+                                      hierarchy=hierarchy, placement=pl,
+                                      axon_placement=apl, seed=seed)
+            self.counter = self._impl.counter
         else:
             raise ValueError(f"unknown backend {backend!r}")
 
@@ -127,21 +155,20 @@ class CRI_network:
     # ----------------------------------------------------- batched running
     def _encode_schedule(self, schedule) -> np.ndarray:
         """Length-T sequence of axon-key sequences -> (T, A) int32 event
-        counts (an axon listed twice in a step is driven twice, the event
-        queue semantics)."""
+        counts via the shared core.schedule encoder (an axon listed twice
+        in a step is driven twice, the event queue semantics). Unknown
+        axon keys raise KeyError; pre-encoded count arrays are validated,
+        never re-interpreted."""
         if isinstance(schedule, (np.ndarray, jnp.ndarray)) \
                 and schedule.dtype != object:
             if schedule.ndim != 2:
                 raise ValueError(
                     f"count-array schedule must be 2-D (T, A), "
                     f"got shape {schedule.shape}")
-            _check_count_dtype(schedule)
-            return np.asarray(schedule, np.int32)
-        counts = np.zeros((len(schedule), len(self.axon_keys)), np.int32)
-        for t, keys in enumerate(schedule):
-            for k in keys:
-                counts[t, self._aid[k]] += 1
-        return counts
+            return sched.encode_schedule(schedule, len(self.axon_keys))
+        return sched.encode_schedule(
+            [[self._aid[k] for k in keys] for keys in schedule],
+            len(self.axon_keys))
 
     def run(self, schedule) -> List[List]:
         """T timesteps in one backend dispatch (lax.scan on both backends).
@@ -168,8 +195,7 @@ class CRI_network:
             return np.zeros((0, 0, len(self.outputs)), bool)
         if isinstance(schedules, (np.ndarray, jnp.ndarray)) \
                 and schedules.dtype != object and schedules.ndim == 3:
-            _check_count_dtype(schedules)
-            counts = np.asarray(schedules, np.int32)
+            counts = sched.encode_schedule(schedules, len(self.axon_keys))
         else:
             counts = np.stack([self._encode_schedule(s) for s in schedules])
         spikes = self._impl.run_batch(self._pad_axons(counts))
@@ -185,11 +211,7 @@ class CRI_network:
                 f"schedule width {counts.shape[-1]} != number of axons "
                 f"{len(self.axon_keys)}")
         want = getattr(self._impl, "n_axon_slots", counts.shape[-1])
-        if counts.shape[-1] < want:
-            pad = [(0, 0)] * (counts.ndim - 1) + \
-                [(0, want - counts.shape[-1])]
-            counts = np.pad(counts, pad)
-        return counts
+        return sched.pad_width(counts, want)
 
     # ------------------------------------------------------------ synapses
     def read_synapse(self, pre, post) -> int:

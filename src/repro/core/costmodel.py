@@ -22,16 +22,38 @@ E_ACCESS_PJ = 744.0       # energy per HBM access (64-bit slot read)
 NS_PER_ACCESS = 2.84      # effective pipelined latency per access
 FIXED_NS = 120.0          # per-timestep control overhead (pointer setup)
 
+# interconnect levels of the deployment hierarchy (§3, Fig. 1b): the
+# index into AccessCounter.level_events — 0 = delivery within the source
+# item's own core, then one entry per link the event had to cross
+LEVEL_NAMES = ("local", "noc", "firefly", "ethernet")
+
 
 @dataclass
 class AccessCounter:
     pointer_reads: int = 0
     row_reads: int = 0
     timesteps: int = 0
+    # spike/axon events by the hierarchy level of each (source item ->
+    # destination core) delivery — measured by the hiaer engine's
+    # per-step exchange (kernels/exchange.py), zero on the monolithic
+    # engine (a single core has only local deliveries it never tallies).
+    # This turns partition.traffic_cost's static estimate into a
+    # measured quantity.
+    level_events: list = field(
+        default_factory=lambda: [0] * len(LEVEL_NAMES))
 
     @property
     def total_accesses(self) -> int:
         return self.pointer_reads + self.row_reads
+
+    @property
+    def cross_level_events(self) -> int:
+        """Events that left their source core (NoC + FireFly + Ethernet)."""
+        return sum(self.level_events[1:])
+
+    def add_level_events(self, per_level) -> None:
+        for i, v in enumerate(per_level):
+            self.level_events[i] += int(v)
 
     def energy_uJ(self) -> float:
         return self.total_accesses * E_ACCESS_PJ * 1e-6
@@ -44,14 +66,19 @@ class AccessCounter:
         self.pointer_reads += other.pointer_reads
         self.row_reads += other.row_reads
         self.timesteps += other.timesteps
+        self.add_level_events(other.level_events)
 
     def reset(self):
         self.pointer_reads = self.row_reads = self.timesteps = 0
+        self.level_events = [0] * len(LEVEL_NAMES)
 
     def as_dict(self):
-        return {"pointer_reads": self.pointer_reads,
-                "row_reads": self.row_reads,
-                "timesteps": self.timesteps,
-                "total_accesses": self.total_accesses,
-                "energy_uJ": self.energy_uJ(),
-                "latency_us": self.latency_us()}
+        d = {"pointer_reads": self.pointer_reads,
+             "row_reads": self.row_reads,
+             "timesteps": self.timesteps,
+             "total_accesses": self.total_accesses,
+             "energy_uJ": self.energy_uJ(),
+             "latency_us": self.latency_us()}
+        for name, v in zip(LEVEL_NAMES, self.level_events):
+            d[f"events_{name}"] = v
+        return d

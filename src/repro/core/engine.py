@@ -35,17 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import neuron as nrn
+from repro.core import schedule as sched
 from repro.core.costmodel import AccessCounter
 from repro.core.hbm import HBMImage
 from repro.kernels import route as route_k
 
-
-def _check_count_dtype(a) -> None:
-    """Reject non-integer count matrices: silently truncating a float
-    schedule (e.g. spike probabilities) to int32 would drop events."""
-    if not (np.issubdtype(a.dtype, np.integer) or a.dtype == np.bool_):
-        raise ValueError(
-            f"count schedules must be integer or bool, got {a.dtype}")
+# canonical definition moved to core.schedule; kept under the old name for
+# existing importers (core.simulator, downstream code)
+_check_count_dtype = sched.check_count_dtype
 
 
 class EventEngine:
@@ -87,9 +84,15 @@ class EventEngine:
         self._jit_run_batch = jax.jit(self._run_batch_impl)
 
     def _build_tables(self):
+        # hub topologies fall back from the padded fan-in transpose to the
+        # post-sorted CSR accumulate (linear in synapses, scatter-free)
         self._use_fanin = route_k.fanin_is_economical(self.flat, self.n)
         self._tables = route_k.RouteTables.from_flat(
             self.flat, self.n, build_fanin=self._use_fanin)
+
+    @property
+    def _acc_mode(self) -> str:
+        return "fanin" if self._use_fanin else "csr"
 
     @property
     def tables(self) -> route_k.RouteTables:
@@ -127,7 +130,7 @@ class EventEngine:
             V_mid, spikes = nrn.fire_phase(V, self.theta, self.nu, self.lam,
                                            self.is_lif, sub)
             syn, pr, rr = route_k.route(tables, axon_counts, spikes,
-                                        self.n, use_fanin=self._use_fanin)
+                                        self.n, mode=self._acc_mode)
             V_next = nrn.integrate_phase(V_mid, syn)
         return V_next, key, spikes, pr, rr
 
@@ -156,27 +159,14 @@ class EventEngine:
         return spikes, prs, rrs
 
     # -------------------------------------------------- schedule encoding
+    # the shared core.schedule helpers at the engine's axon-table width
     def encode_axons(self, axon_inputs: Iterable[int]) -> np.ndarray:
         """Axon id sequence -> (A,) occurrence counts. Unknown ids are
         dropped, matching the reference path's `dict.get` skip."""
-        ids = np.asarray(list(axon_inputs), np.int64).reshape(-1)
-        ids = ids[(ids >= 0) & (ids < self.n_axon_slots)]
-        return np.bincount(ids, minlength=self.n_axon_slots) \
-            .astype(np.int32)
+        return sched.encode_ids(axon_inputs, self.n_axon_slots)
 
     def _encode_schedule(self, schedule) -> np.ndarray:
-        if isinstance(schedule, (np.ndarray, jnp.ndarray)) \
-                and schedule.ndim >= 2:
-            # already (..., A) counts
-            if schedule.shape[-1] != self.n_axon_slots:
-                raise ValueError(
-                    f"schedule width {schedule.shape[-1]} != axon table "
-                    f"width {self.n_axon_slots}")
-            _check_count_dtype(schedule)
-            return np.asarray(schedule, np.int32)
-        if len(schedule) == 0:
-            return np.zeros((0, self.n_axon_slots), np.int32)
-        return np.stack([self.encode_axons(s) for s in schedule])
+        return sched.encode_schedule(schedule, self.n_axon_slots)
 
     # ------------------------------------------------------ reference path
     def _route_reference(self, fired_axons: Iterable[int],
@@ -264,11 +254,7 @@ class EventEngine:
         the access counter accumulates the whole batch."""
         if len(schedules) == 0:
             return np.zeros((0, 0, self.n), bool)
-        if isinstance(schedules, (np.ndarray, jnp.ndarray)) \
-                and schedules.ndim == 3:
-            counts = self._encode_schedule(np.asarray(schedules))
-        else:
-            counts = np.stack([self._encode_schedule(s) for s in schedules])
+        counts = sched.encode_batch(schedules, self.n_axon_slots)
         B, T = counts.shape[0], counts.shape[1]
         self.counter.timesteps += B * T
         if not self.vectorized:

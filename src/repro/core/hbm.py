@@ -23,7 +23,9 @@ packing/access statistics that drive the paper's energy & latency model
 (costmodel.py). The event-driven engine (engine.py) executes directly from
 this table; `HBMImage.flatten()` lowers the pointer dicts to dense
 id-indexed arrays + row-owner/CSR inverse maps (`FlatImage`) for the
-vectorized routing path (kernels/route.py).
+vectorized routing path (kernels/route.py); `shard_image()` splits the
+packed table into per-core destination shards (`CoreShards`) for the
+hierarchical multi-core tier (core.hiaer).
 """
 from __future__ import annotations
 
@@ -154,6 +156,137 @@ class HBMImage:
             "hbm_bytes": (total + ptr_slots) * SLOT_BYTES,
             "hbm_rows": self.n_rows,
         }
+
+
+@dataclass
+class CoreShards:
+    """`HBMImage` split into per-core shards for the hierarchical
+    multi-core engine (core.hiaer) — §3's HiAER tier over the §4 tables.
+
+    The split is by DESTINATION: core c stores every synapse record whose
+    postsynaptic neuron is placed on c, because the 16-lane membrane
+    units that consume a record live next to the postsynaptic neuron
+    (Fig. 2b). Records sourced from items homed on c form its core-local
+    ('grey matter') table; records sourced from remote items form its
+    cross-core fan-in ('white matter') table — the rows a HiAER event
+    from another core activates after the spike exchange delivers it.
+
+    Physically both tables are one per-core CSR sorted by local
+    postsynaptic id, so phase 2 on every core is the same scatter-free
+    cumsum reduction (`kernels.route.csr_segment_sum`) batched over the
+    core axis. Entries reference the monolithic image by flattened
+    position (`csr_src`), so a weight edit is a pure gather refresh and
+    the sharded sum reduces exactly the monolithic multiset of
+    (weight x event-count) terms — int32 wraparound addition is
+    order-free, which is what makes the sharded engine bit-exact vs the
+    single-image `EventEngine`."""
+    n_cores: int
+    n_max: int                     # padded neurons per core
+    core_nids: np.ndarray          # (C, n_max) int32 global id, -1 pad
+    core_of_neuron: np.ndarray     # (N,) int32
+    local_id: np.ndarray           # (N,) int32 slot within home core
+    csr_src: np.ndarray            # (C, E) int32 into flat R*SLOTS;
+    #                                sentinel R*SLOTS = appended zero weight
+    csr_item: np.ndarray           # (C, E) int32 source item (axon id,
+    #                                or A + neuron id); sentinel A + N
+    csr_indptr: np.ndarray         # (C, n_max + 1) int32
+    grey_entries: np.ndarray       # (C,) int64 core-local records
+    white_entries: np.ndarray      # (C,) int64 cross-core records
+    white_sources: np.ndarray      # (C,) int64 distinct remote source items
+
+    def stats(self) -> Dict[str, float]:
+        total = int(self.grey_entries.sum() + self.white_entries.sum())
+        return {
+            "n_cores": self.n_cores,
+            "neurons_per_core_max": self.n_max,
+            "synapse_entries": total,
+            "grey_entries": int(self.grey_entries.sum()),
+            "white_entries": int(self.white_entries.sum()),
+            "white_frac": int(self.white_entries.sum()) / max(total, 1),
+            "white_pointer_slots": int(self.white_sources.sum()),
+        }
+
+
+def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
+                axon_core: np.ndarray, n_cores: int,
+                n_neurons: int) -> CoreShards:
+    """Split the packed table into per-core destination shards (see
+    `CoreShards`). `neuron_core` (N,) / `axon_core` (A,) give each item's
+    home core under the deployment hierarchy. A.3 filler records whose
+    post id exceeds n_neurons - 1 are dropped (zero weight by
+    construction, so the sharded sum stays bit-exact); in-range filler
+    records are kept so later weight edits flow through unchanged."""
+    C, N = n_cores, n_neurons
+    core_of = np.asarray(neuron_core, np.int32)
+    A = int(flat.axon_rows.shape[0])
+    counts = np.bincount(core_of, minlength=C) if N else np.zeros(C, int)
+    n_max = max(int(counts.max()) if N else 0, 1)
+    core_nids = np.full((C, n_max), -1, np.int32)
+    local_id = np.zeros((N,), np.int32)
+    # one stable sort by home core gives every neuron's slot: rank within
+    # its core = global rank - core start (no per-core scans; the build
+    # stays O(N log N + nnz log nnz) at deployment-scale core counts)
+    order = np.argsort(core_of, kind="stable")
+    core_sorted = core_of[order]
+    nrn_start = np.zeros(C + 1, np.int64)
+    np.cumsum(counts, out=nrn_start[1:])
+    ranks = np.arange(N, dtype=np.int64) - nrn_start[core_sorted]
+    core_nids[core_sorted, ranks] = order
+    local_id[order] = ranks
+
+    post_flat = image.syn_post.reshape(-1)
+    sentinel_src = post_flat.size
+    pos = np.nonzero((post_flat >= 0) & (post_flat < max(N, 1)))[0]
+    if N == 0:
+        pos = pos[:0]
+    rows = pos // SLOTS
+    aid = flat.row_owner_axon[rows]
+    nid = flat.row_owner_neuron[rows]
+    owned = (aid >= 0) | (nid >= 0)
+    pos, aid, nid = pos[owned], aid[owned], nid[owned]
+    item = np.where(aid >= 0, aid, A + nid).astype(np.int32)
+    post = post_flat[pos]
+    dest = core_of[post]
+    lpost = local_id[post]
+    src_core = np.where(
+        aid >= 0,
+        np.asarray(axon_core, np.int32)[np.clip(aid, 0, max(A - 1, 0))],
+        core_of[np.clip(nid, 0, max(N - 1, 0))])
+    is_white = src_core != dest
+
+    per_core = np.bincount(dest, minlength=C) if pos.size else \
+        np.zeros(C, int)
+    E = max(int(per_core.max()) if pos.size else 0, 1)
+    csr_src = np.full((C, E), sentinel_src, np.int32)
+    csr_item = np.full((C, E), A + N, np.int32)
+    csr_indptr = np.zeros((C, n_max + 1), np.int32)
+    # one global stable sort by (dest core, local post) replaces the
+    # per-core argsorts; the trailing arange key keeps equal-(core, post)
+    # records in original table order (deterministic builds)
+    ord_e = np.lexsort((np.arange(pos.size), lpost, dest))
+    dest_s = dest[ord_e]
+    ent_start = np.zeros(C + 1, np.int64)
+    np.cumsum(per_core, out=ent_start[1:])
+    col = np.arange(pos.size, dtype=np.int64) - ent_start[dest_s]
+    csr_src[dest_s, col] = pos[ord_e]
+    csr_item[dest_s, col] = item[ord_e]
+    seg = np.bincount(dest.astype(np.int64) * n_max + lpost,
+                      minlength=C * n_max).reshape(C, n_max)
+    csr_indptr[:, 1:] = np.cumsum(seg, axis=1)
+    white = np.bincount(dest[is_white], minlength=C).astype(np.int64)
+    grey = per_core.astype(np.int64) - white
+    if is_white.any():
+        wpairs = np.unique(np.stack([dest[is_white], item[is_white]]),
+                           axis=1)
+        white_sources = np.bincount(wpairs[0], minlength=C) \
+            .astype(np.int64)
+    else:
+        white_sources = np.zeros((C,), np.int64)
+    return CoreShards(n_cores=C, n_max=n_max, core_nids=core_nids,
+                      core_of_neuron=core_of, local_id=local_id,
+                      csr_src=csr_src, csr_item=csr_item,
+                      csr_indptr=csr_indptr, grey_entries=grey,
+                      white_entries=white, white_sources=white_sources)
 
 
 class HBMMapper:

@@ -1,0 +1,345 @@
+"""Hierarchical multi-core HiAER execution tier — §3 over the §4 tables.
+
+`HiAERNetwork` runs the same packed `HBMImage` as the monolithic
+`EventEngine`, but partitioned across the cores of a deployment
+`partition.Hierarchy` (servers x FPGAs x cores):
+
+  1. neurons are placed on cores by `partition.partition` (locality-first
+     BFS) or by an explicit placement; each axon homes on the core
+     holding most of its targets;
+  2. the image is split into per-core destination shards
+     (`hbm.shard_image`): core-local 'grey matter' plus cross-core
+     'white matter' fan-in tables, both stored as one per-core CSR;
+  3. every timestep runs core-local fire + routing interleaved with a
+     hierarchical spike exchange (`kernels.exchange`): fired-neuron
+     event vectors are aggregated level by level (core -> FPGA ->
+     server) inside one jit-compiled step, and the per-level event
+     traffic (NoC / FireFly / Ethernet) is measured into the
+     `AccessCounter` — `partition.traffic_cost` made empirical.
+
+Bit-exactness vs `backend="engine"` (property-tested in
+tests/test_hiaer.py) rests on three invariants:
+
+  * PRNG parity — noise uniforms are drawn once per step in GLOBAL
+    neuron-id order (`noise_draw(sub, N)`) and gathered into the
+    per-core layout; the elementwise fire phase
+    (`neuron.fire_phase_from_u`) commutes with the permutation;
+  * routing parity — the per-core CSRs collectively hold exactly the
+    monolithic multiset of (weight x event-count) terms, each post
+    neuron's terms all on its home core, and int32 wraparound addition
+    is order-free;
+  * counting parity — pointer/row reads are tallied against the
+    monolithic pointer spans (`kernels.route.access_counts`), the same
+    HBM work merely executed on more cores.
+
+The step is single-device jax (scan over T, vmap over B, exactly like
+`EventEngine.run/run_batch`); the per-core leading axis and the
+exchange seam are what future PRs map onto a real `shard_map` mesh.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hbm
+from repro.core import neuron as nrn
+from repro.core import schedule as sched
+from repro.core.costmodel import AccessCounter
+from repro.core.hbm import HBMImage
+from repro.core.partition import Hierarchy, partition
+from repro.kernels import exchange as exch_k
+from repro.kernels import route as route_k
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+class HiAERTables(NamedTuple):
+    """Device-resident per-core state (pytree, passed as a traced
+    argument so weight edits swap arrays under the compiled step)."""
+    w_ext: jnp.ndarray             # (R * SLOTS + 1,) int32, [-1] == 0
+    csr_src: jnp.ndarray           # (C, E) int32 into w_ext
+    csr_item: jnp.ndarray          # (C, E) int32 into item counts
+    csr_indptr: jnp.ndarray        # (C, n_max + 1) int32
+    core_nids_idx: jnp.ndarray     # (C, n_max) int32 global id, pad -> N
+    theta: jnp.ndarray             # (C, n_max) int32, pad = INT32_MAX
+    nu: jnp.ndarray                # (C, n_max) int32, pad = -32
+    lam: jnp.ndarray               # (C, n_max) int32
+    is_lif: jnp.ndarray            # (C, n_max) bool, pad = False
+    exchange: exch_k.ExchangeTables
+    # monolithic pointer spans, for access-count parity with the engine
+    axon_rows: jnp.ndarray         # (A,) int32
+    axon_present: jnp.ndarray      # (A,) bool
+    neuron_rows: jnp.ndarray       # (N,) int32
+    neuron_present: jnp.ndarray    # (N,) bool
+
+
+def _to_cores(values, core_nids_idx, pad):
+    """Gather a global (N,) vector into the (C, n_max) per-core layout."""
+    v = np.asarray(values)
+    ext = np.append(v, np.asarray(pad, v.dtype))
+    return ext[np.asarray(core_nids_idx)]
+
+
+def _axon_majority_placement(axon_syn, neuron_core, n_axon_slots,
+                             n_cores) -> np.ndarray:
+    """Home each axon on the core holding most of its targets (ties to
+    the lowest core id; axons with no in-range targets home on core 0) —
+    the axon-side analogue of the partitioner's locality objective."""
+    core = np.zeros((n_axon_slots,), np.int32)
+    n_neurons = len(neuron_core)
+    for a, syns in axon_syn.items():
+        if not 0 <= a < n_axon_slots:
+            continue
+        tgt = [int(neuron_core[p]) for p, _ in syns if 0 <= p < n_neurons]
+        if tgt:
+            counts = np.bincount(tgt, minlength=n_cores)
+            core[a] = int(counts.argmax())
+    return core
+
+
+class HiAERNetwork:
+    """Multi-core HiAER engine; mirrors `EventEngine`'s interface
+    (step/run/run_batch/reset/V/counter/update_weights) so
+    `CRI_network(..., backend="hiaer")` drops in unchanged."""
+
+    def __init__(self, image: HBMImage, theta, nu, lam, is_lif,
+                 n_neurons: int, outputs: Sequence[int],
+                 axon_syn: Dict[int, List], neuron_syn: Dict[int, List],
+                 hierarchy: Optional[Hierarchy] = None,
+                 placement: Optional[Dict[int, int]] = None,
+                 axon_placement: Optional[Dict[int, int]] = None,
+                 seed: int = 0):
+        self.image = image
+        self.n = n_neurons
+        self.outputs = list(outputs)
+        self.flat = image.flatten()
+        self.n_axon_slots = int(self.flat.axon_rows.shape[0])
+        self.hier = hierarchy if hierarchy is not None else \
+            Hierarchy(1, 1, 1, max(n_neurons, 1))
+        self.spec = exch_k.HierSpec.from_hierarchy(self.hier)
+
+        # ------------------------------------------------------ placement
+        if placement is None:
+            adjacency = {i: neuron_syn.get(i, [])
+                         for i in range(n_neurons)}
+            placement = partition(adjacency, self.hier)
+        self.neuron_core = self._check_placement(placement)
+        # axons default to majority-target homing; an explicit
+        # axon_placement overrides per axon (unlisted axons keep the
+        # majority rule, matching the api docstring)
+        self.axon_core = _axon_majority_placement(
+            axon_syn, self.neuron_core, self.n_axon_slots,
+            self.hier.n_cores)
+        if axon_placement is not None:
+            for a, c in axon_placement.items():
+                if not 0 <= a < self.n_axon_slots:
+                    raise ValueError(f"axon_placement has unknown axon "
+                                     f"id {a}")
+                if not 0 <= c < self.hier.n_cores:
+                    raise ValueError(f"axon {a} placed on core {c}, "
+                                     f"hierarchy has {self.hier.n_cores}")
+                self.axon_core[a] = c
+
+        # --------------------------------------------------------- shards
+        self.shards = hbm.shard_image(image, self.flat, self.neuron_core,
+                                      self.axon_core, self.hier.n_cores,
+                                      n_neurons)
+        axon_ndest, neuron_ndest = exch_k.build_dest_tables(
+            axon_syn, neuron_syn, self.axon_core, self.neuron_core,
+            self.hier, self.n_axon_slots, n_neurons)
+        sh = self.shards
+        core_nids_idx = np.where(sh.core_nids >= 0, sh.core_nids,
+                                 n_neurons).astype(np.int32)
+        pos_of_neuron = (sh.core_of_neuron.astype(np.int64) * sh.n_max
+                         + sh.local_id).astype(np.int32)
+        self._w = np.asarray(image.syn_weight, np.int32)
+        self._tables = HiAERTables(
+            w_ext=jnp.asarray(np.append(self._w.reshape(-1),
+                                        np.int32(0))),
+            csr_src=jnp.asarray(sh.csr_src),
+            csr_item=jnp.asarray(sh.csr_item),
+            csr_indptr=jnp.asarray(sh.csr_indptr),
+            core_nids_idx=jnp.asarray(core_nids_idx),
+            theta=jnp.asarray(_to_cores(np.asarray(theta, np.int32),
+                                        core_nids_idx, _INT32_MAX)),
+            nu=jnp.asarray(_to_cores(np.asarray(nu, np.int32),
+                                     core_nids_idx, -32)),
+            lam=jnp.asarray(_to_cores(np.asarray(lam, np.int32),
+                                      core_nids_idx, 63)),
+            is_lif=jnp.asarray(_to_cores(np.asarray(is_lif, bool),
+                                         core_nids_idx, False)),
+            exchange=exch_k.ExchangeTables(
+                pos_of_neuron=jnp.asarray(pos_of_neuron),
+                axon_ndest=jnp.asarray(axon_ndest),
+                neuron_ndest=jnp.asarray(neuron_ndest)),
+            axon_rows=jnp.asarray(self.flat.axon_rows),
+            axon_present=jnp.asarray(self.flat.axon_present),
+            neuron_rows=jnp.asarray(self.flat.neuron_rows),
+            neuron_present=jnp.asarray(self.flat.neuron_present),
+        )
+
+        self.Vc = jnp.zeros((self.hier.n_cores, sh.n_max), jnp.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self.counter = AccessCounter()
+        self._spikes = np.zeros((n_neurons,), bool)
+        self._jit_step = jax.jit(self._step_impl)
+        self._jit_run = jax.jit(self._run_impl)
+        self._jit_run_batch = jax.jit(self._run_batch_impl)
+
+    def _check_placement(self, placement: Dict[int, int]) -> np.ndarray:
+        core = np.full((self.n,), -1, np.int64)
+        for nid, c in placement.items():
+            if not 0 <= nid < self.n:
+                raise ValueError(f"placement has unknown neuron id {nid}")
+            if not 0 <= c < self.hier.n_cores:
+                raise ValueError(
+                    f"neuron {nid} placed on core {c}, hierarchy has "
+                    f"{self.hier.n_cores}")
+            core[nid] = c
+        if self.n and core.min() < 0:
+            missing = int(np.nonzero(core < 0)[0][0])
+            raise ValueError(f"placement missing neuron {missing}")
+        if self.n and (core.max() >= self.hier.n_cores):
+            raise ValueError(
+                f"placement uses core {int(core.max())}, hierarchy has "
+                f"{self.hier.n_cores}")
+        load = np.bincount(core, minlength=self.hier.n_cores) if self.n \
+            else np.zeros(self.hier.n_cores, int)
+        if load.size and load.max() > self.hier.neurons_per_core:
+            raise ValueError(
+                f"core {int(load.argmax())} holds {int(load.max())} "
+                f"neurons > capacity {self.hier.neurons_per_core}")
+        return core.astype(np.int32)
+
+    # ------------------------------------------------------------- state
+    @property
+    def V(self):
+        """Membrane potentials in global neuron-id order."""
+        flat = self.Vc.reshape(-1)
+        return flat[self._tables.exchange.pos_of_neuron]
+
+    def reset(self):
+        self.Vc = jnp.zeros_like(self.Vc)
+        self._spikes = np.zeros((self.n,), bool)
+
+    def update_weights(self, syn_weight) -> None:
+        """Refresh after an in-place `syn_weight` edit
+        (CRI_network.write_synapse): the shards reference the monolithic
+        image by flat position, so this is one gather-source swap — no
+        retrace/recompile (tables are traced arguments)."""
+        self._w = np.asarray(syn_weight, np.int32)
+        self.flat.syn_weight = np.ascontiguousarray(self._w)
+        self._tables = self._tables._replace(
+            w_ext=jnp.asarray(np.append(self._w.reshape(-1),
+                                        np.int32(0))))
+
+    # -------------------------------------------------- vectorized core
+    def _step_impl(self, Vc, key, axon_counts, tables: HiAERTables):
+        """One timestep: per-core fire -> hierarchical exchange ->
+        per-core CSR routing -> per-core integrate. Returns
+        (Vc', key', spikes (N,), ptr_reads, row_reads, traffic (4,))."""
+        key, sub = jax.random.split(key)
+        # global-order noise draw (PRNG parity with the monolithic
+        # engine), gathered into the per-core layout
+        u = nrn.noise_draw(sub, self.n)
+        uc = jnp.concatenate([u, jnp.zeros((1,), jnp.int32)])[
+            tables.core_nids_idx]
+        Vc_mid, spikes_c = nrn.fire_phase_from_u(
+            Vc, tables.theta, tables.nu, tables.lam, tables.is_lif, uc)
+        # hierarchical spike exchange: every core learns the global fired
+        # vector; per-level deliveries are measured as they happen
+        neuron_counts, traffic = exch_k.exchange(
+            spikes_c, axon_counts, self.spec, tables.exchange)
+        _, _, pr, rr = route_k.access_counts(
+            axon_counts, neuron_counts, tables.axon_rows,
+            tables.axon_present, tables.neuron_rows,
+            tables.neuron_present)
+        # per-core phase 2: every core reduces its grey + white tables
+        # with one batched scatter-free CSR segment sum
+        item_counts = jnp.concatenate(
+            [axon_counts, neuron_counts, jnp.zeros((1,), jnp.int32)])
+        vals = tables.w_ext[tables.csr_src] * item_counts[tables.csr_item]
+        syn_c = route_k.csr_segment_sum(vals, tables.csr_indptr)
+        Vc_next = nrn.integrate_phase(Vc_mid, syn_c)
+        return (Vc_next, key, neuron_counts.astype(bool), pr, rr, traffic)
+
+    def _run_impl(self, Vc, key, counts, tables):
+        """T timesteps under one lax.scan; counts: (T, A) int32. Access
+        and traffic tallies come back per step (int32 is safe within a
+        step); callers sum them host-side in exact Python ints."""
+        def body(carry, c):
+            Vc, key = carry
+            Vc, key, spikes, pr, rr, tr = self._step_impl(Vc, key, c,
+                                                          tables)
+            return (Vc, key), (spikes, pr, rr, tr)
+
+        (Vc, key), outs = jax.lax.scan(body, (Vc, key), counts)
+        return (Vc, key) + outs
+
+    def _run_batch_impl(self, key, counts, tables):
+        """B independent samples per dispatch; counts: (B, T, A) int32.
+        Sample b runs from V = 0 under PRNG stream fold_in(key, b) —
+        identical to EventEngine.run_batch."""
+        B = counts.shape[0]
+        keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(jnp.arange(B))
+        V0 = jnp.zeros((B,) + self.Vc.shape, jnp.int32)
+        _, _, spikes, prs, rrs, trs = jax.vmap(
+            self._run_impl, in_axes=(0, 0, 0, None))(V0, keys, counts,
+                                                     tables)
+        return spikes, prs, rrs, trs
+
+    # ----------------------------------------------------------- stepping
+    def _tally(self, prs, rrs, trs):
+        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
+        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
+        self.counter.add_level_events(
+            np.asarray(trs, np.int64).reshape(-1, exch_k.N_LEVELS)
+            .sum(axis=0))
+
+    def step(self, axon_inputs: Sequence[int]) -> np.ndarray:
+        """One timestep; returns bool (n,) spikes fired this step."""
+        self.counter.timesteps += 1
+        counts = jnp.asarray(sched.encode_ids(axon_inputs,
+                                              self.n_axon_slots))
+        self.Vc, self.key, spikes, pr, rr, tr = self._jit_step(
+            self.Vc, self.key, counts, self._tables)
+        self._tally(pr, rr, tr)
+        self._spikes = np.asarray(spikes)
+        return self._spikes
+
+    def run(self, schedule) -> np.ndarray:
+        """T timesteps in one dispatch; same contract as
+        EventEngine.run. Returns (T, n) bool spikes."""
+        counts = sched.encode_schedule(schedule, self.n_axon_slots)
+        T = counts.shape[0]
+        self.counter.timesteps += T
+        self.Vc, self.key, spikes, prs, rrs, trs = self._jit_run(
+            self.Vc, self.key, jnp.asarray(counts), self._tables)
+        self._tally(prs, rrs, trs)
+        spikes = np.asarray(spikes)
+        if T:
+            self._spikes = spikes[-1]
+        return spikes
+
+    def run_batch(self, schedules) -> np.ndarray:
+        """B samples x T timesteps per dispatch; same contract as
+        EventEngine.run_batch (fresh V = 0 and stream fold_in(key, b)
+        per sample; the engine's own key advances once). Returns
+        (B, T, n) bool spikes."""
+        if len(schedules) == 0:
+            return np.zeros((0, 0, self.n), bool)
+        counts = sched.encode_batch(schedules, self.n_axon_slots)
+        B, T = counts.shape[0], counts.shape[1]
+        self.counter.timesteps += B * T
+        spikes, prs, rrs, trs = self._jit_run_batch(
+            self.key, jnp.asarray(counts), self._tables)
+        self._tally(prs, rrs, trs)
+        self.key, _ = jax.random.split(self.key)
+        return np.asarray(spikes)
+
+    def read_membrane(self, ids: Sequence[int]) -> List[int]:
+        V = np.asarray(self.V)
+        return [int(V[i]) for i in ids]

@@ -108,14 +108,26 @@ def leak(V, lam):
     return V - jnp.where(lam >= 31, big, small)
 
 
-def fire_phase(V, theta, nu, lam, is_lif, key):
-    """Phase 1 of a timestep: noise, threshold, reset, leak/zero.
-    Returns (V_mid, spikes). V_mid still lacks this step's synaptic input."""
-    V = V + noise_sample(key, V.shape[0], nu)
+def fire_phase_from_u(V, theta, nu, lam, is_lif, u):
+    """Phase 1 of a timestep from pre-drawn raw uniforms u (see
+    `noise_draw`): noise, threshold, reset, leak/zero. Returns
+    (V_mid, spikes); V_mid still lacks this step's synaptic input.
+    Separated from the draw so engines that reorganize neurons (the
+    per-core layout of core.hiaer) can draw once in global id order —
+    the PRNG-parity requirement — and apply the elementwise phase in
+    any layout."""
+    V = V + noise_from_u(u, nu)
     spikes = V > theta
     V = jnp.where(spikes, 0, V)
     V = jnp.where(is_lif, leak(V, lam), 0)
     return V, spikes
+
+
+def fire_phase(V, theta, nu, lam, is_lif, key):
+    """Phase 1 of a timestep: noise, threshold, reset, leak/zero.
+    Returns (V_mid, spikes). V_mid still lacks this step's synaptic input."""
+    return fire_phase_from_u(V, theta, nu, lam, is_lif,
+                             noise_draw(key, V.shape[0]))
 
 
 def integrate_phase(V_mid, syn_in):

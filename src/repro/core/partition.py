@@ -110,9 +110,37 @@ def partition(adjacency, hier: Hierarchy) -> Dict[Hashable, int]:
     return {nodes[i]: int(assign[i]) for i in range(n)}
 
 
+def level_event_counts(adjacency, src_assignment: Dict[Hashable, int],
+                       dst_assignment: Dict[Hashable, int],
+                       hier: Hierarchy) -> List[int]:
+    """Per-level (source item -> destination core) delivery counts for ONE
+    firing of every source in `adjacency`: source s homed on core c with
+    synapses into destination core d is one event at level(c, d) —
+    destination cores deduplicated per source, exactly the HiAER
+    multicast granularity the hiaer engine's AccessCounter measures
+    (kernels/exchange.py builds its static destination tables with the
+    same rule, so measured == predicted x fire counts, bit for bit).
+    `src_assignment` maps sources to cores (pass the axon placement for
+    axon adjacencies), `dst_assignment` maps postsynaptic neurons."""
+    per_level = [0] * len(LEVEL_COST)
+    for pre, posts in adjacency.items():
+        if pre not in src_assignment:
+            continue
+        ca = src_assignment[pre]
+        dests = {dst_assignment[post] for post, _ in posts
+                 if post in dst_assignment}
+        for d in dests:
+            per_level[hier.level(ca, d)] += 1
+    return per_level
+
+
 def traffic_cost(adjacency, assignment: Dict[Hashable, int],
                  hier: Hierarchy) -> Dict[str, float]:
-    """Expected per-spike-event routing cost + per-level breakdown."""
+    """Expected per-spike-event routing cost + per-level breakdown.
+    `per_level` is the |w|-weighted synapse traffic; `events` is the
+    deduplicated (source, destination-core) delivery count per single
+    fire of every neuron — the static twin of the hiaer engine's
+    measured AccessCounter.level_events."""
     per_level = [0.0, 0.0, 0.0, 0.0]
     for pre, posts in adjacency.items():
         if pre not in assignment:
@@ -129,6 +157,9 @@ def traffic_cost(adjacency, assignment: Dict[Hashable, int],
         "noc_frac": per_level[1] / total,
         "firefly_frac": per_level[2] / total,
         "ethernet_frac": per_level[3] / total,
+        "per_level": per_level,
+        "events": level_event_counts(adjacency, assignment, assignment,
+                                     hier),
     }
 
 

@@ -1,0 +1,80 @@
+"""Shared schedule encoding: axon id sequences -> dense event-count
+matrices.
+
+Every execution path (CRI_network, EventEngine, DenseSimulator,
+HiAERNetwork) drives timesteps from the same representation — a
+(T, width) int32 matrix of per-axon event COUNTS, where an axon listed
+twice in a step is driven twice (the event-queue semantics of §4's
+two-phase routing). This module is the single definition of that
+encoding; it used to live in five near-identical copies
+(api.CRI_network._encode_schedule/_pad_axons, EventEngine.encode_axons/
+_encode_schedule, DenseSimulator._encode), whose drift would have
+silently broken the documented cross-backend bit-exactness.
+
+Conventions shared by all callers:
+  * out-of-range ids are silently dropped (the seed engine's `dict.get`
+    skip — tests/test_routing_vectorized.py pins this on every backend);
+  * an ndarray/jnp array is taken as an already-encoded count matrix and
+    only validated (width + integer dtype), never re-interpreted — a
+    plain Python list of id lists is always per-element events;
+  * float count matrices are rejected loudly: truncating spike
+    probabilities to int32 would drop events.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def check_count_dtype(a) -> None:
+    """Reject non-integer count matrices: silently truncating a float
+    schedule (e.g. spike probabilities) to int32 would drop events."""
+    if not (np.issubdtype(a.dtype, np.integer) or a.dtype == np.bool_):
+        raise ValueError(
+            f"count schedules must be integer or bool, got {a.dtype}")
+
+
+def encode_ids(ids: Iterable[int], width: int) -> np.ndarray:
+    """Axon id sequence -> (width,) int32 occurrence counts. Ids outside
+    [0, width) are dropped, matching the seed engine's `dict.get` skip."""
+    arr = np.asarray(list(ids), np.int64).reshape(-1)
+    arr = arr[(arr >= 0) & (arr < width)]
+    return np.bincount(arr, minlength=width).astype(np.int32)
+
+
+def encode_schedule(schedule, width: int) -> np.ndarray:
+    """Length-T sequence of id sequences -> (T, width) int32 counts.
+    An ndarray/jnp array with ndim >= 2 passes through as pre-encoded
+    (..., width) counts after width/dtype validation (so (B, T, width)
+    batches validate through the same door)."""
+    if isinstance(schedule, (np.ndarray, jnp.ndarray)) and schedule.ndim >= 2:
+        if schedule.shape[-1] != width:
+            raise ValueError(
+                f"schedule width {schedule.shape[-1]} != expected width "
+                f"{width}")
+        check_count_dtype(schedule)
+        return np.asarray(schedule, np.int32)
+    if len(schedule) == 0:
+        return np.zeros((0, width), np.int32)
+    return np.stack([encode_ids(s, width) for s in schedule])
+
+
+def encode_batch(schedules, width: int) -> np.ndarray:
+    """Length-B sequence of `encode_schedule` inputs (or a (B, T, width)
+    count array) -> (B, T, width) int32 counts."""
+    if isinstance(schedules, (np.ndarray, jnp.ndarray)) \
+            and schedules.ndim == 3:
+        return encode_schedule(np.asarray(schedules), width)
+    return np.stack([encode_schedule(s, width) for s in schedules])
+
+
+def pad_width(counts: np.ndarray, want: int) -> np.ndarray:
+    """Zero-pad the trailing axis up to `want` columns (the engine's
+    flattened axon table is never narrower than 1 slot, so an empty
+    network's (T, 0) schedule widens to (T, 1))."""
+    if counts.shape[-1] >= want:
+        return counts
+    pad = [(0, 0)] * (counts.ndim - 1) + [(0, want - counts.shape[-1])]
+    return np.pad(counts, pad)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import neuron as nrn
+from repro.core import schedule as sched
 
 
 class DenseSimulator:
@@ -52,12 +53,7 @@ class DenseSimulator:
         (event-count semantics: an index listed twice is driven twice,
         matching the engine's pointer queue). Returns bool (N,) spike
         vector (this step's fired neurons)."""
-        counts = np.zeros((self.n_axons,), np.int32)
-        ids = np.asarray(list(axon_inputs), np.int64).reshape(-1)
-        ids = ids[(ids >= 0) & (ids < self.n_axons)]   # drop unknown ids,
-        if ids.size:                                   # like the engine
-            counts = np.bincount(ids, minlength=self.n_axons) \
-                .astype(np.int32)
+        counts = sched.encode_ids(axon_inputs, self.n_axons)
         self.V, self.key, spikes = self._step(self.V, self.key,
                                               jnp.asarray(counts),
                                               self.axonW, self.neuronW)
@@ -118,21 +114,7 @@ class DenseSimulator:
         return np.asarray(spikes)
 
     def _encode(self, schedule):
-        # Only an actual ndarray is taken as a pre-encoded counts matrix;
-        # a plain list of axon-index lists (even a rectangular one) is
-        # always per-element events, per run()'s contract.
-        if isinstance(schedule, (np.ndarray, jnp.ndarray)) \
-                and schedule.ndim == 2:
-            if schedule.shape[-1] != self.n_axons:
-                raise ValueError(
-                    f"schedule width {schedule.shape[-1]} != "
-                    f"n_axons {self.n_axons}")
-            from repro.core.engine import _check_count_dtype
-            _check_count_dtype(schedule)
-            return np.asarray(schedule, np.int32)
-        counts = np.zeros((len(schedule), self.n_axons), np.int32)
-        for t, ids in enumerate(schedule):
-            for i in ids:
-                if 0 <= i < self.n_axons:   # drop unknown ids, like step()
-                    counts[t, i] += 1
-        return counts
+        # shared core.schedule encoding: only an actual ndarray is taken
+        # as a pre-encoded counts matrix; a plain list of axon-index lists
+        # is always per-element events (unknown ids dropped, like step())
+        return sched.encode_schedule(schedule, self.n_axons)

@@ -1,0 +1,109 @@
+"""Hierarchical level-aware spike exchange — §3 / Fig. 1b in array form.
+
+After every core's fire phase, the fired-neuron event vectors are
+aggregated level by level up the deployment hierarchy — cores within an
+FPGA over the NoC, FPGA aggregates within a server over FireFly, server
+aggregates over Ethernet — until every core can see the global event
+vector it needs to gate its white-matter tables. `hierarchical_gather`
+expresses that as stacked per-level concatenations over the
+(servers, fpgas, cores, neurons) axes; on one device each fold lowers to
+a reshape inside the jit-compiled step, and the loop is the exact seam
+where `shard_map` + `lax.all_gather` slot in when the core axis becomes
+a real device mesh (cf. core.distributed_engine's dense dry-run).
+
+The exchange also *measures* the traffic the partitioner's
+`traffic_cost` only estimates: `build_dest_tables` precomputes, for
+every source item, how many destination cores it reaches at each
+hierarchy level (destination cores deduplicated per source — the HiAER
+multicast granularity: one event per (source, destination core)
+delivery). Per step, measured traffic is then the event counts dotted
+with those static tables — the same gather-style bookkeeping as the
+pointer/row access counts of `kernels.route`, and integer-identical to
+`partition.level_event_counts` times the realized fire counts.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import LEVEL_NAMES
+
+N_LEVELS = len(LEVEL_NAMES)    # local / NoC / FireFly / Ethernet
+
+
+class HierSpec(NamedTuple):
+    """Static hierarchy shape: n_cores = servers * fpgas * cores."""
+    servers: int
+    fpgas: int          # per server
+    cores: int          # per FPGA
+
+    @classmethod
+    def from_hierarchy(cls, hier) -> "HierSpec":
+        return cls(hier.n_servers, hier.fpgas_per_server,
+                   hier.cores_per_fpga)
+
+    @property
+    def n_cores(self) -> int:
+        return self.servers * self.fpgas * self.cores
+
+
+def hierarchical_gather(x_core, spec: HierSpec):
+    """(C, n_max) per-core vectors -> (C * n_max,) core-ordered global
+    vector, folded level by level: cores concatenate within their FPGA
+    (NoC hop), FPGA blocks within their server (FireFly hop), server
+    blocks globally (Ethernet hop). Single-device lowering of the
+    hierarchical all-gather of Fig. 1b."""
+    x = x_core.reshape(spec.servers, spec.fpgas, spec.cores, -1)
+    x = x.reshape(spec.servers, spec.fpgas, -1)      # NoC: core -> FPGA
+    x = x.reshape(spec.servers, -1)                  # FireFly: FPGA -> server
+    return x.reshape(-1)                             # Ethernet: server -> all
+
+
+def build_dest_tables(axon_syn: Dict[int, List[Tuple[int, int]]],
+                      neuron_syn: Dict[int, List[Tuple[int, int]]],
+                      axon_core: np.ndarray, neuron_core: np.ndarray,
+                      hier, n_axon_slots: int,
+                      n_neurons: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static per-source destination tables: ndest[s, l] = number of
+    distinct destination cores source s reaches at hierarchy level l
+    (level of (home core of s, destination core), per
+    `partition.Hierarchy.level`). Built from the user adjacency, not the
+    packed image, so A.3 filler records never count as traffic."""
+    def table(adjacency, src_core, width):
+        nd = np.zeros((width, N_LEVELS), np.int32)
+        for s, syns in adjacency.items():
+            if not 0 <= s < width:
+                continue
+            dests = {int(neuron_core[p]) for p, _ in syns
+                     if 0 <= p < n_neurons}
+            for d in dests:
+                nd[s, hier.level(int(src_core[s]), d)] += 1
+        return nd
+
+    return (table(axon_syn, np.asarray(axon_core), n_axon_slots),
+            table(neuron_syn, np.asarray(neuron_core), n_neurons))
+
+
+class ExchangeTables(NamedTuple):
+    """Device-resident exchange state (pytree — passed as a traced
+    argument so placements/weights swap without recompiling)."""
+    pos_of_neuron: jnp.ndarray     # (N,) flat (core * n_max + local) slot
+    axon_ndest: jnp.ndarray        # (A, N_LEVELS) int32
+    neuron_ndest: jnp.ndarray      # (N, N_LEVELS) int32
+
+
+def exchange(spikes_core, axon_counts, spec: HierSpec,
+             tables: ExchangeTables):
+    """One spike-exchange round: per-core fired flags (C, n_max) bool +
+    driven-axon counts (A,) int32 -> (global fired-neuron counts (N,)
+    int32 in global id order, measured per-level traffic (N_LEVELS,)
+    int32). Driven axons are events too: an axon driven k times sends k
+    events to each of its destination cores, matching the pointer-queue
+    multiplicity of the routing phase."""
+    flat = hierarchical_gather(spikes_core.astype(jnp.int32), spec)
+    neuron_counts = flat[tables.pos_of_neuron]
+    traffic = (axon_counts @ tables.axon_ndest
+               + neuron_counts @ tables.neuron_ndest)
+    return neuron_counts, traffic

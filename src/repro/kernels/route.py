@@ -17,9 +17,24 @@ whole (rows, 16-slot) HBM table:
   the dense formulation is bit-exact vs the event queue (int32 wraparound
   addition is associative and order-free).
 
-Two implementations:
+Three accumulate formulations (all bit-exact vs the event queue — int32
+wraparound addition is associative and order-free):
 
-  * `route_event_counts` + `accumulate` — pure jnp, jit/vmap/scan friendly;
+  * `accumulate` — per-neuron gathers through a padded fan-in transpose;
+    the default when the padding stays economical (`fanin_is_economical`).
+  * `accumulate_csr` — the synapse records sorted by postsynaptic neuron
+    once at build time; a segment sum becomes cumsum + boundary gathers
+    (`csr_segment_sum`), linear in synapses with no scatter anywhere.
+    This is the hub-topology path (a power-law in-degree would blow up
+    the fan-in padding), and — vmapped over the core axis — the per-core
+    accumulate of the hierarchical engine (core.hiaer).
+  * `accumulate_scatter` — the natural segment_sum/scatter form (fast on
+    TPU, serial on CPU XLA); kept for benchmarks and as the formulation
+    the other two are tested against.
+
+Plus:
+
+  * `route_event_counts` + `route` — pure jnp, jit/vmap/scan friendly;
     the production path (`EventEngine.step/run/run_batch`).
   * `fused_route_lif_step` — a Pallas kernel that folds the slot-lane
     accumulation into the `lif_step` membrane update: the grid walks row
@@ -70,21 +85,27 @@ class RouteTables(NamedTuple):
     fanin_src: jnp.ndarray         # (n_neurons, max_indeg) int32
     fanin_row: jnp.ndarray         # (n_neurons, max_indeg) int32
     syn_weight_ext: jnp.ndarray    # (R * SLOTS + 1,) int32, [-1] == 0
+    csr_pos: jnp.ndarray           # (nnz,) int32 flat (row*SLOTS+slot)
+    csr_row: jnp.ndarray           # (nnz,) int32 owning synapse row
+    csr_indptr: jnp.ndarray        # (n_neurons + 1,) int32, post-sorted
 
     @classmethod
     def from_flat(cls, flat: FlatImage, n_neurons: int,
                   build_fanin: bool = True) -> "RouteTables":
         """build_fanin=False skips the transpose (placeholder arrays) for
         topologies where max-in-degree padding would blow up — see
-        `fanin_is_economical`; `route` then uses the scatter path."""
+        `fanin_is_economical`; `route` then uses the CSR path. The CSR
+        arrays (nnz-sized, cheap) are always built so any mode can run on
+        any tables."""
         if build_fanin:
             src, row = _fanin_transpose(flat, n_neurons)
         else:
             # zero-size placeholders: a real transpose is never empty
             # (every neuron owns at least one filler synapse), so
-            # `route(use_fanin=True)` can reject these loudly.
+            # `route(mode="fanin")` can reject these loudly.
             src = np.zeros((0, 1), np.int32)
             row = np.zeros((0, 1), np.int32)
+        csr_pos, csr_row, csr_indptr = _csr_transpose(flat, n_neurons)
         w_ext = np.append(flat.syn_weight.reshape(-1), np.int32(0))
         return cls(
             syn_post=jnp.asarray(flat.syn_post),
@@ -98,6 +119,9 @@ class RouteTables(NamedTuple):
             fanin_src=jnp.asarray(src),
             fanin_row=jnp.asarray(row),
             syn_weight_ext=jnp.asarray(w_ext, jnp.int32),
+            csr_pos=jnp.asarray(csr_pos),
+            csr_row=jnp.asarray(csr_row),
+            csr_indptr=jnp.asarray(csr_indptr),
         )
 
     def with_weights(self, syn_weight) -> "RouteTables":
@@ -113,8 +137,8 @@ def fanin_is_economical(flat: FlatImage, n_neurons: int,
     """The fan-in transpose pads every neuron to the global max in-degree,
     so a single hub neuron can inflate it to N x max_indeg. Use it only
     when the padded size stays within `max_expand` x the actual synapse
-    count; otherwise the engine routes through `accumulate_scatter`
-    (linear in table size, but a serial scatter-add on CPU XLA)."""
+    count; otherwise the engine routes through `accumulate_csr`
+    (linear in synapses, scatter-free)."""
     flat_post = flat.syn_post.reshape(-1)
     valid = flat_post >= 0
     nnz = int(valid.sum())
@@ -151,6 +175,62 @@ def _fanin_transpose(flat: FlatImage, n_neurons: int):
     return src, row
 
 
+def _csr_transpose(flat: FlatImage, n_neurons: int):
+    """Valid synapse positions sorted by postsynaptic neuron: returns
+    (pos (nnz,), row (nnz,), indptr (n_neurons + 1,)). A.3 filler posts
+    beyond n_neurons - 1 are clipped like the seed loop and the fan-in
+    transpose (zero weight, numerically inert)."""
+    flat_post = flat.syn_post.reshape(-1)
+    pos = np.nonzero(flat_post >= 0)[0]
+    tgt = np.clip(flat_post[pos], 0, max(n_neurons - 1, 0))
+    order = np.argsort(tgt, kind="stable")
+    pos, tgt = pos[order], tgt[order]
+    indptr = np.zeros(n_neurons + 1, np.int32)
+    np.cumsum(np.bincount(tgt, minlength=n_neurons), out=indptr[1:])
+    row = (pos // SLOTS).astype(np.int32)
+    return pos.astype(np.int32), row, indptr
+
+
+def csr_segment_sum(vals, indptr):
+    """Segment sums of `vals` (..., nnz) over the contiguous segments
+    delimited by `indptr` (..., n_segments + 1): inclusive cumsum +
+    boundary gathers — no scatter, linear in nnz, and exact under int32
+    wraparound (cs[j] - cs[i] recovers the segment sum mod 2^32 no matter
+    how the running sum wraps). Leading batch axes broadcast through, so
+    a (C, nnz) per-core stack reduces in one call (core.hiaer)."""
+    zero = jnp.zeros(vals.shape[:-1] + (1,), vals.dtype)
+    cs = jnp.concatenate([zero, jnp.cumsum(vals, axis=-1)], axis=-1)
+    return (jnp.take_along_axis(cs, indptr[..., 1:], axis=-1)
+            - jnp.take_along_axis(cs, indptr[..., :-1], axis=-1))
+
+
+def accumulate_csr(tables: RouteTables, row_gate, n_neurons: int):
+    """Phase 2 via the post-sorted CSR: gather each record's weight and
+    owning-row gate in post order, then `csr_segment_sum`. Linear in
+    synapses regardless of the in-degree distribution — the hub-topology
+    path where the fan-in padding is uneconomical. Bit-exact vs the
+    other accumulate formulations and the seed event queue."""
+    vals = (tables.syn_weight_ext[tables.csr_pos]
+            * row_gate[tables.csr_row])
+    return csr_segment_sum(vals, tables.csr_indptr)
+
+
+def access_counts(axon_counts, neuron_counts, axon_rows, axon_present,
+                  neuron_rows, neuron_present):
+    """Exact HBM access tallies from per-item event counts and the
+    pointer span tables: one pointer read per driven/fired item with a
+    pointer, one row read per spanned synapse row per event — the seed
+    `AccessCounter` semantics, shared by the monolithic engine
+    (`route_event_counts`) and the sharded hiaer engine (which counts
+    against the monolithic spans so its tallies stay bit-exact vs
+    `backend="engine"`)."""
+    ax_ct = axon_counts * axon_present
+    nr_ct = neuron_counts * neuron_present
+    pointer_reads = ax_ct.sum() + nr_ct.sum()
+    row_reads = (ax_ct * axon_rows).sum() + (nr_ct * neuron_rows).sum()
+    return ax_ct, nr_ct, pointer_reads, row_reads
+
+
 def route_event_counts(tables: RouteTables, axon_counts, spikes):
     """Phase-1 bookkeeping: per-row event gate + exact HBM access counts.
 
@@ -160,8 +240,10 @@ def route_event_counts(tables: RouteTables, axon_counts, spikes):
 
     Returns (row_gate (R,) int32, pointer_reads, row_reads) where the two
     scalars match the seed `AccessCounter` increments bit for bit."""
-    ax_ct = axon_counts * tables.axon_present
-    nr_ct = spikes.astype(jnp.int32) * tables.neuron_present
+    ax_ct, nr_ct, pointer_reads, row_reads = access_counts(
+        axon_counts, spikes.astype(jnp.int32),
+        tables.axon_rows, tables.axon_present,
+        tables.neuron_rows, tables.neuron_present)
     n_a = tables.axon_rows.shape[0]
     n_n = tables.neuron_rows.shape[0]
     gate_a = jnp.where(
@@ -170,9 +252,6 @@ def route_event_counts(tables: RouteTables, axon_counts, spikes):
     gate_n = jnp.where(
         tables.row_owner_neuron >= 0,
         nr_ct[jnp.clip(tables.row_owner_neuron, 0, n_n - 1)], 0)
-    pointer_reads = ax_ct.sum() + nr_ct.sum()
-    row_reads = ((ax_ct * tables.axon_rows).sum()
-                 + (nr_ct * tables.neuron_rows).sum())
     return gate_a + gate_n, pointer_reads, row_reads
 
 
@@ -196,20 +275,28 @@ def accumulate(tables: RouteTables, row_gate, n_neurons: int):
     Bit-exact vs `accumulate_scatter` and the seed event queue."""
     if tables.fanin_src.shape[0] == 0:
         raise ValueError("tables built with build_fanin=False; use "
-                         "accumulate_scatter (route(use_fanin=False))")
+                         "accumulate_csr (route(mode=\"csr\"))")
     w = tables.syn_weight_ext[tables.fanin_src]      # (N, D)
     g = row_gate[tables.fanin_row]                   # (N, D)
     return jnp.sum(w * g, axis=1)[:n_neurons]
 
 
+ACCUMULATE_MODES = {
+    "fanin": accumulate,
+    "csr": accumulate_csr,
+    "scatter": accumulate_scatter,
+}
+
+
 def route(tables: RouteTables, axon_counts, spikes, n_neurons: int,
-          use_fanin: bool = True):
+          mode: str = "fanin"):
     """Full two-phase routing step. Returns (syn_in, ptr_reads, row_reads).
-    `use_fanin` is a trace-time switch between the gather (fan-in
-    transpose) and scatter (segment_sum) accumulate formulations."""
+    `mode` is a trace-time switch between the accumulate formulations:
+    "fanin" (padded transpose gathers), "csr" (post-sorted cumsum — the
+    hub-topology fallback), "scatter" (segment_sum)."""
     gate, ptr_reads, row_reads = route_event_counts(tables, axon_counts,
                                                     spikes)
-    acc = accumulate if use_fanin else accumulate_scatter
+    acc = ACCUMULATE_MODES[mode]
     return acc(tables, gate, n_neurons), ptr_reads, row_reads
 
 

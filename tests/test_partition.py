@@ -1,10 +1,14 @@
 """Hierarchical partitioner [10]: locality, capacity, cost model, job
-allocation."""
+allocation — plus the property contracts the hiaer execution tier rests
+on: capacity holds for arbitrary Hierarchy shapes, and the static
+traffic estimate agrees with the per-level AccessCounter measurements of
+the multi-core engine."""
 import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.partition import (Hierarchy, Job, allocate, partition,
+from repro.core.partition import (Hierarchy, Job, allocate,
+                                  level_event_counts, partition,
                                   random_assignment, traffic_cost)
 
 
@@ -79,3 +83,61 @@ def test_partition_deterministic_and_total(seed):
     a2 = partition(adj, HIER)
     assert a1 == a2
     assert set(a1) == set(adj)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 40), st.integers(0, 10_000))
+def test_capacity_holds_for_arbitrary_hierarchy_shapes(
+        servers, fpgas, cores, per_core, seed):
+    """For any Hierarchy shape, a network that fits the total capacity
+    partitions with every core at or under its per-core limit, every
+    core id in range, and every neuron assigned exactly once."""
+    hier = Hierarchy(servers, fpgas, cores, per_core)
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, hier.capacity + 1))
+    adj = {i: [(int(j), int(rng.integers(1, 5)))
+               for j in rng.choice(n, min(3, n), replace=False)]
+           for i in range(n)}
+    asg = partition(adj, hier)
+    assert set(asg) == set(adj)
+    counts = np.bincount(list(asg.values()), minlength=hier.n_cores)
+    assert counts.max() <= hier.neurons_per_core
+    assert 0 <= min(asg.values()) and max(asg.values()) < hier.n_cores
+
+
+def test_traffic_cost_events_match_level_event_counts():
+    """traffic_cost's `events` breakdown is exactly level_event_counts
+    with src == dst assignment, and sums to the deduplicated
+    (source, destination-core) pair count."""
+    adj = clustered_net(n_clusters=3, size=8, seed=4)
+    hier = Hierarchy(2, 1, 2, 8)
+    asg = partition(adj, hier)
+    ev = traffic_cost(adj, asg, hier)["events"]
+    assert ev == level_event_counts(adj, asg, asg, hier)
+    want = sum(len({asg[p] for p, _ in posts if p in asg})
+               for pre, posts in adj.items() if pre in asg)
+    assert sum(ev) == want
+
+
+def test_measured_counter_agrees_with_traffic_cost_events():
+    """The satellite contract: on a small always-firing network the
+    hiaer engine's measured per-level AccessCounter events equal
+    traffic_cost's static `events` estimate times the step count."""
+    from repro.core.api import CRI_network, LIF_neuron
+    rng = np.random.default_rng(9)
+    n = 18
+    names = [f"n{i}" for i in range(n)]
+    lif = LIF_neuron(threshold=-1, nu=-32, lam=63)   # fires every step
+    neurons = {k: ([(names[j], int(rng.integers(1, 6)))
+                    for j in rng.choice(n, 2, replace=False)], lif)
+               for k in names}
+    hier = Hierarchy(2, 2, 1, 6)
+    net = CRI_network(axons={}, neurons=neurons, outputs=names[:1],
+                      backend="hiaer", seed=0, hierarchy=hier)
+    T = 5
+    net.run([[] for _ in range(T)])
+    key_adj = {k: neurons[k][0] for k in names}
+    asg = {k: int(net._impl.neuron_core[net._nid[k]]) for k in names}
+    static = traffic_cost(key_adj, asg, hier)["events"]
+    assert net.counter.level_events == [T * e for e in static]

@@ -210,10 +210,10 @@ def test_jnp_array_schedules_accepted():
         assert out.shape == (2, 2, 1)
 
 
-def test_hub_topology_scatter_fallback_parity():
+def test_hub_topology_csr_fallback_parity():
     """A hub neuron whose fan-in dwarfs the median forces the engine off
-    the padded fan-in transpose onto the scatter accumulate — results and
-    stats must not change."""
+    the padded fan-in transpose onto the CSR-segment accumulate (linear
+    in synapses, no scatter) — results and stats must not change."""
     from repro.kernels.route import fanin_is_economical
     n = 400
     lif = LIF_neuron(threshold=20, nu=-32, lam=5)
@@ -224,6 +224,7 @@ def test_hub_topology_scatter_fallback_parity():
     vec = CRI_network(axons=axons, neurons=neurons, outputs=["hub"],
                       backend="engine", seed=1)
     assert not vec._impl._use_fanin
+    assert vec._impl._acc_mode == "csr"
     assert not fanin_is_economical(vec._impl.flat, vec._impl.n)
     ref = CRI_network(axons=axons, neurons=neurons, outputs=["hub"],
                       backend="engine", seed=1, vectorized=False)
@@ -232,6 +233,38 @@ def test_hub_topology_scatter_fallback_parity():
         f2, p2 = ref.step(["a0"], membranePotential=True)
         assert (f1, p1) == (f2, p2)
     assert vec.counter.as_dict() == ref.counter.as_dict()
+
+
+def test_csr_accumulate_parity_power_law_degrees():
+    """All three accumulate formulations agree bit-for-bit on a
+    power-law in-degree network (the regime the CSR path exists for:
+    max-in-degree padding explodes while CSR stays linear in synapses)."""
+    import jax.numpy as jnp
+    from repro.kernels import route as route_k
+    rng = np.random.default_rng(3)
+    n = 300
+    lif = LIF_neuron(threshold=10, nu=-32, lam=4)
+    names = [f"n{i}" for i in range(n)]
+    # in-degree ~ zipf: neuron j receives ~ n/(j+1) synapses
+    neurons = {}
+    for i, k in enumerate(names):
+        fan = rng.zipf(1.3, 4)
+        tgt = np.unique(np.minimum(
+            rng.zipf(1.2, int(fan.sum()) % 17 + 1) - 1, n - 1))
+        neurons[k] = ([(names[j], int(rng.integers(-9, 10)) or 2)
+                       for j in tgt], lif)
+    axons = {"a0": [(names[j], 25) for j in range(0, n, 11)]}
+    net = CRI_network(axons=axons, neurons=neurons, outputs=names[:4],
+                      backend="engine", seed=6)
+    tables = route_k.RouteTables.from_flat(net._impl.flat, n,
+                                           build_fanin=True)
+    gate = jnp.asarray(
+        rng.integers(0, 3, tables.syn_post.shape[0]).astype(np.int32))
+    a = np.asarray(route_k.accumulate(tables, gate, n))
+    b = np.asarray(route_k.accumulate_csr(tables, gate, n))
+    c = np.asarray(route_k.accumulate_scatter(tables, gate, n))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(b, c)
 
 
 def test_unknown_axon_ids_dropped_on_both_backends():
