@@ -1,0 +1,184 @@
+"""Network CONSTRUCTION throughput — the staged-API PR's claim.
+
+The paper's interface configures networks of up to 160M neurons / 40B
+synapses; at that scale building the description must not be the
+bottleneck. This benchmark times spec-build + compile (synapses/sec,
+no deployment) through two front doors:
+
+  * columnar — `NetworkSpec` bulk ops (`add_axons`/`add_neurons`/one
+    array `connect`) -> `compile_spec`: pure NumPy, no per-synapse
+    Python;
+  * dict — the legacy per-key dict format through
+    `NetworkSpec.from_dicts` -> `compile_spec`: the unavoidable
+    per-synapse Python loop at the dict boundary, then the same
+    vectorized compiler.
+
+For reference it also times the seed-era per-synapse Fig. 7 mapper
+(`hbm.compile_network`) at the sizes where that is bearable.
+
+Results go to BENCH_build.json. `--min-ratio R` turns the
+columnar-vs-dict throughput ratio at 1e5 synapses into a hard gate
+(SystemExit) — CI runs `--smoke --min-ratio 5`, the PR's acceptance
+bar (measured ~6x, with the dict path dominated by boundary Python, so
+the ratio is stable across machine speeds).
+
+    PYTHONPATH=src python -m benchmarks.build_bench [--smoke]
+        [--min-ratio 5] [--out BENCH_build.json]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import hbm
+from repro.core.api import LIF_neuron
+from repro.core.compile import compile_spec
+from repro.core.spec import NetworkSpec
+
+MODEL = LIF_neuron(threshold=50, nu=-32, lam=5)
+
+
+def gen_columns(n_syn: int, seed: int = 0):
+    """Random topology: N = n_syn/10 neurons, A = N/8 axons, 20% of
+    synapses axon-sourced."""
+    rng = np.random.default_rng(seed)
+    N = max(n_syn // 10, 16)
+    A = max(N // 8, 4)
+    n_ax_syn = n_syn // 5
+    pre = np.concatenate([
+        -(rng.integers(0, A, n_ax_syn) + 1),          # encoded axon ids
+        rng.integers(0, N, n_syn - n_ax_syn)])
+    post = rng.integers(0, N, n_syn)
+    w = rng.integers(-100, 100, n_syn)
+    return A, N, pre, post, w
+
+
+def dicts_from_columns(A, N, pre, post, w):
+    """The same network in the legacy dict format (built outside the
+    timed region — the dicts are the INPUT of the dict path)."""
+    axons = {f"a{i}": [] for i in range(A)}
+    neurons = {f"n{i}": ([], MODEL) for i in range(N)}
+    for p, q, ww in zip(pre.tolist(), post.tolist(), w.tolist()):
+        if p < 0:
+            axons[f"a{-p - 1}"].append((f"n{q}", ww))
+        else:
+            neurons[f"n{p}"][0].append((f"n{q}", ww))
+    return axons, neurons, [f"n{i}" for i in range(min(8, N))]
+
+
+def _merge_best(best, t0, t1, t2):
+    best["spec_build_s"] = min(best["spec_build_s"], t1 - t0)
+    best["compile_s"] = min(best["compile_s"], t2 - t1)
+    best["total_s"] = min(best["total_s"], t2 - t0)
+
+
+def _one_columnar(A, N, pre, post, w, best):
+    t0 = time.perf_counter()
+    spec = NetworkSpec()
+    spec.add_axons(A)
+    nr = spec.add_neurons(N, MODEL)
+    spec.connect(pre, post, w)
+    spec.set_outputs(nr[:min(8, N)])
+    t1 = time.perf_counter()
+    compile_spec(spec, target="engine")
+    _merge_best(best, t0, t1, time.perf_counter())
+
+
+def _one_dict(axons, neurons, outputs, best):
+    t0 = time.perf_counter()
+    spec = NetworkSpec.from_dicts(axons, neurons, outputs)
+    t1 = time.perf_counter()
+    compile_spec(spec, target="engine")
+    _merge_best(best, t0, t1, time.perf_counter())
+
+
+def time_both(A, N, pre, post, w, reps=5):
+    """Best-of-`reps`, with columnar and dict builds INTERLEAVED so a
+    load spike on a shared runner degrades both paths rather than
+    skewing the gated ratio."""
+    inf = float("inf")
+    col = {"spec_build_s": inf, "compile_s": inf, "total_s": inf}
+    dic = {"spec_build_s": inf, "compile_s": inf, "total_s": inf}
+    axons, neurons, outputs = dicts_from_columns(A, N, pre, post, w)
+    for _ in range(reps):
+        _one_columnar(A, N, pre, post, w, col)
+        _one_dict(axons, neurons, outputs, dic)
+    return col, dic, (axons, neurons, outputs)
+
+
+def time_seed_mapper(axons, neurons, outputs):
+    aid = {k: i for i, k in enumerate(axons)}
+    nid = {k: i for i, k in enumerate(neurons)}
+    axon_syn = {aid[k]: [(nid[p], int(ww)) for p, ww in axons[k]]
+                for k in axons}
+    neuron_syn = {nid[k]: [(nid[p], int(ww)) for p, ww in neurons[k][0]]
+                  for k in neurons}
+    t0 = time.perf_counter()
+    hbm.compile_network(axon_syn, neuron_syn,
+                        {i: 0 for i in range(len(neurons))},
+                        [nid[k] for k in outputs], len(neurons))
+    return time.perf_counter() - t0
+
+
+def run(sizes=(10 ** 4, 10 ** 5, 10 ** 6), min_ratio=0.0, quiet=False,
+        out_json="BENCH_build.json"):
+    results = {"sizes": {}, "gate_size": 10 ** 5}
+    # warm NumPy/allocator once so the first timed build is not paying
+    # first-touch costs (stabilizes the gate ratio on loaded runners)
+    time_both(*gen_columns(10 ** 4), reps=1)
+    for n_syn in sizes:
+        A, N, pre, post, w = gen_columns(n_syn)
+        col, dic, (axons, neurons, outputs) = time_both(
+            A, N, pre, post, w, reps=5 if n_syn <= 10 ** 5 else 2)
+        entry = {
+            "n_axons": A, "n_neurons": N, "n_synapses": n_syn,
+            "columnar": {**col,
+                         "syn_per_sec": n_syn / col["total_s"]},
+            "dict": {**dic, "syn_per_sec": n_syn / dic["total_s"]},
+            "ratio_columnar_over_dict":
+                dic["total_s"] / col["total_s"],
+        }
+        if n_syn <= 10 ** 5:
+            t_seed = time_seed_mapper(axons, neurons, outputs)
+            entry["seed_mapper_s"] = t_seed
+            entry["ratio_columnar_over_seed"] = t_seed / col["total_s"]
+        results["sizes"][str(n_syn)] = entry
+        if not quiet:
+            print(f"n_syn={n_syn:>8}: columnar "
+                  f"{entry['columnar']['syn_per_sec']:>12,.0f} syn/s   "
+                  f"dict {entry['dict']['syn_per_sec']:>12,.0f} syn/s   "
+                  f"ratio {entry['ratio_columnar_over_dict']:.1f}x")
+    gate = results["sizes"].get(str(results["gate_size"]))
+    if gate is not None:
+        results["gate_ratio"] = gate["ratio_columnar_over_dict"]
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    if not quiet:
+        print(f"wrote {out_json}")
+    if min_ratio > 0:
+        if gate is None:
+            raise SystemExit("gate size 1e5 was not benchmarked")
+        if gate["ratio_columnar_over_dict"] < min_ratio:
+            raise SystemExit(
+                f"columnar/dict ratio "
+                f"{gate['ratio_columnar_over_dict']:.2f}x at 1e5 "
+                f"synapses below the {min_ratio}x gate")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1e4 + 1e5 only (CI)")
+    ap.add_argument("--min-ratio", type=float, default=0.0)
+    ap.add_argument("--out", default="BENCH_build.json")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    sizes = (10 ** 4, 10 ** 5) if args.smoke else \
+        (10 ** 4, 10 ** 5, 10 ** 6)
+    run(sizes=sizes, min_ratio=args.min_ratio, quiet=args.quiet,
+        out_json=args.out)

@@ -1,8 +1,14 @@
-"""Quickstart — the Appendix A.1 example network, verbatim API.
+"""Quickstart — the Appendix A.1 example network, verbatim API, plus
+the staged build→compile→deploy pipeline the dict facade sits on.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import numpy as np
+
 from repro.core.api import ANN_neuron, CRI_network, LIF_neuron
+from repro.core.compile import compile_spec
+from repro.core.deploy import deploy
+from repro.core.spec import NetworkSpec
 
 # neuron models (A.1): a,b = LIF θ=3 almost-no-leak; c = LIF θ=4 λ=2;
 # d = stochastic ANN θ=5
@@ -42,3 +48,29 @@ print(f"synapse a->b: {w} -> {network.read_synapse('a', 'b')}")
 
 # the hardware cost model (Table 2 instrumentation)
 print("HBM access counter:", network.counter.as_dict())
+
+# == the same network through the staged columnar API ==
+# stage 1: columnar spec (bulk array construction — scales to millions
+# of synapses with no per-synapse Python)
+spec = NetworkSpec()
+ax = spec.add_axons(2, keys=["alpha", "beta"])
+nr_ab = spec.add_neurons(2, lif_ab, keys=["a", "b"])
+nr_c = spec.add_neurons(1, lif_c, keys=["c"])
+nr_d = spec.add_neurons(1, ann_d, keys=["d"])
+a, b, c, d = int(nr_ab[0]), int(nr_ab[1]), int(nr_c[0]), int(nr_d[0])
+spec.connect(np.array([ax[0], ax[0], ax[1], a, a, d]),
+             np.array([a, c, b, b, a, c]),
+             np.array([3, 2, 3, 1, 2, 1]))
+spec.set_outputs([a, b])
+
+# stage 2: compile to the packed HBM image (bit-identical to the dict
+# route) — the artifact saves/loads for reuse
+compiled = compile_spec(spec, target="engine")
+print("staged image stats:", compiled.stats())
+
+# stage 3: deploy and run; batched reconfiguration is one upload
+dep = deploy(compiled, seed=0)
+dep.run(np.ones((4, 2), np.int32))
+dep.write_synapses([int(ax[0]), a], [a, b], [5, 2])   # ONE upload
+print("staged read_synapses:",
+      dep.read_synapses([int(ax[0]), a], [a, b]).tolist())

@@ -12,21 +12,33 @@
     net = CRI_network(axons=axons, neurons=neurons, outputs=outputs)
     fired = net.step(["alpha", "beta"])
 
-The same API runs on the dense software simulator (local development), the
+`CRI_network` is now a thin key-space facade over the staged
+build→compile→deploy pipeline:
+
+    spec     = NetworkSpec.from_dicts(axons, neurons, outputs)  # stage 1
+    compiled = compile_spec(spec, target=backend, ...)          # stage 2
+    dep      = deploy(compiled, seed=...)                       # stage 3
+
+so the dict constructor, `CRI_network.from_spec(spec)` (columnar bulk
+construction — the scalable path), and `CRI_network.from_compiled(...)`
+(a saved artifact) all produce bit-identical networks. The same API
+runs on the dense software simulator (local development), the
 event-driven HBM engine (the accelerator path, with energy/latency
 accounting), or the hierarchical multi-core HiAER tier (per-core HBM
-shards with level-aware spike exchange and measured NoC/FireFly/Ethernet
-traffic) — backend="simulator" | "engine" | "hiaer". Results are
-bit-identical across all three (tests/test_api.py, tests/test_hiaer.py);
-this mirrors the paper's seamless local-to-cluster transition.
+shards with level-aware spike exchange and measured NoC/FireFly/
+Ethernet traffic) — backend="simulator" | "engine" | "hiaer". Results
+are bit-identical across all three (tests/test_api.py,
+tests/test_hiaer.py, tests/test_staged_api.py); this mirrors the
+paper's seamless local-to-cluster transition.
 
 The hiaer backend takes a `partition.Hierarchy` (`hierarchy=...`) plus
 optional explicit placements (`placement={neuron_key: core_id}`,
-`axon_placement={axon_key: core_id}`); by default neurons are placed by
-the locality-first BFS partitioner and axons home with the majority of
+`axon_placement={axon_key: core_id}`; id-keyed when constructing from a
+spec/compiled artifact); by default neurons are placed by the
+locality-first BFS partitioner and axons home with the majority of
 their targets.
 
-Batched execution (both backends, bit-exact vs the per-step loop):
+Batched execution (all backends, bit-exact vs the per-step loop):
 
     fired_per_step = net.run(schedule)        # T steps, one lax.scan
     spikes = net.run_batch(batch_schedules)   # (B, T, n_outputs) bool
@@ -36,104 +48,97 @@ event-count array) and advances the network exactly as T `step` calls
 would, counter included. `run_batch` evaluates B independent samples per
 dispatch (each from V = 0 under PRNG stream fold_in(key, sample)) — the
 Table-2 evaluation path (core.spiking.infer_frames_batch).
+
+Synapse access is indexed, not scanned: scalar `read_synapse`/
+`write_synapse` keep the A.1 signatures, and the batched
+`read_synapses`/`write_synapses` apply a whole update set as ONE
+backend upload (core.deploy) — the practical path for host-side
+plasticity (learning.STDP) on every backend including hiaer.
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hbm
 from repro.core import schedule as sched
+from repro.core.compile import CompiledNetwork, compile_spec
 from repro.core.costmodel import AccessCounter
-from repro.core.engine import EventEngine
-from repro.core.hiaer import HiAERNetwork
-from repro.core.neuron import ANN_neuron, LIF_neuron, pack_models
+from repro.core.deploy import Deployment, MissingSynapseError, deploy
+from repro.core.neuron import ANN_neuron, LIF_neuron
 from repro.core.partition import Hierarchy
-from repro.core.simulator import DenseSimulator
+from repro.core.spec import NetworkSpec, encode_axon
 
-__all__ = ["CRI_network", "LIF_neuron", "ANN_neuron", "Hierarchy"]
+__all__ = ["CRI_network", "LIF_neuron", "ANN_neuron", "Hierarchy",
+           "NetworkSpec"]
 
 
 class CRI_network:
-    def __init__(self, axons: Dict, neurons: Dict, outputs: Sequence,
+    def __init__(self, axons: Optional[Dict] = None,
+                 neurons: Optional[Dict] = None,
+                 outputs: Optional[Sequence] = None,
                  backend: str = "engine", seed: int = 0,
                  dense_pack: bool = True, vectorized: bool = True,
                  use_pallas: bool = False,
                  hierarchy: Optional[Hierarchy] = None,
                  placement: Optional[Dict] = None,
-                 axon_placement: Optional[Dict] = None):
-        self.axon_keys = list(axons.keys())
-        self.neuron_keys = list(neurons.keys())
+                 axon_placement: Optional[Dict] = None,
+                 spec: Optional[NetworkSpec] = None,
+                 compiled: Optional[CompiledNetwork] = None):
+        if compiled is None:
+            if spec is None:
+                if axons is None or neurons is None or outputs is None:
+                    raise TypeError("CRI_network needs either "
+                                    "axons/neurons/outputs dicts, "
+                                    "spec=..., or compiled=...")
+                spec = NetworkSpec.from_dicts(axons, neurons, outputs)
+                # legacy placement dicts are key-space; translate here
+                nid = {k: i for i, k in enumerate(spec.neuron_keys)}
+                aid = {k: i for i, k in enumerate(spec.axon_keys)}
+                if placement is not None:
+                    placement = {nid[k]: int(c)
+                                 for k, c in placement.items()}
+                if axon_placement is not None:
+                    axon_placement = {aid[k]: int(c)
+                                      for k, c in axon_placement.items()}
+            compiled = compile_spec(spec, target=backend,
+                                    dense_pack=dense_pack,
+                                    hierarchy=hierarchy,
+                                    placement=placement,
+                                    axon_placement=axon_placement)
+        # a prebuilt artifact fixes the backend (its target)
+        self.backend = compiled.target
+        self.compiled = compiled
+        self._dep: Deployment = deploy(compiled, seed=seed,
+                                       vectorized=vectorized,
+                                       use_pallas=use_pallas)
+        self._impl = self._dep.impl
+        self.counter: Optional[AccessCounter] = self._dep.counter
+        self.image = compiled.image
+        self.axon_keys = list(compiled.axon_keys)
+        self.neuron_keys = list(compiled.neuron_keys)
         self._aid = {k: i for i, k in enumerate(self.axon_keys)}
         self._nid = {k: i for i, k in enumerate(self.neuron_keys)}
-        self.outputs = list(outputs)
-        for k in self.outputs:
-            if k not in self._nid:
-                raise KeyError(f"output {k!r} is not a neuron")
-        A, N = len(self.axon_keys), len(self.neuron_keys)
+        self.outputs = [self.neuron_keys[i] for i in compiled.outputs]
+        self._syn_cache: Optional[Tuple[Dict, Dict]] = None
 
-        models = []
-        neuron_syn: Dict[int, List[Tuple[int, int]]] = {}
-        for k in self.neuron_keys:
-            syns, model = neurons[k]
-            models.append(model)
-            neuron_syn[self._nid[k]] = [(self._nid[p], int(w))
-                                        for p, w in syns]
-        axon_syn = {self._aid[k]: [(self._nid[p], int(w))
-                                   for p, w in axons[k]]
-                    for k in self.axon_keys}
-        theta, nu, lam, is_lif = pack_models(models)
-        self._theta, self._nu, self._lam, self._is_lif = theta, nu, lam, is_lif
-        self._axon_syn, self._neuron_syn = axon_syn, neuron_syn
-        self.backend = backend
-        out_ids = [self._nid[k] for k in self.outputs]
-        # distinct model-parameter tuples define the model groups in HBM
-        sig = {}
-        model_ids = {}
-        for i, m in enumerate(models):
-            s = (m.kind, m.threshold, m.nu, m.lam)
-            model_ids[i] = sig.setdefault(s, len(sig))
-        self._model_ids = model_ids
+    # ------------------------------------------------------- construction
+    @classmethod
+    def from_spec(cls, spec: NetworkSpec, backend: str = "engine",
+                  **kwargs) -> "CRI_network":
+        """Build from a columnar `NetworkSpec` (bulk array construction
+        — the scalable front door). placement/axon_placement kwargs are
+        id-keyed here."""
+        return cls(spec=spec, backend=backend, **kwargs)
 
-        if backend == "simulator":
-            axonW = np.zeros((A, N), np.int32)
-            for a, syns in axon_syn.items():
-                for p, w in syns:
-                    axonW[a, p] += w
-            neuronW = np.zeros((N, N), np.int32)
-            for n, syns in neuron_syn.items():
-                for p, w in syns:
-                    neuronW[n, p] += w
-            self._impl = DenseSimulator(axonW, neuronW, theta, nu, lam,
-                                        is_lif, seed=seed)
-            self.counter: Optional[AccessCounter] = None
-        elif backend == "engine":
-            image = hbm.compile_network(axon_syn, neuron_syn, model_ids,
-                                        out_ids, N, dense_pack=dense_pack)
-            self.image = image
-            self._impl = EventEngine(image, theta, nu, lam, is_lif, N,
-                                     out_ids, seed=seed,
-                                     vectorized=vectorized,
-                                     use_pallas=use_pallas)
-            self.counter = self._impl.counter
-        elif backend == "hiaer":
-            image = hbm.compile_network(axon_syn, neuron_syn, model_ids,
-                                        out_ids, N, dense_pack=dense_pack)
-            self.image = image
-            pl = None if placement is None else \
-                {self._nid[k]: int(c) for k, c in placement.items()}
-            apl = None if axon_placement is None else \
-                {self._aid[k]: int(c) for k, c in axon_placement.items()}
-            self._impl = HiAERNetwork(image, theta, nu, lam, is_lif, N,
-                                      out_ids, axon_syn=axon_syn,
-                                      neuron_syn=neuron_syn,
-                                      hierarchy=hierarchy, placement=pl,
-                                      axon_placement=apl, seed=seed)
-            self.counter = self._impl.counter
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+    @classmethod
+    def from_compiled(cls, compiled: CompiledNetwork,
+                      **kwargs) -> "CRI_network":
+        """Wrap an already-compiled (possibly `CompiledNetwork.load`ed)
+        artifact; backend comes from the artifact's target."""
+        kwargs.setdefault("backend", compiled.target)
+        return cls(compiled=compiled, **kwargs)
 
     # ------------------------------------------------------------- running
     def step(self, inputs: Sequence = (), membranePotential: bool = False):
@@ -171,11 +176,12 @@ class CRI_network:
             len(self.axon_keys))
 
     def run(self, schedule) -> List[List]:
-        """T timesteps in one backend dispatch (lax.scan on both backends).
-        schedule: length-T sequence of axon-key sequences, or a (T, A)
-        int32 count array (A = len(axon_keys), axon order = insertion
-        order). Returns the per-step fired output keys — exactly what T
-        `step` calls would return, state and access counter included."""
+        """T timesteps in one backend dispatch (lax.scan on all
+        backends). schedule: length-T sequence of axon-key sequences, or
+        a (T, A) int32 count array (A = len(axon_keys), axon order =
+        insertion order). Returns the per-step fired output keys —
+        exactly what T `step` calls would return, state and access
+        counter included."""
         counts = self._encode_schedule(schedule)
         spikes = self._impl.run(self._pad_axons(counts))
         return [[k for k in self.outputs if spikes[t, self._nid[k]]]
@@ -210,53 +216,96 @@ class CRI_network:
             raise ValueError(
                 f"schedule width {counts.shape[-1]} != number of axons "
                 f"{len(self.axon_keys)}")
-        want = getattr(self._impl, "n_axon_slots", counts.shape[-1])
-        return sched.pad_width(counts, want)
+        return sched.pad_width(counts, self._dep.n_axon_slots)
 
     # ------------------------------------------------------------ synapses
+    def _encode_pre(self, keys) -> np.ndarray:
+        """Key sequence -> encoded source ids (axon keys win the
+        namespace, matching the legacy scan order: an axon and a neuron
+        sharing a key resolve to the axon)."""
+        out = np.empty((len(keys),), np.int64)
+        for i, k in enumerate(keys):
+            if k in self._aid:
+                out[i] = encode_axon(self._aid[k])
+            else:
+                out[i] = self._nid[k]       # KeyError on unknown keys
+        return out
+
+    @staticmethod
+    def _missing_key(seq, index):
+        """Map a missing-pair index (position in the BROADCAST pair
+        array) back to the user's key: a length-1 sequence was
+        broadcast, so every index refers to its only element."""
+        seq = list(seq)
+        return seq[index] if len(seq) > 1 else seq[0]
+
+    def read_synapses(self, pres: Sequence, posts: Sequence) -> np.ndarray:
+        """Batched synapse read (one gather): current weight of each
+        (pre, post) key pair. KeyError on any missing synapse."""
+        pre = self._encode_pre(list(pres))
+        post = np.asarray([self._nid[k] for k in posts], np.int64)
+        try:
+            return self._dep.read_synapses(pre, post)
+        except MissingSynapseError as e:
+            raise KeyError(f"no synapse "
+                           f"{self._missing_key(pres, e.index)!r}->"
+                           f"{self._missing_key(posts, e.index)!r}") \
+                from None
+
+    def write_synapses(self, pres: Sequence, posts: Sequence,
+                       weights) -> None:
+        """Batched synapse write, applied as ONE backend weight upload /
+        re-shard (the PCIe-batch path that makes host-side plasticity
+        practical). All pairs are validated before anything mutates;
+        KeyError on any missing synapse."""
+        pre = self._encode_pre(list(pres))
+        post = np.asarray([self._nid[k] for k in posts], np.int64)
+        try:
+            self._dep.write_synapses(pre, post, np.asarray(weights))
+        except MissingSynapseError as e:
+            raise KeyError(f"no synapse "
+                           f"{self._missing_key(pres, e.index)!r}->"
+                           f"{self._missing_key(posts, e.index)!r}") \
+                from None
+        self._syn_cache = None
+
     def read_synapse(self, pre, post) -> int:
-        pid = self._nid[post]
-        if pre in self._aid:
-            table = self._axon_syn[self._aid[pre]]
-        else:
-            table = self._neuron_syn[self._nid[pre]]
-        for p, w in table:
-            if p == pid:
-                return w
-        raise KeyError(f"no synapse {pre!r}->{post!r}")
+        return int(self.read_synapses([pre], [post])[0])
 
     def write_synapse(self, pre, post, weight: int):
-        pid = self._nid[post]
-        if pre in self._aid:
-            table = self._axon_syn[self._aid[pre]]
-        else:
-            table = self._neuron_syn[self._nid[pre]]
-        for i, (p, w) in enumerate(table):
-            if p == pid:
-                old = w
-                table[i] = (p, int(weight))
-                break
-        else:
-            raise KeyError(f"no synapse {pre!r}->{post!r}")
-        # apply to the backend storage in place
-        if self.backend == "simulator":
-            if pre in self._aid:
-                self._impl.axonW = self._impl.axonW.at[
-                    self._aid[pre], pid].add(int(weight) - old)
-            else:
-                self._impl.neuronW = self._impl.neuronW.at[
-                    self._nid[pre], pid].add(int(weight) - old)
-        else:
-            img = self.image
-            ptr = (img.axon_ptr[self._aid[pre]] if pre in self._aid
-                   else img.neuron_ptr[self._nid[pre]])
-            rows = slice(ptr.base_row, ptr.base_row + ptr.n_rows)
-            slot = pid % hbm.SLOTS
-            col_post = img.syn_post[rows, slot]
-            hit = np.nonzero(col_post == pid)[0]
-            img.syn_weight[ptr.base_row + hit[0], slot] = np.int16(weight)
-            self._impl.update_weights(img.syn_weight)
+        self.write_synapses([pre], [post], [int(weight)])
 
     def read_membrane(self, *keys) -> List[int]:
         V = np.asarray(self._impl.V)
         return [int(V[self._nid[k]]) for k in keys]
+
+    # ----------------------------------------------- legacy introspection
+    def _syn_dicts(self) -> Tuple[Dict, Dict]:
+        """Materialize the legacy id-keyed adjacency dicts
+        {axon_id: [(post_id, w), ...]} / {neuron_id: [...]} from the
+        columns (current weights). Kept for introspection-style callers;
+        rebuilt after weight writes."""
+        if self._syn_cache is None:
+            c = self.compiled
+            axon_syn: Dict[int, List] = {i: [] for i in
+                                         range(len(self.axon_keys))}
+            neuron_syn: Dict[int, List] = {i: [] for i in
+                                           range(len(self.neuron_keys))}
+            item = c.syn_item
+            base = c.item_base
+            for it, p, w in zip(item.tolist(), c.syn_post.tolist(),
+                                c.syn_weight.tolist()):
+                if it < base:
+                    axon_syn[it].append((p, w))
+                else:
+                    neuron_syn[it - base].append((p, w))
+            self._syn_cache = (axon_syn, neuron_syn)
+        return self._syn_cache
+
+    @property
+    def _axon_syn(self) -> Dict[int, List]:
+        return self._syn_dicts()[0]
+
+    @property
+    def _neuron_syn(self) -> Dict[int, List]:
+        return self._syn_dicts()[1]

@@ -1,0 +1,402 @@
+"""Stage 2 of the staged API: lower a columnar `NetworkSpec` to a
+compiled, deployable artifact.
+
+    compiled = compile_spec(spec, target="engine")   # or simulator/hiaer
+    compiled.save("net.npz"); compiled = CompiledNetwork.load("net.npz")
+    dep = deploy(compiled)                           # core.deploy
+
+Per target the compiler lowers the same columns to the backend's native
+storage — no intermediate per-key dicts, no per-synapse Python:
+
+  * simulator — dense (A, N)/(N, N) int32 weight matrices (one
+    `np.add.at` scatter);
+  * engine — the packed §4 HBM routing table via the vectorized Fig. 7
+    mapper (`hbm.build_image_columnar`), bit-identical to the legacy
+    `hbm.compile_network` walk;
+  * hiaer — the HBM image PLUS the per-core grey/white-matter shards
+    built *directly from the columns* (`hbm.shard_entries`) — the
+    build-time sharding the ROADMAP called for, retiring the
+    materialize-monolithic-then-scan `shard_image` path — together with
+    the placement, axon homing, and the exchange destination tables
+    (`kernels.exchange.build_dest_tables_columns`).
+
+`CompiledNetwork` also carries the synapse columns in engine item space
+plus each record's flat position in the packed table: that is the
+runtime (pre, post) -> (row, slot) index `core.deploy` uses for batched
+`read_synapses`/`write_synapses`, replacing the legacy per-call list
+scans. `save`/`load` round-trip the whole artifact bit for bit
+(tests/test_staged_api.py).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import hbm
+from repro.core.hbm import (CoreShards, FlatImage, HBMImage, Pointer,
+                            SLOTS)
+from repro.core.partition import Hierarchy, partition
+from repro.core.spec import NetworkSpec, decode_pre
+from repro.kernels import exchange as exch_k
+
+__all__ = ["CompiledNetwork", "compile_spec", "TARGETS"]
+
+TARGETS = ("simulator", "engine", "hiaer")
+
+
+@dataclass
+class CompiledNetwork:
+    """The compiled artifact: everything a `Deployment` needs, and
+    nothing tied to the Python objects that built it."""
+    target: str
+    dense_pack: bool
+    n_axons: int
+    n_neurons: int
+    axon_keys: List
+    neuron_keys: List
+    outputs: np.ndarray            # (n_out,) neuron ids, monitor order
+    theta: np.ndarray              # (N,) int32 packed model tables
+    nu: np.ndarray
+    lam: np.ndarray
+    is_lif: np.ndarray
+    model_gid: np.ndarray          # (N,) int32 HBM model group
+    # synapse columns, append order; item space: axon id in [0, A'),
+    # neuron id + A' with A' = item_base = max(n_axons, 1)
+    syn_item: np.ndarray           # (S,) int64
+    syn_post: np.ndarray           # (S,) int64
+    syn_weight: np.ndarray         # (S,) int32 CURRENT weights (the
+    #                                authoritative read_synapses source)
+    syn_pos: Optional[np.ndarray] = None   # (S,) flat row*SLOTS+slot
+    #                                        (engine/hiaer targets)
+    image: Optional[HBMImage] = None
+    flat: Optional[FlatImage] = None
+    axonW: Optional[np.ndarray] = None     # simulator target
+    neuronW: Optional[np.ndarray] = None
+    # hiaer target
+    hierarchy: Optional[Hierarchy] = None
+    neuron_core: Optional[np.ndarray] = None
+    axon_core: Optional[np.ndarray] = None
+    shards: Optional[CoreShards] = None
+    axon_ndest: Optional[np.ndarray] = None
+    neuron_ndest: Optional[np.ndarray] = None
+
+    @property
+    def item_base(self) -> int:
+        """Neuron offset in item space (the engine's axon-table width)."""
+        return max(self.n_axons, 1)
+
+    @property
+    def n_synapses(self) -> int:
+        return int(self.syn_item.shape[0])
+
+    def stats(self) -> Dict[str, float]:
+        out = {"target": self.target, "n_axons": self.n_axons,
+               "n_neurons": self.n_neurons, "n_synapses": self.n_synapses}
+        if self.image is not None:
+            out.update(self.image.stats())
+        if self.shards is not None:
+            out.update({f"shard_{k}": v
+                        for k, v in self.shards.stats().items()})
+        return out
+
+    # ------------------------------------------------------------ persist
+    def save(self, path) -> None:
+        """Serialize to one .npz artifact (arrays verbatim; keys via a
+        pickled object payload). `load` restores it bit-identically."""
+        arrays = {
+            "outputs": self.outputs, "theta": self.theta, "nu": self.nu,
+            "lam": self.lam, "is_lif": self.is_lif,
+            "model_gid": self.model_gid, "syn_item": self.syn_item,
+            "syn_post": self.syn_post, "syn_weight": self.syn_weight,
+        }
+        meta = {"version": 1, "target": self.target,
+                "dense_pack": bool(self.dense_pack),
+                "n_axons": self.n_axons, "n_neurons": self.n_neurons,
+                "axon_keys": self.axon_keys,
+                "neuron_keys": self.neuron_keys}
+        if self.syn_pos is not None:
+            arrays["syn_pos"] = self.syn_pos
+        if self.image is not None:
+            img = self.image
+            arrays.update(
+                img_post=img.syn_post, img_weight=img.syn_weight,
+                img_outflag=img.syn_outflag,
+                axon_base=self.flat.axon_base,
+                axon_rows=self.flat.axon_rows,
+                axon_present=self.flat.axon_present,
+                neuron_base=self.flat.neuron_base,
+                neuron_rows=self.flat.neuron_rows,
+                neuron_present=self.flat.neuron_present)
+        if self.axonW is not None:
+            arrays.update(axonW=self.axonW, neuronW=self.neuronW)
+        if self.hierarchy is not None:
+            h = self.hierarchy
+            meta["hierarchy"] = (h.n_servers, h.fpgas_per_server,
+                                 h.cores_per_fpga, h.neurons_per_core)
+            sh = self.shards
+            arrays.update(
+                neuron_core=self.neuron_core, axon_core=self.axon_core,
+                axon_ndest=self.axon_ndest,
+                neuron_ndest=self.neuron_ndest,
+                sh_core_nids=sh.core_nids,
+                sh_core_of_neuron=sh.core_of_neuron,
+                sh_local_id=sh.local_id, sh_csr_src=sh.csr_src,
+                sh_csr_item=sh.csr_item, sh_csr_indptr=sh.csr_indptr,
+                sh_grey=sh.grey_entries, sh_white=sh.white_entries,
+                sh_white_sources=sh.white_sources)
+            meta["shard_dims"] = (sh.n_cores, sh.n_max)
+        # JSON, not pickle: a loaded artifact must never execute code.
+        # Keys therefore have to be JSON-serializable (str/int/...);
+        # dumps raises a clear TypeError otherwise.
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode("utf-8"), dtype=np.uint8)
+        np.savez_compressed(path, **arrays)
+
+    @classmethod
+    def load(cls, path) -> "CompiledNetwork":
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(z["meta_json"].tobytes().decode("utf-8"))
+            if meta.get("version") != 1:
+                raise ValueError(
+                    f"unsupported artifact version {meta.get('version')}")
+            c = cls(
+                target=meta["target"], dense_pack=meta["dense_pack"],
+                n_axons=meta["n_axons"], n_neurons=meta["n_neurons"],
+                axon_keys=meta["axon_keys"],
+                neuron_keys=meta["neuron_keys"],
+                outputs=z["outputs"], theta=z["theta"], nu=z["nu"],
+                lam=z["lam"], is_lif=z["is_lif"],
+                model_gid=z["model_gid"], syn_item=z["syn_item"],
+                syn_post=z["syn_post"],
+                syn_weight=np.array(z["syn_weight"]))
+            if "syn_pos" in z:
+                c.syn_pos = z["syn_pos"]
+            if "img_post" in z:
+                c.image, c.flat = _rebuild_image(
+                    np.array(z["img_post"]), np.array(z["img_weight"]),
+                    np.array(z["img_outflag"]), z["axon_base"],
+                    z["axon_rows"], z["axon_present"], z["neuron_base"],
+                    z["neuron_rows"], z["neuron_present"], c.model_gid,
+                    c.n_axons, c.n_neurons)
+            if "axonW" in z:
+                c.axonW = np.array(z["axonW"])
+                c.neuronW = np.array(z["neuronW"])
+            if "hierarchy" in meta:
+                c.hierarchy = Hierarchy(*meta["hierarchy"])
+                c.neuron_core = z["neuron_core"]
+                c.axon_core = z["axon_core"]
+                c.axon_ndest = z["axon_ndest"]
+                c.neuron_ndest = z["neuron_ndest"]
+                n_cores, n_max = meta["shard_dims"]
+                c.shards = CoreShards(
+                    n_cores=n_cores, n_max=n_max,
+                    core_nids=z["sh_core_nids"],
+                    core_of_neuron=z["sh_core_of_neuron"],
+                    local_id=z["sh_local_id"], csr_src=z["sh_csr_src"],
+                    csr_item=z["sh_csr_item"],
+                    csr_indptr=z["sh_csr_indptr"],
+                    grey_entries=z["sh_grey"],
+                    white_entries=z["sh_white"],
+                    white_sources=z["sh_white_sources"])
+        return c
+
+
+def _rebuild_image(post, weight, outflag, a_base, a_rows, a_present,
+                   n_base, n_rows, n_present, model_gid, A, N):
+    """Reconstruct (HBMImage, FlatImage) from saved arrays — the pointer
+    dicts and inverse maps are pure functions of the id-indexed tables,
+    so the round trip is bit-identical."""
+    def mk_ptrs(base, rows, present, n):
+        return {i: Pointer(int(base[i]), int(rows[i]))
+                for i in range(n) if present[i]}
+
+    def mk_groups():
+        groups: Dict[int, List[int]] = {}
+        for nid in range(N):
+            groups.setdefault(int(model_gid[nid]), []).append(nid)
+        return {g: sorted(m) for g, m in groups.items()}
+
+    image = HBMImage(
+        post, weight, outflag,
+        axon_ptr=lambda: mk_ptrs(a_base, a_rows, a_present, A),
+        neuron_ptr=lambda: mk_ptrs(n_base, n_rows, n_present, N),
+        model_groups=mk_groups)
+    R = post.shape[0]
+    ab, ar, ap, aown, a_indptr, aidx = hbm._flatten_arrays(
+        a_base, a_rows, a_present, R)
+    nb, nr, npr, nown, n_indptr, nidx = hbm._flatten_arrays(
+        n_base, n_rows, n_present, R)
+    flat = FlatImage(
+        syn_post=np.ascontiguousarray(post, np.int32),
+        syn_weight=np.ascontiguousarray(weight, np.int32),
+        axon_base=ab, axon_rows=ar, axon_present=ap,
+        neuron_base=nb, neuron_rows=nr, neuron_present=npr,
+        row_owner_axon=aown, row_owner_neuron=nown,
+        axon_row_indptr=a_indptr, axon_row_indices=aidx,
+        neuron_row_indptr=n_indptr, neuron_row_indices=nidx)
+    return image, flat
+
+
+# ---------------------------------------------------------------- lowering
+def _neuron_adjacency(raw_pre, post, w, is_axon, n_neurons):
+    """Neuron->neuron adjacency dict for the BFS partitioner, in legacy
+    iteration order (ids 0..N-1, per-item synapses in column order)."""
+    adj: Dict[int, List] = {i: [] for i in range(n_neurons)}
+    sel = ~is_axon
+    for p, q, ww in zip(raw_pre[sel].tolist(), post[sel].tolist(),
+                        w[sel].tolist()):
+        adj[p].append((q, ww))
+    return adj
+
+
+def _axon_majority(raw_pre, post, is_axon, neuron_core, n_axons,
+                   n_cores) -> np.ndarray:
+    """Vectorized majority-target axon homing (ties to the lowest core
+    id; axons with no targets home on core 0) — bit-identical to
+    `core.hiaer._axon_majority_placement`."""
+    core = np.zeros((max(n_axons, 1),), np.int32)
+    sel = is_axon
+    if sel.any() and n_cores > 0:
+        aid = raw_pre[sel]
+        tgt_core = np.asarray(neuron_core, np.int64)[post[sel]]
+        counts = np.bincount(aid * n_cores + tgt_core,
+                             minlength=max(n_axons, 1) * n_cores) \
+            .reshape(max(n_axons, 1), n_cores)
+        core[:] = counts.argmax(axis=1).astype(np.int32)
+    return core[:max(n_axons, 1)]
+
+
+def _check_placement(core: np.ndarray, hier: Hierarchy, n: int):
+    """The legacy `HiAERNetwork._check_placement` validations, batched."""
+    if n and core.min() < 0:
+        missing = int(np.nonzero(core < 0)[0][0])
+        raise ValueError(f"placement missing neuron {missing}")
+    if n and core.max() >= hier.n_cores:
+        bad = int(np.nonzero(core >= hier.n_cores)[0][0])
+        raise ValueError(
+            f"neuron {bad} placed on core {int(core[bad])}, hierarchy "
+            f"has {hier.n_cores}")
+    load = np.bincount(core, minlength=hier.n_cores) if n \
+        else np.zeros(hier.n_cores, int)
+    if load.size and load.max() > hier.neurons_per_core:
+        raise ValueError(
+            f"core {int(load.argmax())} holds {int(load.max())} "
+            f"neurons > capacity {hier.neurons_per_core}")
+
+
+def compile_spec(spec: NetworkSpec, target: str = "engine", *,
+                 dense_pack: bool = True,
+                 hierarchy: Optional[Hierarchy] = None,
+                 placement: Optional[Dict[int, int]] = None,
+                 axon_placement: Optional[Dict[int, int]] = None
+                 ) -> CompiledNetwork:
+    """Lower a `NetworkSpec` to a `CompiledNetwork` for one target.
+    `placement`/`axon_placement` map neuron/axon IDS to cores (the
+    `CRI_network` facade translates keys). See the module docstring for
+    what each target materializes."""
+    if target not in TARGETS:
+        raise ValueError(f"unknown target {target!r} (one of {TARGETS})")
+    pre, post, w = spec.columns()
+    A, N = spec.n_axons, spec.n_neurons
+    A_eng = max(A, 1)
+    theta, nu, lam, is_lif, model_gid = spec.model_tables()
+    outputs = spec.outputs
+    # item spaces in two fused passes (decode_pre folded in): the
+    # mapper's (neurons at A + id) and the engine's (neurons at A_eng)
+    mapper_item = np.where(pre < 0, -pre - 1, A + pre)
+    syn_item = mapper_item if A == A_eng else \
+        np.where(pre < 0, -pre - 1, A_eng + pre)
+
+    # every stored record is int16 (the paper's weight width): clip once
+    # here so the readable column, the packed image, and the dense
+    # simulator matrices can never disagree on a record's value
+    w16 = np.clip(w, -32768, 32767)
+    c = CompiledNetwork(
+        target=target, dense_pack=bool(dense_pack), n_axons=A,
+        n_neurons=N, axon_keys=spec.axon_keys,
+        neuron_keys=spec.neuron_keys, outputs=outputs, theta=theta,
+        nu=nu, lam=lam, is_lif=is_lif, model_gid=model_gid,
+        syn_item=syn_item, syn_post=post.copy(),
+        syn_weight=w16.astype(np.int32))
+
+    if target == "simulator":
+        is_axon, raw = decode_pre(pre)
+        axonW = np.zeros((A, N), np.int32)
+        neuronW = np.zeros((N, N), np.int32)
+        sel = is_axon
+        np.add.at(axonW, (raw[sel], post[sel]),
+                  w16[sel].astype(np.int32))
+        np.add.at(neuronW, (raw[~sel], post[~sel]),
+                  w16[~sel].astype(np.int32))
+        c.axonW, c.neuronW = axonW, neuronW
+        return c
+
+    # shared engine/hiaer lowering: the packed HBM image from columns
+    ci = hbm.build_image_columnar(mapper_item, post, w, A, N, model_gid,
+                                  outputs, dense_pack=dense_pack)
+    c.image, c.flat, c.syn_pos = ci.image, ci.flat, ci.syn_pos
+    if target == "engine":
+        return c
+
+    # hiaer: placement + axon homing + per-core shards from the columns
+    is_axon, raw = decode_pre(pre)
+    hier = hierarchy if hierarchy is not None else \
+        Hierarchy(1, 1, 1, max(N, 1))
+    if N > hier.capacity:
+        raise ValueError(f"network ({N}) exceeds capacity "
+                         f"({hier.capacity})")
+    if placement is not None:
+        neuron_core = np.full((N,), -1, np.int64)
+        for nid, cc in placement.items():
+            if not 0 <= nid < N:
+                raise ValueError(f"placement has unknown neuron id {nid}")
+            if not 0 <= cc < hier.n_cores:
+                raise ValueError(
+                    f"neuron {nid} placed on core {cc}, hierarchy has "
+                    f"{hier.n_cores}")
+            neuron_core[nid] = cc
+        _check_placement(neuron_core, hier, N)
+        neuron_core = neuron_core.astype(np.int32)
+    elif hier.n_cores == 1:
+        # the BFS partitioner provably assigns everything to core 0
+        # when there is only one core — skip its O(N^2) frontier scan
+        neuron_core = np.zeros((N,), np.int32)
+    else:
+        adjacency = _neuron_adjacency(raw, post, w, is_axon, N)
+        pl = partition(adjacency, hier)
+        neuron_core = np.asarray([pl[i] for i in range(N)], np.int32)
+        _check_placement(neuron_core, hier, N)
+    axon_core = _axon_majority(raw, post, is_axon, neuron_core, A,
+                               hier.n_cores)
+    if axon_placement is not None:
+        for a, cc in axon_placement.items():
+            if not 0 <= a < A_eng:
+                raise ValueError(f"axon_placement has unknown axon "
+                                 f"id {a}")
+            if not 0 <= cc < hier.n_cores:
+                raise ValueError(f"axon {a} placed on core {cc}, "
+                                 f"hierarchy has {hier.n_cores}")
+            axon_core[a] = cc
+
+    # build-time sharding straight from the columns (plus in-range A.3
+    # fillers, which shard_image would also keep) — no dense-table scan
+    keep_fill = ci.filler_post < N
+    pos_all = np.concatenate([ci.syn_pos, ci.filler_pos[keep_fill]])
+    item_all = np.concatenate([syn_item, ci.filler_item[keep_fill]])
+    post_all = np.concatenate([post, ci.filler_post[keep_fill]])
+    if N == 0:
+        pos_all = pos_all[:0]
+        item_all = item_all[:0]
+        post_all = post_all[:0]
+    sentinel = ci.image.n_rows * SLOTS
+    c.hierarchy = hier
+    c.neuron_core, c.axon_core = neuron_core, axon_core
+    c.shards = hbm.shard_entries(pos_all, item_all, post_all,
+                                 neuron_core, axon_core, hier.n_cores,
+                                 N, A_eng, sentinel)
+    c.axon_ndest, c.neuron_ndest = exch_k.build_dest_tables_columns(
+        syn_item, post, axon_core, neuron_core, hier, A_eng, N)
+    return c

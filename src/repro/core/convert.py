@@ -19,7 +19,7 @@ implements the same pipeline natively in JAX:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -203,99 +203,127 @@ def apply_quantized(model: QATModel, qparams, X) -> np.ndarray:
 
 
 # --------------------------------------------------------------- conversion
-def to_network(model: QATModel, qparams, backend="engine",
-               seed=0) -> Tuple[CRI_network, List[str]]:
-    """Build the CRI_network per A.2. Returns (network, output_keys).
+def build_conversion_spec(model: QATModel, qparams, hidden_model,
+                          output_model):
+    """A.2 adjacency construction as a columnar `NetworkSpec` (the
+    staged front end): sliding conv windows and dense fan-ins become
+    broadcast index arrays + one bulk `connect` per layer — no
+    per-synapse Python. Returns (spec, out_keys).
 
-    Axons: one per input element, row-major keys "x{i}"; plus one bias axon
-    per layer ("bias_l{i}", A.2 bias method 2) carrying that layer's folded
-    biases. Each bias axon is fired at the timestep its layer integrates
-    (infer_image), so ANN neurons — which are memoryless and would otherwise
-    re-fire every step under the threshold-shift method when b_i > 0 —
-    stay bit-exact with the integer reference forward.
-    """
-    axons: Dict[str, List[Tuple[str, int]]] = {}
-    neurons: Dict[str, Tuple[List[Tuple[str, int]], object]] = {}
+    Axons: one per input element, row-major keys "x{i}"; plus one bias
+    axon per layer ("bias_l{i}", A.2 bias method 2) carrying that
+    layer's folded biases. `hidden_model`/`output_model` parameterize
+    the neuron models so the ANN (convert) and spiking-IF (spiking)
+    pipelines share the construction."""
+    from repro.core.spec import NetworkSpec
+
+    spec = NetworkSpec()
     n_inputs = int(np.prod(model.input_shape))
-    in_keys = [f"x{i}" for i in range(n_inputs)]
-    for k in in_keys:
-        axons[k] = []
-    for i in range(len(model.layers) + 1):
-        axons[f"bias_l{i}"] = []
+    in_ids = spec.add_axons(n_inputs,
+                            keys=[f"x{i}" for i in range(n_inputs)])
+    depth = len(model.layers) + 1
+    bias_ids = spec.add_axons(depth,
+                              keys=[f"bias_l{i}" for i in range(depth)])
 
-    prev_keys = np.array(in_keys, dtype=object).reshape(model.input_shape)
-    prev_is_axon = True
+    prev_ids = in_ids.reshape(model.input_shape)
+    pre_parts: List[np.ndarray] = []
+    post_parts: List[np.ndarray] = []
+    w_parts: List[np.ndarray] = []
 
-    def add_syn(pre, post, w):
-        w = int(w)
-        if w == 0:
-            return
-        if prev_is_axon:
-            axons[pre].append((post, w))
-        else:
-            neurons[pre][0].append((post, w))
+    def emit(pre, post, w):
+        """Queue nonzero synapses (legacy `add_syn` skips w == 0)."""
+        pre = np.asarray(pre, np.int64).reshape(-1)
+        post = np.asarray(post, np.int64).reshape(-1)
+        w = np.asarray(w, np.int64).reshape(-1)
+        nz = w != 0
+        pre_parts.append(pre[nz])
+        post_parts.append(post[nz])
+        w_parts.append(w[nz])
 
     layer_idx = 0
-    for spec, p in zip(model.layers, qparams[:-1]):
-        if spec.kind == "conv":
-            C, H, W = prev_keys.shape
-            K, st = spec.kernel, spec.stride
+    for lspec, p in zip(model.layers, qparams[:-1]):
+        if lspec.kind == "conv":
+            C, H, W = prev_ids.shape
+            K, st = lspec.kernel, lspec.stride
+            O = lspec.channels
             Ho = (H - K) // st + 1
             Wo = (W - K) // st + 1
-            new_keys = np.empty((spec.channels, Ho, Wo), object)
-            for o in range(spec.channels):
-                for yy in range(Ho):
-                    for xx in range(Wo):
-                        nk = f"l{layer_idx}_f{o}_{yy}_{xx}"
-                        new_keys[o, yy, xx] = nk
-                        neurons[nk] = ([], ANN_neuron(threshold=0))
-                        if int(p["b"][o]):
-                            axons[f"bias_l{layer_idx}"].append(
-                                (nk, int(p["b"][o])))
-            # sliding window (A.2): window over the index tensor
-            for o in range(spec.channels):
-                for yy in range(Ho):
-                    for xx in range(Wo):
-                        post = new_keys[o, yy, xx]
-                        for c in range(C):
-                            for dy in range(K):
-                                for dx in range(K):
-                                    pre = prev_keys[c, yy * st + dy,
-                                                    xx * st + dx]
-                                    add_syn(pre, post,
-                                            p["w"][o, c, dy, dx])
-            prev_keys = new_keys
+            keys = [f"l{layer_idx}_f{o}_{yy}_{xx}"
+                    for o in range(O) for yy in range(Ho)
+                    for xx in range(Wo)]
+            new_ids = spec.add_neurons(O * Ho * Wo, hidden_model,
+                                       keys=keys).reshape(O, Ho, Wo)
+            # bias axon fan-out: one synapse per map position (b != 0)
+            emit(np.broadcast_to(bias_ids[layer_idx], (O, Ho, Wo)),
+                 new_ids,
+                 np.broadcast_to(np.asarray(p["b"], np.int64)
+                                 [:, None, None], (O, Ho, Wo)))
+            # sliding window (A.2) as one gather: window (c, dy, dx) of
+            # output position (yy, xx) reads prev[(yy*st+dy, xx*st+dx)]
+            wy = (np.arange(Ho) * st)[:, None] + np.arange(K)[None, :]
+            wx = (np.arange(Wo) * st)[:, None] + np.arange(K)[None, :]
+            # pre_win: (C, Ho, K, Wo, K) -> (Ho, Wo, C, K, K)
+            pre_win = prev_ids[:, wy][:, :, :, wx] \
+                .transpose(1, 3, 0, 2, 4)
+            pre_full = np.broadcast_to(pre_win[None],
+                                       (O,) + pre_win.shape)
+            post_full = np.broadcast_to(
+                new_ids[:, :, :, None, None, None],
+                (O, Ho, Wo, C, K, K))
+            w_full = np.broadcast_to(
+                np.asarray(p["w"], np.int64)[:, None, None, :, :, :],
+                (O, Ho, Wo, C, K, K))
+            emit(pre_full, post_full, w_full)
+            prev_ids = new_ids
         else:
-            flat = prev_keys.reshape(-1)
-            new_keys = np.empty((spec.out_features,), object)
-            for j in range(spec.out_features):
-                nk = f"l{layer_idx}_u{j}"
-                new_keys[j] = nk
-                neurons[nk] = ([], ANN_neuron(threshold=0))
-                if int(p["b"][j]):
-                    axons[f"bias_l{layer_idx}"].append((nk, int(p["b"][j])))
-            for i, pre in enumerate(flat):
-                for j in range(spec.out_features):
-                    add_syn(pre, new_keys[j], p["w"][i, j])
-            prev_keys = new_keys
-        prev_is_axon = False
+            flat = prev_ids.reshape(-1)
+            F = lspec.out_features
+            keys = [f"l{layer_idx}_u{j}" for j in range(F)]
+            new_ids = spec.add_neurons(F, hidden_model, keys=keys)
+            emit(np.broadcast_to(bias_ids[layer_idx], (F,)), new_ids,
+                 np.asarray(p["b"], np.int64))
+            emit(np.broadcast_to(flat[:, None], (flat.size, F)),
+                 np.broadcast_to(new_ids[None, :], (flat.size, F)),
+                 np.asarray(p["w"], np.int64))
+            prev_ids = new_ids
         layer_idx += 1
 
-    # output layer: high threshold so outputs never fire/reset — their
-    # membrane potential after the final step IS the integer logit
+    # output layer
     p = qparams[-1]
-    flat = prev_keys.reshape(-1)
+    flat = prev_ids.reshape(-1)
     out_keys = [f"out{j}" for j in range(model.n_classes)]
-    for j, ok in enumerate(out_keys):
-        neurons[ok] = ([], ANN_neuron(threshold=2 ** 30))
-        if int(p["b"][j]) != 0:
-            axons[f"bias_l{len(model.layers)}"].append((ok, int(p["b"][j])))
-    for i, pre in enumerate(flat):
-        for j, ok in enumerate(out_keys):
-            add_syn(pre, ok, p["w"][i, j])
+    out_ids = spec.add_neurons(model.n_classes, output_model,
+                               keys=out_keys)
+    emit(np.broadcast_to(bias_ids[-1], (model.n_classes,)), out_ids,
+         np.asarray(p["b"], np.int64))
+    emit(np.broadcast_to(flat[:, None], (flat.size, model.n_classes)),
+         np.broadcast_to(out_ids[None, :], (flat.size, model.n_classes)),
+         np.asarray(p["w"], np.int64))
+    if pre_parts:
+        spec.connect(np.concatenate(pre_parts),
+                     np.concatenate(post_parts),
+                     np.concatenate(w_parts))
+    spec.set_outputs(out_ids)
+    return spec, out_keys
 
-    net = CRI_network(axons=axons, neurons=neurons, outputs=out_keys,
-                      backend=backend, seed=seed)
+
+def to_network(model: QATModel, qparams, backend="engine",
+               seed=0) -> Tuple[CRI_network, List[str]]:
+    """Build the CRI_network per A.2 through the staged columnar path
+    (`build_conversion_spec` -> `CRI_network.from_spec`). Returns
+    (network, output_keys).
+
+    Each bias axon is fired at the timestep its layer integrates
+    (infer_image), so ANN neurons — which are memoryless and would
+    otherwise re-fire every step under the threshold-shift method when
+    b_i > 0 — stay bit-exact with the integer reference forward. The
+    output layer gets a huge threshold so outputs never fire/reset:
+    their membrane potential after the final step IS the integer
+    logit."""
+    spec, out_keys = build_conversion_spec(
+        model, qparams, hidden_model=ANN_neuron(threshold=0),
+        output_model=ANN_neuron(threshold=2 ** 30))
+    net = CRI_network.from_spec(spec, backend=backend, seed=seed)
     return net, out_keys
 
 

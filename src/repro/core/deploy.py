@@ -1,0 +1,218 @@
+"""Stage 3 of the staged API: deploy a compiled artifact and run it.
+
+    dep = deploy(compiled, seed=0)
+    spikes = dep.step([0, 3])            # axon ids
+    out = dep.run(schedule); batch = dep.run_batch(schedules)
+    w = dep.read_synapses(pre, post)     # arrays, one gather
+    dep.write_synapses(pre, post, w + 1) # ONE delta upload per batch
+
+One `Deployment` class fronts all three backends (dense simulator, HBM
+event engine, hierarchical multi-core hiaer) with the id-space runtime
+surface; `CRI_network` (core.api) remains the key-space facade on top.
+
+Synapse access replaces the legacy per-call O(fan-out) list scans with
+a precomputed (pre, post) -> column index (one lexsort at first use,
+then `searchsorted` lookups). `pre` uses the spec's encoded source ids
+(negative = axon -(a+1), non-negative = neuron id), so an axon and a
+neuron with the same raw index never collide. Duplicate (pre, post)
+synapses resolve to the FIRST record — the legacy scan order.
+
+`write_synapses` applies a whole batch as ONE backend update: edit the
+packed table in place at the precomputed flat positions, then a single
+`update_weights` swap (engine) / re-shard gather refresh (hiaer) / one
+scatter-add pair (simulator) — instead of one full upload per synapse.
+That is what makes host-side plasticity loops (learning.STDP) practical
+on every backend; tests assert a 1000-synapse batch triggers exactly
+one `update_weights`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.compile import CompiledNetwork
+from repro.core.engine import EventEngine
+from repro.core.hiaer import HiAERNetwork
+from repro.core.simulator import DenseSimulator
+from repro.core.spec import decode_pre
+
+__all__ = ["Deployment", "deploy"]
+
+
+class MissingSynapseError(KeyError):
+    """KeyError subclass carrying the index of the first missing pair,
+    so key-space facades can re-raise with user keys."""
+
+    def __init__(self, message: str, index: int):
+        super().__init__(message)
+        self.index = index
+
+
+class Deployment:
+    """Uniform runtime handle over one compiled network."""
+
+    def __init__(self, compiled: CompiledNetwork, *, seed: int = 0,
+                 vectorized: bool = True, use_pallas: bool = False):
+        self.compiled = compiled
+        c = compiled
+        out_ids = [int(i) for i in c.outputs]
+        if c.target == "simulator":
+            self.impl = DenseSimulator(c.axonW, c.neuronW, c.theta, c.nu,
+                                       c.lam, c.is_lif, seed=seed)
+            self.counter = None
+        elif c.target == "engine":
+            self.impl = EventEngine(c.image, c.theta, c.nu, c.lam,
+                                    c.is_lif, c.n_neurons, out_ids,
+                                    seed=seed, vectorized=vectorized,
+                                    use_pallas=use_pallas, flat=c.flat)
+            self.counter = self.impl.counter
+        elif c.target == "hiaer":
+            self.impl = HiAERNetwork(c.image, c.theta, c.nu, c.lam,
+                                     c.is_lif, c.n_neurons, out_ids,
+                                     hierarchy=c.hierarchy,
+                                     seed=seed, flat=c.flat,
+                                     neuron_core=c.neuron_core,
+                                     axon_core=c.axon_core,
+                                     shards=c.shards,
+                                     axon_ndest=c.axon_ndest,
+                                     neuron_ndest=c.neuron_ndest)
+            self.counter = self.impl.counter
+        else:
+            raise ValueError(f"unknown target {c.target!r}")
+        self.n_axon_slots = getattr(self.impl, "n_axon_slots",
+                                    c.n_axons)
+        self.weight_uploads = 0         # batches applied, not synapses
+        self._ikeys: Optional[np.ndarray] = None
+        self._iorder: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------ running
+    @property
+    def V(self):
+        return self.impl.V
+
+    def step(self, axon_ids: Sequence[int] = ()):
+        """One timestep from raw axon ids; returns (N,) bool spikes."""
+        return self.impl.step(list(axon_ids))
+
+    def run(self, schedule) -> np.ndarray:
+        return self.impl.run(self._pad(sched.encode_schedule(
+            schedule, self.compiled.n_axons)))
+
+    def run_batch(self, schedules) -> np.ndarray:
+        if len(schedules) == 0:
+            return np.zeros((0, 0, self.compiled.n_neurons), bool)
+        return self.impl.run_batch(self._pad(sched.encode_batch(
+            schedules, self.compiled.n_axons)))
+
+    def _pad(self, counts: np.ndarray) -> np.ndarray:
+        return sched.pad_width(counts, self.n_axon_slots)
+
+    def reset(self):
+        self.impl.reset()
+
+    def read_membrane(self, ids: Sequence[int]) -> List[int]:
+        V = np.asarray(self.impl.V)
+        return [int(V[i]) for i in ids]
+
+    # ----------------------------------------------------- synapse access
+    def _index(self):
+        """(pre item, post) -> first column, via one lexsort (stable:
+        duplicate pairs keep their first record, the legacy scan
+        result)."""
+        if self._ikeys is None:
+            c = self.compiled
+            key = (c.syn_item * max(c.n_neurons, 1) + c.syn_post) \
+                .astype(np.int64)
+            order = np.lexsort((np.arange(key.shape[0]), key))
+            self._ikeys = key[order]
+            self._iorder = order
+        return self._ikeys, self._iorder
+
+    def _lookup(self, pre, post) -> np.ndarray:
+        """Column index of each (pre, post) pair; raises
+        `MissingSynapseError` (a KeyError) on the first missing pair."""
+        c = self.compiled
+        pre = np.asarray(pre, np.int64).reshape(-1)
+        post = np.asarray(post, np.int64).reshape(-1)
+        pre, post = np.broadcast_arrays(pre, post)
+        is_axon, raw = decode_pre(pre)
+        # validate before the key encoding so an out-of-range axon id
+        # can never alias a neuron item (and vice versa)
+        ok = np.where(is_axon, raw < c.n_axons, raw < c.n_neurons)
+        ok &= (post >= 0) & (post < max(c.n_neurons, 1))
+        item = np.where(is_axon, raw, c.item_base + raw)
+        ikeys, iorder = self._index()
+        q = item * max(c.n_neurons, 1) + post
+        if ikeys.size:
+            idx = np.minimum(np.searchsorted(ikeys, q),
+                             ikeys.shape[0] - 1)
+            ok &= ikeys[idx] == q
+        else:
+            idx = np.zeros_like(q)
+            ok &= False
+        if not np.all(ok):
+            i = int(np.nonzero(~ok)[0][0])
+            raise MissingSynapseError(
+                f"no synapse {int(pre[i])}->{int(post[i])}", i)
+        return iorder[idx]
+
+    def read_synapses(self, pre, post) -> np.ndarray:
+        """Batched weight read: current weights of each (pre, post)
+        pair, as one gather. pre: encoded source ids (negative = axon)."""
+        return self.compiled.syn_weight[self._lookup(pre, post)].copy()
+
+    def write_synapses(self, pre, post, weight) -> None:
+        """Batched weight write, applied as ONE backend update. All
+        pairs are validated before anything mutates; duplicate pairs in
+        one batch resolve last-wins (sequential-write semantics)."""
+        c = self.compiled
+        cols = self._lookup(pre, post)
+        if cols.size == 0:
+            return
+        w = np.asarray(weight)
+        if not (np.issubdtype(w.dtype, np.integer)
+                or w.dtype == np.bool_):
+            raise TypeError(f"weights must be integers, got {w.dtype}")
+        w = np.broadcast_to(np.atleast_1d(w.astype(np.int64)).reshape(-1)
+                            if w.ndim <= 1 else w.astype(np.int64),
+                            cols.shape)
+        # last-wins dedup: first occurrence in the reversed batch
+        _, rev_first = np.unique(cols[::-1], return_index=True)
+        keep = cols.shape[0] - 1 - rev_first
+        # records are int16 (clipped like compile_spec), so the read
+        # column, the packed image, and the dense matrices agree even
+        # for out-of-range requests
+        cols_u = cols[keep]
+        w_u = np.clip(w[keep], -32768, 32767)
+        old = c.syn_weight[cols_u].copy()
+        c.syn_weight[cols_u] = w_u.astype(np.int32)
+        if c.target == "simulator":
+            delta = c.syn_weight[cols_u] - old          # int32 wrap
+            item = c.syn_item[cols_u]
+            posts = c.syn_post[cols_u]
+            ax = item < c.item_base
+            self.impl.axonW = self.impl.axonW.at[
+                item[ax], posts[ax]].add(delta[ax])
+            self.impl.neuronW = self.impl.neuronW.at[
+                item[~ax] - c.item_base, posts[~ax]].add(delta[~ax])
+        else:
+            flat_w = c.image.syn_weight.reshape(-1)
+            flat_w[c.syn_pos[cols_u]] = w_u.astype(np.int16)
+            self.impl.update_weights(c.image.syn_weight)
+        self.weight_uploads += 1
+
+    def read_synapse(self, pre: int, post: int) -> int:
+        return int(self.read_synapses([pre], [post])[0])
+
+    def write_synapse(self, pre: int, post: int, weight: int) -> None:
+        self.write_synapses([pre], [post], [int(weight)])
+
+
+def deploy(compiled: CompiledNetwork, *, seed: int = 0,
+           vectorized: bool = True, use_pallas: bool = False
+           ) -> Deployment:
+    """Bring a compiled network up on its target backend."""
+    return Deployment(compiled, seed=seed, vectorized=vectorized,
+                      use_pallas=use_pallas)

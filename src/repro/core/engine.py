@@ -48,7 +48,8 @@ _check_count_dtype = sched.check_count_dtype
 class EventEngine:
     def __init__(self, image: HBMImage, theta, nu, lam, is_lif,
                  n_neurons: int, outputs: Sequence[int], seed: int = 0,
-                 vectorized: bool = True, use_pallas: bool = False):
+                 vectorized: bool = True, use_pallas: bool = False,
+                 flat=None):
         self.image = image
         self.theta = jnp.asarray(theta, jnp.int32)
         self.nu = jnp.asarray(nu, jnp.int32)
@@ -70,10 +71,11 @@ class EventEngine:
         # numpy views of the table for the host-side reference routing
         self._post = np.asarray(image.syn_post)
         self._w = np.asarray(image.syn_weight, np.int32)
-        # dense pointer tables (cheap, O(rows)); the fan-in transpose is
-        # built lazily on the first vectorized dispatch so reference-only
-        # engines never pay for it.
-        self.flat = image.flatten()
+        # dense pointer tables (cheap, O(rows), or handed in pre-lowered
+        # by the staged compiler); the fan-in transpose is built lazily
+        # on the first vectorized dispatch so reference-only engines
+        # never pay for it.
+        self.flat = flat if flat is not None else image.flatten()
         self.n_axon_slots = int(self.flat.axon_rows.shape[0])
         self._tables = None
         self._use_fanin = True

@@ -29,8 +29,8 @@ hierarchical multi-core tier (core.hiaer).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -92,6 +92,34 @@ class FlatImage:
     neuron_row_indices: np.ndarray  # (sum neuron_rows,) int32
 
 
+def _ranges(counts: np.ndarray) -> np.ndarray:
+    """Concatenated aranges: [0..c0), [0..c1), ... as one vector."""
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros((0,), np.int64)
+    starts = np.cumsum(counts) - counts
+    return np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+
+
+def _flatten_arrays(base: np.ndarray, rows: np.ndarray,
+                    present: np.ndarray, n_rows: int):
+    """Vectorized twin of `_flatten_ptr_table` over id-indexed pointer
+    arrays (base/rows/present, length max(n_items, 1)): returns the same
+    (base, rows, present, owner, indptr, indices) tuple, bit for bit."""
+    base = np.asarray(base, np.int32)
+    rows = np.asarray(rows, np.int32)
+    present = np.asarray(present, bool)
+    eff = np.where(present, rows, 0).astype(np.int64)
+    owner = np.full((n_rows,), -1, np.int32)
+    idx = (np.repeat(base.astype(np.int64), eff) + _ranges(eff))
+    owner[idx] = np.repeat(np.arange(base.shape[0], dtype=np.int32), eff)
+    indptr = np.zeros((base.shape[0] + 1,), np.int32)
+    np.cumsum(eff, out=indptr[1:])
+    return (base, np.where(present, rows, 0).astype(np.int32), present,
+            owner, indptr, idx.astype(np.int32))
+
+
 def _flatten_ptr_table(ptr: Dict[int, Pointer], n_rows: int):
     """Lower one pointer dict to (base, rows, present, owner, CSR)."""
     n = max(ptr.keys(), default=-1) + 1
@@ -113,15 +141,55 @@ def _flatten_ptr_table(ptr: Dict[int, Pointer], n_rows: int):
             np.asarray(indices, np.int32))
 
 
-@dataclass
 class HBMImage:
-    """The packed routing table: a dense (rows, SLOTS) record array."""
-    syn_post: np.ndarray       # (rows, SLOTS) int32, -1 = empty
-    syn_weight: np.ndarray     # (rows, SLOTS) int16
-    syn_outflag: np.ndarray    # (rows, SLOTS) bool
-    axon_ptr: Dict[int, Pointer] = field(default_factory=dict)
-    neuron_ptr: Dict[int, Pointer] = field(default_factory=dict)
-    model_groups: Dict[int, List[int]] = field(default_factory=dict)
+    """The packed routing table: a dense (rows, SLOTS) record array.
+
+    The pointer tables may be passed as dicts (the legacy mapper) or as
+    zero-argument thunks (the columnar compiler): the staged execution
+    paths never touch the per-item dicts — they run off `FlatImage` —
+    so thunks defer the O(items) dict materialization until a
+    reference-path consumer (e.g. `EventEngine._route_reference`)
+    actually asks for `axon_ptr`/`neuron_ptr`/`model_groups`."""
+
+    def __init__(self, syn_post, syn_weight, syn_outflag,
+                 axon_ptr=None, neuron_ptr=None, model_groups=None):
+        self.syn_post = syn_post
+        self.syn_weight = syn_weight
+        self.syn_outflag = syn_outflag
+        self._axon_ptr = {} if axon_ptr is None else axon_ptr
+        self._neuron_ptr = {} if neuron_ptr is None else neuron_ptr
+        self._model_groups = {} if model_groups is None else model_groups
+
+    @staticmethod
+    def _force(v):
+        return v() if callable(v) else v
+
+    @property
+    def axon_ptr(self) -> Dict[int, Pointer]:
+        self._axon_ptr = self._force(self._axon_ptr)
+        return self._axon_ptr
+
+    @axon_ptr.setter
+    def axon_ptr(self, v):
+        self._axon_ptr = v
+
+    @property
+    def neuron_ptr(self) -> Dict[int, Pointer]:
+        self._neuron_ptr = self._force(self._neuron_ptr)
+        return self._neuron_ptr
+
+    @neuron_ptr.setter
+    def neuron_ptr(self, v):
+        self._neuron_ptr = v
+
+    @property
+    def model_groups(self) -> Dict[int, List[int]]:
+        self._model_groups = self._force(self._model_groups)
+        return self._model_groups
+
+    @model_groups.setter
+    def model_groups(self, v):
+        self._model_groups = v
 
     @property
     def n_rows(self) -> int:
@@ -207,18 +275,20 @@ class CoreShards:
         }
 
 
-def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
-                axon_core: np.ndarray, n_cores: int,
-                n_neurons: int) -> CoreShards:
-    """Split the packed table into per-core destination shards (see
-    `CoreShards`). `neuron_core` (N,) / `axon_core` (A,) give each item's
-    home core under the deployment hierarchy. A.3 filler records whose
-    post id exceeds n_neurons - 1 are dropped (zero weight by
-    construction, so the sharded sum stays bit-exact); in-range filler
-    records are kept so later weight edits flow through unchanged."""
-    C, N = n_cores, n_neurons
+def shard_entries(pos: np.ndarray, item: np.ndarray, post: np.ndarray,
+                  neuron_core: np.ndarray, axon_core: np.ndarray,
+                  n_cores: int, n_neurons: int, n_axon_slots: int,
+                  sentinel_src: int) -> CoreShards:
+    """Build `CoreShards` from flat synapse entries: `pos` (flat position
+    into the monolithic R*SLOTS table), `item` (source in engine item
+    space: axon id, or n_axon_slots + neuron id) and `post` (neuron id
+    in [0, n_neurons)). The per-core CSR is sorted by (destination core,
+    local post id) with flat position as the tie-break — identical to
+    scanning the dense table in position order (`shard_image`), so both
+    construction routes produce bit-identical shards. Entries need not
+    arrive pre-sorted."""
+    C, N, A = n_cores, n_neurons, n_axon_slots
     core_of = np.asarray(neuron_core, np.int32)
-    A = int(flat.axon_rows.shape[0])
     counts = np.bincount(core_of, minlength=C) if N else np.zeros(C, int)
     n_max = max(int(counts.max()) if N else 0, 1)
     core_nids = np.full((C, n_max), -1, np.int32)
@@ -234,24 +304,18 @@ def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
     core_nids[core_sorted, ranks] = order
     local_id[order] = ranks
 
-    post_flat = image.syn_post.reshape(-1)
-    sentinel_src = post_flat.size
-    pos = np.nonzero((post_flat >= 0) & (post_flat < max(N, 1)))[0]
-    if N == 0:
-        pos = pos[:0]
-    rows = pos // SLOTS
-    aid = flat.row_owner_axon[rows]
-    nid = flat.row_owner_neuron[rows]
-    owned = (aid >= 0) | (nid >= 0)
-    pos, aid, nid = pos[owned], aid[owned], nid[owned]
-    item = np.where(aid >= 0, aid, A + nid).astype(np.int32)
-    post = post_flat[pos]
-    dest = core_of[post]
-    lpost = local_id[post]
+    pos = np.asarray(pos, np.int64)
+    item = np.asarray(item, np.int64)
+    post = np.asarray(post, np.int64)
+    dest = core_of[post] if pos.size else np.zeros((0,), np.int32)
+    lpost = local_id[post] if pos.size else np.zeros((0,), np.int32)
+    is_axon_src = item < A
     src_core = np.where(
-        aid >= 0,
-        np.asarray(axon_core, np.int32)[np.clip(aid, 0, max(A - 1, 0))],
-        core_of[np.clip(nid, 0, max(N - 1, 0))])
+        is_axon_src,
+        np.asarray(axon_core, np.int32)[
+            np.clip(item, 0, max(A - 1, 0))],
+        core_of[np.clip(item - A, 0, max(N - 1, 0))]) \
+        if pos.size else np.zeros((0,), np.int32)
     is_white = src_core != dest
 
     per_core = np.bincount(dest, minlength=C) if pos.size else \
@@ -261,9 +325,9 @@ def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
     csr_item = np.full((C, E), A + N, np.int32)
     csr_indptr = np.zeros((C, n_max + 1), np.int32)
     # one global stable sort by (dest core, local post) replaces the
-    # per-core argsorts; the trailing arange key keeps equal-(core, post)
-    # records in original table order (deterministic builds)
-    ord_e = np.lexsort((np.arange(pos.size), lpost, dest))
+    # per-core argsorts; the trailing position key keeps equal-(core,
+    # post) records in monolithic table order (deterministic builds)
+    ord_e = np.lexsort((pos, lpost, dest))
     dest_s = dest[ord_e]
     ent_start = np.zeros(C + 1, np.int64)
     np.cumsum(per_core, out=ent_start[1:])
@@ -287,6 +351,36 @@ def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
                       csr_src=csr_src, csr_item=csr_item,
                       csr_indptr=csr_indptr, grey_entries=grey,
                       white_entries=white, white_sources=white_sources)
+
+
+def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
+                axon_core: np.ndarray, n_cores: int,
+                n_neurons: int) -> CoreShards:
+    """Split the packed table into per-core destination shards (see
+    `CoreShards`) by scanning the dense table. `neuron_core` (N,) /
+    `axon_core` (A,) give each item's home core under the deployment
+    hierarchy. A.3 filler records whose post id exceeds n_neurons - 1
+    are dropped (zero weight by construction, so the sharded sum stays
+    bit-exact); in-range filler records are kept so later weight edits
+    flow through unchanged. The staged compiler (core.compile) builds
+    the same shards directly from the columnar spec via `shard_entries`
+    without this dense scan."""
+    N = n_neurons
+    post_flat = image.syn_post.reshape(-1)
+    sentinel_src = post_flat.size
+    A = int(flat.axon_rows.shape[0])
+    pos = np.nonzero((post_flat >= 0) & (post_flat < max(N, 1)))[0]
+    if N == 0:
+        pos = pos[:0]
+    rows = pos // SLOTS
+    aid = flat.row_owner_axon[rows]
+    nid = flat.row_owner_neuron[rows]
+    owned = (aid >= 0) | (nid >= 0)
+    pos, aid, nid = pos[owned], aid[owned], nid[owned]
+    item = np.where(aid >= 0, aid, A + nid).astype(np.int64)
+    post = post_flat[pos]
+    return shard_entries(pos, item, post, neuron_core, axon_core,
+                         n_cores, N, A, sentinel_src)
 
 
 class HBMMapper:
@@ -399,3 +493,176 @@ def compile_network(axon_syn: Dict[int, List[Tuple[int, int]]],
     post, w, flag = mapper.finalize()
     return HBMImage(post, w, flag, img_axon_ptr, img_neuron_ptr,
                     {m: sorted(g) for m, g in groups.items()})
+
+
+def ptr_dict(base: np.ndarray, rows: np.ndarray) -> Dict[int, Pointer]:
+    """Id-indexed pointer arrays -> the legacy {id: Pointer} dict."""
+    return {i: Pointer(b, r)
+            for i, (b, r) in enumerate(zip(np.asarray(base).tolist(),
+                                           np.asarray(rows).tolist()))}
+
+
+def _model_groups_of(model_gid: np.ndarray, nperm: np.ndarray,
+                     n_neurons: int) -> Dict[int, List[int]]:
+    """{group id: sorted neuron ids} from the per-neuron group vector
+    (nperm is the (gid, id) lexsort, so each split is already sorted)."""
+    if not n_neurons:
+        return {}
+    gid_sorted = model_gid[nperm]
+    bounds = np.nonzero(np.diff(gid_sorted))[0] + 1
+    return {int(model_gid[g[0]]): [int(i) for i in g]
+            for g in np.split(nperm, bounds)}
+
+
+class ColumnarImage(NamedTuple):
+    """`build_image_columnar` result: the packed image plus the lowered
+    `FlatImage` and per-synapse placement columns the staged compiler
+    threads through to the runtime (synapse index, delta weight uploads,
+    direct shard construction)."""
+    image: HBMImage
+    flat: FlatImage
+    syn_pos: np.ndarray        # (S,) int64 flat position row*SLOTS+slot,
+    #                            aligned with the input columns
+    filler_pos: np.ndarray     # (F*SLOTS,) int64 positions of A.3 fillers
+    filler_item: np.ndarray    # (F*SLOTS,) int64 source item (A' + nid)
+    filler_post: np.ndarray    # (F*SLOTS,) int64 post id (= slot)
+
+
+def build_image_columnar(pre_item: np.ndarray, post: np.ndarray,
+                         weight: np.ndarray, n_axons: int, n_neurons: int,
+                         model_gid: np.ndarray, outputs: Sequence[int],
+                         dense_pack: bool = True) -> ColumnarImage:
+    """Vectorized Fig. 7 mapping from synapse columns — bit-identical to
+    `compile_network` on the equivalent per-item adjacency (pinned in
+    tests/test_staged_api.py), but O(S log S) NumPy instead of a
+    per-synapse Python loop.
+
+    pre_item: (S,) source in item space — axon id a in [0, A), or
+    A + neuron id; per-item synapse order is the column order (the order
+    the legacy mapper walks each item's list). model_gid: (N,) model
+    group of each neuron (pointers grouped by model, §A.3 step 1).
+
+    The closed form of `HBMMapper.place_item` under disjoint item
+    ranges: within one item the k-th synapse aimed at slot s lands on
+    row base + k, so an item spans max-slot-multiplicity rows and bases
+    are a cumulative sum over items in processing order (axons by id,
+    then neurons by (model group, id); the naive non-dense layout rounds
+    every span up to a segment boundary)."""
+    A, N = int(n_axons), int(n_neurons)
+    S = int(np.asarray(post).shape[0])
+    pre_item = np.asarray(pre_item, np.int64)
+    post = np.asarray(post, np.int64)
+    weight = np.asarray(weight, np.int64)
+    model_gid = np.asarray(model_gid, np.int64)
+    n_items = A + N
+
+    # processing rank: axons in id order, then neurons by (gid, nid)
+    rank = np.empty((max(n_items, 1),), np.int64)
+    rank[:A] = np.arange(A)
+    nperm = np.lexsort((np.arange(N), model_gid))   # gid, then id
+    rank[A + nperm] = A + np.arange(N)
+
+    # occurrence index within (item, slot): stable sort by the pair key
+    # keeps column order within each group = legacy list order
+    slot = post % SLOTS
+    r = rank[pre_item] if S else np.zeros((0,), np.int64)
+    g = r * SLOTS + slot
+    if S and (n_items * SLOTS + 1) < (2 ** 62) // (S + 1):
+        # stable order via an unsorted-tie-free composite key + default
+        # quicksort — ~4x faster than numpy's stable argsort here
+        sidx = np.argsort(g * S + np.arange(S, dtype=np.int64))
+    else:
+        sidx = np.argsort(g, kind="stable")
+    gs = g[sidx]
+    is_start = np.ones((S,), bool)
+    if S:
+        is_start[1:] = gs[1:] != gs[:-1]
+    group_of = np.cumsum(is_start) - 1
+    group_start = np.nonzero(is_start)[0]
+    occ = np.empty((S,), np.int64)
+    occ[sidx] = np.arange(S) - group_start[group_of]
+
+    # rows spanned per item (by processing rank): max slot multiplicity;
+    # zero-fanout neurons get one A.3 filler segment row, empty axons 0
+    rows_by_rank = np.zeros((max(n_items, 1),), np.int64)
+    if S:
+        gi = gs[group_start] // SLOTS               # item of each group
+        gcount = np.diff(np.append(group_start, S))
+        # groups of one item are contiguous in gi (gs is sorted), so a
+        # segmented max via maximum.reduceat beats np.maximum.at
+        item_start = np.nonzero(np.concatenate(
+            [[True], gi[1:] != gi[:-1]]))[0]
+        rows_by_rank[gi[item_start]] = np.maximum.reduceat(
+            gcount, item_start)
+    deg = np.bincount(pre_item, minlength=max(n_items, 1)) if S \
+        else np.zeros((max(n_items, 1),), np.int64)
+    empty_nrn = np.nonzero(deg[A:A + N] == 0)[0]
+    rows_by_rank[rank[A + empty_nrn]] = 1
+
+    step = rows_by_rank if dense_pack else \
+        -(-rows_by_rank // ROWS_PER_SEGMENT) * ROWS_PER_SEGMENT
+    base_by_rank = np.zeros_like(step)
+    np.cumsum(step[:-1], out=base_by_rank[1:])
+    used = int((base_by_rank + rows_by_rank).max()) if n_items else 0
+    n_rows = -(-max(used, 1) // ROWS_PER_SEGMENT) * ROWS_PER_SEGMENT
+
+    out_mask = np.zeros((max(N, 1),), bool)
+    out_ids = np.asarray(list(outputs), np.int64)
+    out_mask[out_ids] = True
+
+    syn_post = np.full((n_rows, SLOTS), -1, np.int32)
+    syn_weight = np.zeros((n_rows, SLOTS), np.int16)
+    syn_outflag = np.zeros((n_rows, SLOTS), bool)
+    syn_pos = (base_by_rank[r] + occ) * SLOTS + slot
+    pf = syn_post.reshape(-1)
+    wf = syn_weight.reshape(-1)
+    ff = syn_outflag.reshape(-1)
+    pf[syn_pos] = post
+    wf[syn_pos] = np.clip(weight, -32768, 32767).astype(np.int16)
+    ff[syn_pos] = out_mask[post]
+    # A.3 filler segments: 16 zero-weight records carrying the SOURCE
+    # neuron's output flag (post id = slot)
+    F = int(empty_nrn.shape[0])
+    filler_pos = (base_by_rank[rank[A + empty_nrn]][:, None] * SLOTS
+                  + np.arange(SLOTS)[None, :]).reshape(-1)
+    filler_post = np.tile(np.arange(SLOTS, dtype=np.int64), F)
+    pf[filler_pos] = filler_post
+    ff[filler_pos] = np.repeat(out_mask[empty_nrn], SLOTS)
+
+    # id-indexed pointer tables (axons, then neurons via their rank)
+    a_base = base_by_rank[:A].astype(np.int32)
+    a_rows = rows_by_rank[:A].astype(np.int32)
+    n_rank = rank[A:A + N]
+    nb = base_by_rank[n_rank].astype(np.int32)
+    nr = rows_by_rank[n_rank].astype(np.int32)
+    image = HBMImage(syn_post, syn_weight, syn_outflag,
+                     axon_ptr=lambda: ptr_dict(a_base, a_rows),
+                     neuron_ptr=lambda: ptr_dict(nb, nr),
+                     model_groups=lambda: _model_groups_of(model_gid,
+                                                           nperm, N))
+
+    def pad1(a, dtype, fill=0):
+        return a if a.shape[0] else np.full((1,), fill, dtype)
+
+    ab, ar, ap, aown, a_indptr, aidx = _flatten_arrays(
+        pad1(a_base, np.int32), pad1(a_rows, np.int32),
+        np.ones((max(A, 1),), bool) if A else np.zeros((1,), bool),
+        n_rows)
+    nb_, nr_, npr, nown, n_indptr, nidx = _flatten_arrays(
+        pad1(nb, np.int32), pad1(nr, np.int32),
+        np.ones((max(N, 1),), bool) if N else np.zeros((1,), bool),
+        n_rows)
+    flat = FlatImage(
+        syn_post=np.ascontiguousarray(syn_post, np.int32),
+        syn_weight=np.ascontiguousarray(syn_weight, np.int32),
+        axon_base=ab, axon_rows=ar, axon_present=ap,
+        neuron_base=nb_, neuron_rows=nr_, neuron_present=npr,
+        row_owner_axon=aown, row_owner_neuron=nown,
+        axon_row_indptr=a_indptr, axon_row_indices=aidx,
+        neuron_row_indptr=n_indptr, neuron_row_indices=nidx)
+    A_eng = int(ar.shape[0])            # engine item space offset
+    filler_item = A_eng + empty_nrn.repeat(SLOTS).astype(np.int64)
+    return ColumnarImage(image=image, flat=flat, syn_pos=syn_pos,
+                         filler_pos=filler_pos.astype(np.int64),
+                         filler_item=filler_item,
+                         filler_post=filler_post)

@@ -107,49 +107,72 @@ class HiAERNetwork:
 
     def __init__(self, image: HBMImage, theta, nu, lam, is_lif,
                  n_neurons: int, outputs: Sequence[int],
-                 axon_syn: Dict[int, List], neuron_syn: Dict[int, List],
+                 axon_syn: Optional[Dict[int, List]] = None,
+                 neuron_syn: Optional[Dict[int, List]] = None,
                  hierarchy: Optional[Hierarchy] = None,
                  placement: Optional[Dict[int, int]] = None,
                  axon_placement: Optional[Dict[int, int]] = None,
-                 seed: int = 0):
+                 seed: int = 0, flat=None, neuron_core=None,
+                 axon_core=None, shards=None, axon_ndest=None,
+                 neuron_ndest=None):
+        """Either pass the legacy adjacency dicts (axon_syn/neuron_syn;
+        placement, shards, and traffic tables are derived here), or pass
+        the compiler's prebuilt pieces (neuron_core, axon_core, shards,
+        axon_ndest, neuron_ndest — all five together) and skip the
+        per-dict derivation entirely (the core.compile staged path)."""
         self.image = image
         self.n = n_neurons
         self.outputs = list(outputs)
-        self.flat = image.flatten()
+        self.flat = flat if flat is not None else image.flatten()
         self.n_axon_slots = int(self.flat.axon_rows.shape[0])
         self.hier = hierarchy if hierarchy is not None else \
             Hierarchy(1, 1, 1, max(n_neurons, 1))
         self.spec = exch_k.HierSpec.from_hierarchy(self.hier)
 
-        # ------------------------------------------------------ placement
-        if placement is None:
-            adjacency = {i: neuron_syn.get(i, [])
-                         for i in range(n_neurons)}
-            placement = partition(adjacency, self.hier)
-        self.neuron_core = self._check_placement(placement)
-        # axons default to majority-target homing; an explicit
-        # axon_placement overrides per axon (unlisted axons keep the
-        # majority rule, matching the api docstring)
-        self.axon_core = _axon_majority_placement(
-            axon_syn, self.neuron_core, self.n_axon_slots,
-            self.hier.n_cores)
-        if axon_placement is not None:
-            for a, c in axon_placement.items():
-                if not 0 <= a < self.n_axon_slots:
-                    raise ValueError(f"axon_placement has unknown axon "
-                                     f"id {a}")
-                if not 0 <= c < self.hier.n_cores:
-                    raise ValueError(f"axon {a} placed on core {c}, "
-                                     f"hierarchy has {self.hier.n_cores}")
-                self.axon_core[a] = c
+        prebuilt = shards is not None
+        if prebuilt:
+            if neuron_core is None or axon_core is None \
+                    or axon_ndest is None or neuron_ndest is None:
+                raise ValueError("prebuilt shards need neuron_core, "
+                                 "axon_core and both ndest tables")
+            self.neuron_core = np.asarray(neuron_core, np.int32)
+            self.axon_core = np.asarray(axon_core, np.int32)
+            self.shards = shards
+        else:
+            if axon_syn is None or neuron_syn is None:
+                raise ValueError("need axon_syn/neuron_syn when no "
+                                 "prebuilt shards are given")
+            # -------------------------------------------------- placement
+            if placement is None:
+                adjacency = {i: neuron_syn.get(i, [])
+                             for i in range(n_neurons)}
+                placement = partition(adjacency, self.hier)
+            self.neuron_core = self._check_placement(placement)
+            # axons default to majority-target homing; an explicit
+            # axon_placement overrides per axon (unlisted axons keep the
+            # majority rule, matching the api docstring)
+            self.axon_core = _axon_majority_placement(
+                axon_syn, self.neuron_core, self.n_axon_slots,
+                self.hier.n_cores)
+            if axon_placement is not None:
+                for a, c in axon_placement.items():
+                    if not 0 <= a < self.n_axon_slots:
+                        raise ValueError(f"axon_placement has unknown "
+                                         f"axon id {a}")
+                    if not 0 <= c < self.hier.n_cores:
+                        raise ValueError(
+                            f"axon {a} placed on core {c}, hierarchy "
+                            f"has {self.hier.n_cores}")
+                    self.axon_core[a] = c
 
-        # --------------------------------------------------------- shards
-        self.shards = hbm.shard_image(image, self.flat, self.neuron_core,
-                                      self.axon_core, self.hier.n_cores,
-                                      n_neurons)
-        axon_ndest, neuron_ndest = exch_k.build_dest_tables(
-            axon_syn, neuron_syn, self.axon_core, self.neuron_core,
-            self.hier, self.n_axon_slots, n_neurons)
+            # ----------------------------------------------------- shards
+            self.shards = hbm.shard_image(image, self.flat,
+                                          self.neuron_core,
+                                          self.axon_core,
+                                          self.hier.n_cores, n_neurons)
+            axon_ndest, neuron_ndest = exch_k.build_dest_tables(
+                axon_syn, neuron_syn, self.axon_core, self.neuron_core,
+                self.hier, self.n_axon_slots, n_neurons)
         sh = self.shards
         core_nids_idx = np.where(sh.core_nids >= 0, sh.core_nids,
                                  n_neurons).astype(np.int32)

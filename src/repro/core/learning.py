@@ -11,12 +11,26 @@ Trace-based STDP with 1 ms-resolution exponential traces:
     Δw_ij = A_plus * x_j  on a postsynaptic spike   (potentiation)
             -A_minus * y_i on a presynaptic spike   (depression)
 Weights clip to int16.
+
+The update engine is columnar: traces are int arrays over the network's
+item space, each step's candidate synapses are gathered through a
+per-item CSR over the compiled synapse columns, and every phase lands
+on the backend as ONE batched `write_synapses` delta upload
+(core.deploy) instead of one PCIe round trip per synapse — which is
+what makes STDP practical on the hiaer backend, where a weight write
+re-shards the per-core tables. Same-direction updates within a phase
+commute with the int16 clip, so the batch is bit-identical to the
+legacy sequential read_synapse/write_synapse loop
+(tests/test_learning.py pins hiaer == engine on spikes, weights, and
+traces).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.core.hbm import _ranges
 
 W_MAX = 32767
 
@@ -31,60 +45,114 @@ class STDPConfig:
 
 
 class STDP:
-    """Operates on a CRI_network (simulator or engine backend) by replaying
-    its spike history through read/write_synapse — the PCIe path."""
+    """Operates on a `CRI_network` (any backend) by replaying its spike
+    history through the batched read/write_synapses path — the PCIe
+    batch. Traces live in item space: `pre_trace[item]` with axons at
+    [0, item_base) and neurons at item_base + id; `post_trace[nid]`."""
 
     def __init__(self, net, cfg: STDPConfig = STDPConfig()):
         self.net = net
         self.cfg = cfg
-        self.pre_trace = {k: 0 for k in
-                          list(net.axon_keys) + list(net.neuron_keys)}
-        self.post_trace = {k: 0 for k in net.neuron_keys}
-        # pre -> [(post, ...)] adjacency in key space
-        ids = {i: k for k, i in net._nid.items()}
-        self.adj = {}
-        for k in net.axon_keys:
-            self.adj[k] = [ids[p] for p, _ in net._axon_syn[net._aid[k]]]
-        for k in net.neuron_keys:
-            self.adj[k] = [ids[p] for p, _ in net._neuron_syn[net._nid[k]]]
+        c = net.compiled
+        self._base = c.item_base
+        self._n = c.n_neurons
+        size = self._base + self._n
+        self.pre_trace = np.zeros((size,), np.int64)
+        self.post_trace = np.zeros((self._n,), np.int64)
+        # per-item CSR over the synapse columns (candidate gathers)
+        item = np.asarray(c.syn_item, np.int64)
+        order = np.argsort(item, kind="stable")
+        self._csr_post = np.asarray(c.syn_post, np.int64)[order]
+        self._csr_item = item[order]
+        counts = np.bincount(item, minlength=size)
+        self._indptr = np.zeros((size + 1,), np.int64)
+        np.cumsum(counts, out=self._indptr[1:])
 
+    # --------------------------------------------------------- utilities
     def _decay(self):
         sh = self.cfg.tau_shift
-        for d in (self.pre_trace, self.post_trace):
-            for k in d:
-                d[k] -= d[k] >> sh
+        self.pre_trace -= self.pre_trace >> sh
+        self.post_trace -= self.post_trace >> sh
 
+    def _item_of(self, key):
+        """Key -> item id (axon keys win the shared namespace, the
+        legacy read/write_synapse resolution order); None if unknown
+        (legacy tolerated unknown keys as trace-only entries)."""
+        aid = self.net._aid.get(key)
+        if aid is not None:
+            return aid
+        nid = self.net._nid.get(key)
+        return None if nid is None else self._base + nid
+
+    def _encode(self, items: np.ndarray) -> np.ndarray:
+        """Item ids -> the deployment's encoded pre ids."""
+        return np.where(items < self._base, -(items + 1),
+                        items - self._base)
+
+    def _apply(self, items: np.ndarray, deltas: np.ndarray,
+               posts: np.ndarray):
+        """One phase: aggregate per-(pre, post) deltas (same-direction,
+        so summing commutes with the sequential clip), then one batched
+        read + one batched write of the changed weights."""
+        if items.size == 0:
+            return
+        key = items * max(self._n, 1) + posts
+        uniq, inv = np.unique(key, return_inverse=True)
+        dsum = np.zeros((uniq.shape[0],), np.int64)
+        np.add.at(dsum, inv, deltas)
+        u_item = uniq // max(self._n, 1)
+        u_post = uniq % max(self._n, 1)
+        pre = self._encode(u_item)
+        dep = self.net._dep
+        w = dep.read_synapses(pre, u_post).astype(np.int64)
+        w2 = np.clip(w + dsum, self.cfg.w_min, self.cfg.w_max)
+        chg = w2 != w
+        if chg.any():
+            dep.write_synapses(pre[chg], u_post[chg], w2[chg])
+            self.net._syn_cache = None
+
+    # -------------------------------------------------------------- step
     def step(self, inputs, fired_keys):
-        """Call after each net.step: inputs = axon keys driven this step,
-        fired_keys = neuron keys that spiked this step."""
+        """Call after each net.step: inputs = axon keys driven this step
+        (an axon listed twice is a double event, doubling its trace bump
+        and depression), fired_keys = neuron keys that spiked."""
         cfg = self.cfg
         self._decay()
-        fired = set(fired_keys)
-        pres = list(inputs) + list(fired)
-        # depression: pre spike against existing post trace
-        for pre in pres:
-            for post in self.adj.get(pre, ()):
-                yt = self.post_trace.get(post, 0)
-                if yt:
-                    w = self.net.read_synapse(pre, post)
-                    w2 = int(np.clip(w - cfg.a_minus * yt,
-                                     cfg.w_min, cfg.w_max))
-                    if w2 != w:
-                        self.net.write_synapse(pre, post, w2)
-        # potentiation: post spike against pre traces
-        for pre, posts in self.adj.items():
-            xt = self.pre_trace.get(pre, 0)
-            if not xt:
-                continue
-            for post in posts:
-                if post in fired:
-                    w = self.net.read_synapse(pre, post)
-                    w2 = int(np.clip(w + cfg.a_plus * xt,
-                                     cfg.w_min, cfg.w_max))
-                    if w2 != w:
-                        self.net.write_synapse(pre, post, w2)
+        fired = list(dict.fromkeys(fired_keys))      # set semantics,
+        #                                              deterministic order
+        pres = [self._item_of(k) for k in list(inputs) + fired]
+        pres = np.asarray([p for p in pres if p is not None], np.int64)
+        p_items, mult = (np.unique(pres, return_counts=True)
+                         if pres.size else
+                         (np.zeros((0,), np.int64),) * 2)
+
+        # depression: every synapse of a driven/fired pre against the
+        # existing post traces
+        start = self._indptr[p_items]
+        cnt = self._indptr[p_items + 1] - start
+        gather = np.repeat(start, cnt) + _ranges(cnt)
+        d_item = self._csr_item[gather]
+        d_post = self._csr_post[gather]
+        d_mult = np.repeat(mult, cnt)
+        yt = self.post_trace[d_post]
+        sel = yt > 0
+        self._apply(d_item[sel],
+                    -cfg.a_minus * yt[sel] * d_mult[sel], d_post[sel])
+
+        # potentiation: every synapse with a live pre trace into a
+        # neuron that fired this step (skipped entirely on quiet steps
+        # so sparse activity never pays the full-column gather)
+        fired_ids = np.asarray([self.net._nid[k] for k in fired
+                                if k in self.net._nid], np.int64)
+        if fired_ids.size:
+            fired_mask = np.zeros((max(self._n, 1),), bool)
+            fired_mask[fired_ids] = True
+            xt_all = self.pre_trace[self._csr_item]
+            sel = (xt_all > 0) & fired_mask[self._csr_post]
+            self._apply(self._csr_item[sel],
+                        cfg.a_plus * xt_all[sel], self._csr_post[sel])
+
         # bump traces after applying (classic trace ordering)
-        for pre in pres:
-            self.pre_trace[pre] = self.pre_trace.get(pre, 0) + 1
-        for post in fired:
-            self.post_trace[post] = self.post_trace.get(post, 0) + 1
+        if pres.size:
+            np.add.at(self.pre_trace, pres, 1)
+        self.post_trace[fired_ids] += 1

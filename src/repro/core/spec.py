@@ -1,0 +1,273 @@
+"""Columnar network description — stage 1 of the build→compile→deploy API.
+
+The paper's headline interface claim is a Python front end "agnostic to
+hardware-level detail" that configures networks of up to 160M neurons /
+40B synapses. At that scale the per-key dict format of `CRI_network`
+(one Python tuple per synapse) makes *construction* the bottleneck, so
+the staged API starts from a columnar spec: synapses are three parallel
+int arrays (pre, post, weight) grown by bulk NumPy appends, and neuron
+models are packed parameter tables — a 1e6-synapse network is described
+with a handful of array ops and no per-synapse Python.
+
+    spec = NetworkSpec()
+    ax = spec.add_axons(64)                      # -> encoded source ids
+    nr = spec.add_neurons(1024, LIF_neuron(threshold=60, lam=3))
+    spec.connect(ax[pre_idx], nr[post_idx], weights)   # arrays, one call
+    spec.connect(nr[src], nr[dst], w2)                 # neuron->neuron
+    spec.set_outputs(nr[:8])
+    compiled = compile_spec(spec, target="engine")     # core.compile
+    dep = deploy(compiled)                             # core.deploy
+
+Source-id encoding: `add_axons` returns *encoded* ids (negative:
+axon a ↦ -(a+1)) and `add_neurons` returns plain neuron ids (>= 0), so
+one `pre` column can mix axon and neuron sources unambiguously and
+`connect` never needs a flag argument. `encode_axon`/`decode` expose
+the mapping for tools that work with raw axon indices.
+
+`from_dicts` ingests the legacy `CRI_network(axons=..., neurons=...)`
+format (one pass over the dicts — the unavoidable O(synapses) Python,
+paid once at the boundary); everything downstream is columnar. The
+compiled artifact is bit-identical between the two construction routes
+whenever the per-item synapse order matches (tests/test_staged_api.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.neuron import ANN_neuron, LIF_neuron
+
+__all__ = ["NetworkSpec", "encode_axon", "decode_pre"]
+
+
+def encode_axon(axon_ids):
+    """Raw axon index a -> encoded source id -(a+1) (vectorized)."""
+    a = np.asarray(axon_ids, np.int64)
+    return -(a + 1)
+
+
+def decode_pre(pre):
+    """Encoded source ids -> (is_axon, raw index): axon -(a+1) ↦ a,
+    neuron id passes through."""
+    p = np.asarray(pre, np.int64)
+    is_axon = p < 0
+    return is_axon, np.where(is_axon, -p - 1, p)
+
+
+def _model_sig(model) -> Tuple:
+    """The HBM grouping signature — distinct tuples define the model
+    groups, in first-appearance order (exactly the legacy
+    CRI_network rule, so images stay bit-identical)."""
+    return (model.kind, model.threshold, model.nu, model.lam)
+
+
+class NetworkSpec:
+    """Growable columnar description of an axons+neurons network."""
+
+    def __init__(self):
+        self.n_axons = 0
+        self.n_neurons = 0
+        # keys are optional (default: the integer id); stored per item
+        self._axon_keys: List[Hashable] = []
+        self._neuron_keys: List[Hashable] = []
+        # packed per-neuron model tables, grown per add_neurons call
+        self._theta: List[np.ndarray] = []
+        self._nu: List[np.ndarray] = []
+        self._lam: List[np.ndarray] = []
+        self._is_lif: List[np.ndarray] = []
+        self._model_gid: List[np.ndarray] = []
+        self._sig_gid: Dict[Tuple, int] = {}
+        self._models_by_gid: List = []
+        # synapse columns, appended per connect call
+        self._pre: List[np.ndarray] = []
+        self._post: List[np.ndarray] = []
+        self._w: List[np.ndarray] = []
+        self._outputs: Optional[np.ndarray] = None
+        self._cols = None               # frozen (pre, post, w) cache
+
+    # ------------------------------------------------------------ builders
+    def add_axons(self, n: int, keys: Optional[Sequence] = None
+                  ) -> np.ndarray:
+        """Append n axons; returns their ENCODED source ids (negative),
+        ready to use as `connect` pre entries."""
+        n = int(n)
+        if n < 0:
+            raise ValueError(f"add_axons(n={n})")
+        ids = np.arange(self.n_axons, self.n_axons + n, dtype=np.int64)
+        if keys is None:
+            self._axon_keys.extend(ids.tolist())
+        else:
+            keys = list(keys)
+            if len(keys) != n:
+                raise ValueError(f"{len(keys)} keys for {n} axons")
+            self._axon_keys.extend(keys)
+        self.n_axons += n
+        return encode_axon(ids)
+
+    def add_neurons(self, n: int, model, keys: Optional[Sequence] = None
+                    ) -> np.ndarray:
+        """Append n neurons sharing one model (call once per model run);
+        returns their neuron ids."""
+        n = int(n)
+        if n < 0:
+            raise ValueError(f"add_neurons(n={n})")
+        if not isinstance(model, (LIF_neuron, ANN_neuron)):
+            raise TypeError(f"model must be LIF_neuron/ANN_neuron, "
+                            f"got {type(model).__name__}")
+        ids = np.arange(self.n_neurons, self.n_neurons + n, dtype=np.int64)
+        if keys is None:
+            self._neuron_keys.extend(ids.tolist())
+        else:
+            keys = list(keys)
+            if len(keys) != n:
+                raise ValueError(f"{len(keys)} keys for {n} neurons")
+            self._neuron_keys.extend(keys)
+        sig = _model_sig(model)
+        gid = self._sig_gid.setdefault(sig, len(self._sig_gid))
+        if gid == len(self._models_by_gid):
+            self._models_by_gid.append(model)
+        self._theta.append(np.full((n,), model.threshold, np.int32))
+        self._nu.append(np.full((n,), model.nu, np.int32))
+        self._lam.append(np.full((n,), model.lam, np.int32))
+        self._is_lif.append(np.full((n,), model.kind == "LIF", bool))
+        self._model_gid.append(np.full((n,), gid, np.int32))
+        self.n_neurons += n
+        return ids
+
+    def connect(self, pre, post, weight) -> None:
+        """Bulk synapse append: pre (encoded source ids — negative for
+        axons), post (neuron ids), weight (ints), all broadcastable to a
+        common 1-D shape. Per-item synapse order is the append order —
+        the order the HBM mapper places records in."""
+        pre = np.asarray(pre, np.int64).reshape(-1)
+        post = np.asarray(post, np.int64).reshape(-1)
+        w = np.asarray(weight)
+        if not (np.issubdtype(w.dtype, np.integer)
+                or w.dtype == np.bool_):
+            raise TypeError(f"weights must be integers, got {w.dtype}")
+        w = w.astype(np.int64).reshape(-1)
+        pre, post, w = np.broadcast_arrays(pre, post, w)
+        if pre.size == 0:
+            return
+        is_axon, raw = decode_pre(pre)
+        bad_a = is_axon & (raw >= self.n_axons)
+        bad_n = (~is_axon) & (raw >= self.n_neurons)
+        if bad_a.any() or bad_n.any():
+            i = int(np.nonzero(bad_a | bad_n)[0][0])
+            raise ValueError(f"connect: unknown pre id {int(pre[i])} "
+                             f"(n_axons={self.n_axons}, "
+                             f"n_neurons={self.n_neurons})")
+        if post.size and (post.min() < 0 or post.max() >= self.n_neurons):
+            bad = post[(post < 0) | (post >= self.n_neurons)][0]
+            raise ValueError(f"connect: unknown post neuron {int(bad)} "
+                             f"(n_neurons={self.n_neurons})")
+        self._pre.append(np.ascontiguousarray(pre))
+        self._post.append(np.ascontiguousarray(post))
+        self._w.append(np.ascontiguousarray(w))
+        self._cols = None
+
+    def set_outputs(self, outputs) -> None:
+        """Designate output neurons (ids, in monitor order)."""
+        out = np.asarray(outputs, np.int64).reshape(-1)
+        if out.size and (out.min() < 0 or out.max() >= self.n_neurons):
+            bad = out[(out < 0) | (out >= self.n_neurons)][0]
+            raise KeyError(f"output {int(bad)} is not a neuron")
+        self._outputs = out
+
+    # ------------------------------------------------------------- frozen
+    def columns(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(pre, post, weight) as three flat arrays (append order)."""
+        if self._cols is None:
+            if self._pre:
+                self._cols = (np.concatenate(self._pre),
+                              np.concatenate(self._post),
+                              np.concatenate(self._w))
+            else:
+                z = np.zeros((0,), np.int64)
+                self._cols = (z, z.copy(), z.copy())
+        return self._cols
+
+    @property
+    def n_synapses(self) -> int:
+        return int(self.columns()[0].shape[0])
+
+    @property
+    def axon_keys(self) -> List[Hashable]:
+        return list(self._axon_keys)
+
+    @property
+    def neuron_keys(self) -> List[Hashable]:
+        return list(self._neuron_keys)
+
+    @property
+    def outputs(self) -> np.ndarray:
+        return (np.zeros((0,), np.int64) if self._outputs is None
+                else self._outputs.copy())
+
+    def model_tables(self):
+        """(theta, nu, lam, is_lif, model_gid) — (N,) packed arrays."""
+        def cat(parts, dtype):
+            return (np.concatenate(parts) if parts
+                    else np.zeros((0,), dtype))
+        return (cat(self._theta, np.int32), cat(self._nu, np.int32),
+                cat(self._lam, np.int32), cat(self._is_lif, bool),
+                cat(self._model_gid, np.int32))
+
+    @property
+    def models_by_gid(self) -> List:
+        return list(self._models_by_gid)
+
+    # -------------------------------------------------------- legacy door
+    @classmethod
+    def from_dicts(cls, axons: Dict, neurons: Dict, outputs: Sequence
+                   ) -> "NetworkSpec":
+        """Ingest the legacy dict format:
+
+            axons   = {key: [(post_key, w), ...]}
+            neurons = {key: ([(post_key, w), ...], model)}
+            outputs = [neuron_key, ...]
+
+        Ids follow dict insertion order (the legacy rule); per-item
+        synapse order follows the per-key lists, so compiling this spec
+        reproduces the legacy `CRI_network` HBM image bit for bit."""
+        spec = cls()
+        axon_keys = list(axons.keys())
+        neuron_keys = list(neurons.keys())
+        nid = {k: i for i, k in enumerate(neuron_keys)}
+        ax_ids = spec.add_axons(len(axon_keys), keys=axon_keys)
+        # group consecutive same-model neurons into one bulk add
+        run_start = 0
+        models = [neurons[k][1] for k in neuron_keys]
+        for i in range(1, len(neuron_keys) + 1):
+            if i == len(neuron_keys) or models[i] != models[run_start]:
+                spec.add_neurons(i - run_start, models[run_start],
+                                 keys=neuron_keys[run_start:i])
+                run_start = i
+        pre_parts: List[np.ndarray] = []
+        post_parts: List[np.ndarray] = []
+        w_parts: List[np.ndarray] = []
+
+        def ingest(pre_id, syns):
+            if not syns:
+                return
+            pre_parts.append(np.full((len(syns),), pre_id, np.int64))
+            post_parts.append(np.asarray([nid[p] for p, _ in syns],
+                                         np.int64))
+            w_parts.append(np.asarray([int(w) for _, w in syns], np.int64))
+
+        for i, k in enumerate(axon_keys):
+            ingest(int(ax_ids[i]), axons[k])
+        for i, k in enumerate(neuron_keys):
+            ingest(i, neurons[k][0])
+        if pre_parts:
+            spec.connect(np.concatenate(pre_parts),
+                         np.concatenate(post_parts),
+                         np.concatenate(w_parts))
+        out_ids = []
+        for k in outputs:
+            if k not in nid:
+                raise KeyError(f"output {k!r} is not a neuron")
+            out_ids.append(nid[k])
+        spec.set_outputs(out_ids)
+        return spec

@@ -196,27 +196,20 @@ def _int_layer(spec, p, h, model, li):
 # ----------------------------------------------------------- conversion
 def spiking_to_network(model: SpikingModel, qparams, backend="engine",
                        seed=0):
-    """Convert to LIF_neuron(λ=63 ≈ IF, θ=0 strict >) adjacency. Biases use
-    per-layer always-on axons fired EVERY step (spiking nets integrate
-    biases each timestep, unlike the one-shot ANN case). Output neurons are
-    ordinary spiking LIF neurons whose spikes are counted."""
-    from repro.core.convert import QATModel, to_network
+    """Convert to LIF_neuron(λ=63 ≈ IF, θ=0 strict >) adjacency through
+    the staged columnar path (the same `build_conversion_spec` as the
+    ANN pipeline, with LIF models — no intermediate throwaway network).
+    Biases use per-layer always-on axons fired EVERY step (spiking nets
+    integrate biases each timestep, unlike the one-shot ANN case).
+    Output neurons are ordinary spiking LIF neurons whose spikes are
+    counted."""
+    from repro.core.convert import QATModel, build_conversion_spec
     qm = QATModel(model.input_shape, model.layers, model.n_classes)
-    # reuse the adjacency construction, then swap neuron models to LIF/IF
-    net_tmp, out_keys = to_network(qm, qparams, backend="simulator",
-                                   seed=seed)
-    axons = {k: list(net_tmp._axon_syn[net_tmp._aid[k]])
-             for k in net_tmp.axon_keys}
-    # rebuild with key-space synapse lists
-    ids = {i: k for k, i in net_tmp._nid.items()}
-    axons = {k: [(ids[p], w) for p, w in net_tmp._axon_syn[net_tmp._aid[k]]]
-             for k in net_tmp.axon_keys}
-    neurons = {}
-    for k in net_tmp.neuron_keys:
-        syns = [(ids[p], w) for p, w in net_tmp._neuron_syn[net_tmp._nid[k]]]
-        neurons[k] = (syns, LIF_neuron(threshold=0, nu=-32, lam=63))
-    net = CRI_network(axons=axons, neurons=neurons, outputs=out_keys,
-                      backend=backend, seed=seed)
+    lif = LIF_neuron(threshold=0, nu=-32, lam=63)
+    spec, out_keys = build_conversion_spec(qm, qparams,
+                                           hidden_model=lif,
+                                           output_model=lif)
+    net = CRI_network.from_spec(spec, backend=backend, seed=seed)
     return net, out_keys
 
 

@@ -1,0 +1,157 @@
+"""Batched STDP over the staged write_synapses path (PR 3).
+
+Pins (a) exact equivalence of the batched update engine with the
+legacy sequential read_synapse/write_synapse loop, (b) bit-for-bit
+STDP-training parity between the engine and hiaer backends (spikes,
+weights, traces), and (c) that each STDP phase lands as one batched
+upload rather than one per synapse.
+"""
+import numpy as np
+
+from repro.core.api import CRI_network, LIF_neuron
+from repro.core.learning import STDP, STDPConfig
+
+
+def random_net(seed, n=14, n_axons=3, fanout=3):
+    rng = np.random.default_rng(seed)
+    names = [f"n{i}" for i in range(n)]
+    lif = LIF_neuron(threshold=4, nu=-32, lam=63)
+    neurons = {k: ([(names[j], int(rng.integers(1, 6)))
+                    for j in rng.choice(n, fanout, replace=False)], lif)
+               for k in names}
+    axons = {f"a{i}": [(names[j], int(rng.integers(1, 6)))
+                       for j in rng.choice(n, 2, replace=False)]
+             for i in range(n_axons)}
+    return axons, neurons, names
+
+
+class SequentialSTDP:
+    """The seed-era per-synapse loop (scalar read/write_synapse, dict
+    traces) — the oracle the batched engine must match exactly."""
+
+    def __init__(self, net, cfg):
+        self.net, self.cfg = net, cfg
+        self.pre_trace = {k: 0 for k in
+                          list(net.axon_keys) + list(net.neuron_keys)}
+        self.post_trace = {k: 0 for k in net.neuron_keys}
+        ids = {i: k for k, i in net._nid.items()}
+        self.adj = {}
+        for k in net.axon_keys:
+            self.adj[k] = [ids[p] for p, _ in
+                           net._axon_syn[net._aid[k]]]
+        for k in net.neuron_keys:
+            if k not in self.adj:
+                self.adj[k] = [ids[p] for p, _ in
+                               net._neuron_syn[net._nid[k]]]
+
+    def step(self, inputs, fired_keys):
+        cfg = self.cfg
+        for d in (self.pre_trace, self.post_trace):
+            for k in d:
+                d[k] -= d[k] >> cfg.tau_shift
+        fired = list(dict.fromkeys(fired_keys))
+        pres = list(inputs) + fired
+        for pre in pres:
+            for post in self.adj.get(pre, ()):
+                yt = self.post_trace.get(post, 0)
+                if yt:
+                    w = self.net.read_synapse(pre, post)
+                    w2 = int(np.clip(w - cfg.a_minus * yt,
+                                     cfg.w_min, cfg.w_max))
+                    if w2 != w:
+                        self.net.write_synapse(pre, post, w2)
+        for pre, posts in self.adj.items():
+            xt = self.pre_trace.get(pre, 0)
+            if not xt:
+                continue
+            for post in posts:
+                if post in fired:
+                    w = self.net.read_synapse(pre, post)
+                    w2 = int(np.clip(w + cfg.a_plus * xt,
+                                     cfg.w_min, cfg.w_max))
+                    if w2 != w:
+                        self.net.write_synapse(pre, post, w2)
+        for pre in pres:
+            self.pre_trace[pre] = self.pre_trace.get(pre, 0) + 1
+        for post in fired:
+            self.post_trace[post] = self.post_trace.get(post, 0) + 1
+
+
+def drive(seed, T=14):
+    rng = np.random.default_rng(seed)
+    return [[f"a{i}" for i in rng.choice(3, int(rng.integers(0, 3)),
+                                         replace=False)]
+            for _ in range(T)]
+
+
+def test_batched_stdp_matches_sequential_loop():
+    axons, neurons, names = random_net(0)
+    cfg = STDPConfig(a_plus=4, a_minus=3, tau_shift=1, w_min=-20,
+                     w_max=20)                    # tight clip on purpose
+    net_b = CRI_network(axons=axons, neurons=neurons, outputs=names,
+                        backend="simulator", seed=5)
+    net_s = CRI_network(axons=axons, neurons=neurons, outputs=names,
+                        backend="simulator", seed=5)
+    batched, seq = STDP(net_b, cfg), SequentialSTDP(net_s, cfg)
+    for inp in drive(1):
+        f_b = net_b.step(inp + inp)               # doubled axon events
+        f_s = net_s.step(inp + inp)
+        assert f_b == f_s
+        batched.step(inp + inp, f_b)
+        seq.step(inp + inp, f_s)
+        np.testing.assert_array_equal(net_b.compiled.syn_weight,
+                                      net_s.compiled.syn_weight)
+    base = net_b.compiled.item_base
+    for k in net_b.axon_keys:
+        assert batched.pre_trace[net_b._aid[k]] == seq.pre_trace[k]
+    for k in names:
+        assert batched.pre_trace[base + net_b._nid[k]] \
+            == seq.pre_trace[k]
+        assert batched.post_trace[net_b._nid[k]] == seq.post_trace[k]
+
+
+def test_stdp_hiaer_matches_engine_bit_for_bit():
+    from repro.core.partition import Hierarchy
+    axons, neurons, names = random_net(3)
+    cfg = STDPConfig(a_plus=5, a_minus=2, tau_shift=2)
+
+    def train(backend, **kw):
+        net = CRI_network(axons=axons, neurons=neurons, outputs=names,
+                          backend=backend, seed=11, **kw)
+        stdp = STDP(net, cfg)
+        spikes = []
+        for inp in drive(9):
+            fired = net.step(inp)
+            stdp.step(inp, fired)
+            spikes.append(tuple(fired))
+        return net, stdp, spikes
+
+    eng, stdp_e, spk_e = train("engine")
+    hi, stdp_h, spk_h = train("hiaer",
+                              hierarchy=Hierarchy(1, 2, 2, 5))
+    assert spk_e == spk_h                                  # spikes
+    np.testing.assert_array_equal(eng.compiled.syn_weight,
+                                  hi.compiled.syn_weight)  # weights
+    np.testing.assert_array_equal(stdp_e.pre_trace, stdp_h.pre_trace)
+    np.testing.assert_array_equal(stdp_e.post_trace, stdp_h.post_trace)
+    assert eng.read_membrane(*names) == hi.read_membrane(*names)
+    # training actually changed something
+    fresh = CRI_network(axons=axons, neurons=neurons, outputs=names,
+                        backend="engine", seed=11)
+    assert (eng.compiled.syn_weight
+            != fresh.compiled.syn_weight).any()
+
+
+def test_stdp_batches_uploads_per_phase():
+    """Each STDP step applies at most 2 batched uploads (depression +
+    potentiation), never one per synapse."""
+    axons, neurons, names = random_net(6)
+    net = CRI_network(axons=axons, neurons=neurons, outputs=names,
+                      backend="hiaer", seed=2)
+    stdp = STDP(net, STDPConfig(a_plus=4, a_minus=3, tau_shift=1))
+    for inp in drive(2, T=10):
+        before = net._dep.weight_uploads
+        fired = net.step(inp)
+        stdp.step(inp, fired)
+        assert net._dep.weight_uploads - before <= 2
+    assert net._dep.weight_uploads > 0    # learning did happen, batched

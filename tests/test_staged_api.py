@@ -1,0 +1,443 @@
+"""Staged build→compile→deploy API (PR 3): columnar NetworkSpec,
+compiled artifacts, batched runtime reconfiguration.
+
+Pins the acceptance invariants:
+  * a network built via NetworkSpec bulk ops, compiled, saved, loaded,
+    and deployed on each backend is bit-exact (spikes, membranes,
+    AccessCounter stats) against the legacy dict CRI_network;
+  * the vectorized columnar mapper reproduces the legacy Fig. 7 walk
+    (hbm.compile_network) bit for bit, pointer dicts included;
+  * build-time sharding from columns == shard_image of the monolith;
+  * a 1000-synapse write_synapses batch triggers exactly ONE
+    update_weights/re-shard;
+  * the synapse index preserves KeyError and the axon-vs-neuron pre
+    disambiguation.
+"""
+import random
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import hbm
+from repro.core.api import ANN_neuron, CRI_network, LIF_neuron
+from repro.core.compile import CompiledNetwork, compile_spec
+from repro.core.deploy import deploy
+from repro.core.partition import Hierarchy
+from repro.core.spec import NetworkSpec
+
+
+# ---------------------------------------------------------------- helpers
+def random_dicts(seed, n_axons=4, n_neurons=18, fanout=4):
+    rng = np.random.default_rng(seed)
+    names = [f"n{i}" for i in range(n_neurons)]
+    models = [LIF_neuron(threshold=5, nu=-32, lam=60),
+              LIF_neuron(threshold=9, nu=-32, lam=3),
+              ANN_neuron(threshold=4, nu=-32)]
+    axons = {f"a{i}": [(names[j], int(rng.integers(1, 9)))
+                       for j in rng.choice(n_neurons, fanout,
+                                           replace=False)]
+             for i in range(n_axons)}
+    neurons = {}
+    for i, k in enumerate(names):
+        fo = int(rng.integers(0, fanout + 1))
+        syns = [(names[j], int(rng.integers(-6, 9)))
+                for j in rng.choice(n_neurons, fo, replace=False)]
+        neurons[k] = (syns, models[int(rng.integers(0, len(models)))])
+    outputs = names[:5]
+    return axons, neurons, outputs
+
+
+def bulk_spec_from_dicts(axons, neurons, outputs) -> NetworkSpec:
+    """The same network through the BULK columnar route: one add_axons,
+    grouped add_neurons, one connect call with array arguments."""
+    spec = NetworkSpec()
+    ax = spec.add_axons(len(axons), keys=list(axons))
+    nid = {k: i for i, k in enumerate(neurons)}
+    keys = list(neurons)
+    i = 0
+    while i < len(keys):                      # per-model runs, bulk adds
+        j = i
+        while j < len(keys) and neurons[keys[j]][1] == neurons[keys[i]][1]:
+            j += 1
+        spec.add_neurons(j - i, neurons[keys[i]][1], keys=keys[i:j])
+        i = j
+    pre, post, w = [], [], []
+    for a, (k, syns) in enumerate(axons.items()):
+        for p, ww in syns:
+            pre.append(int(ax[a]))
+            post.append(nid[p])
+            w.append(ww)
+    for k, (syns, _) in neurons.items():
+        for p, ww in syns:
+            pre.append(nid[k])
+            post.append(nid[p])
+            w.append(ww)
+    if pre:
+        spec.connect(np.asarray(pre), np.asarray(post), np.asarray(w))
+    spec.set_outputs([nid[k] for k in outputs])
+    return spec
+
+
+def legacy_image(axons, neurons, outputs, dense_pack=True):
+    """The seed-era construction: per-key dicts -> id adjacency ->
+    hbm.compile_network (the preserved per-synapse Python mapper)."""
+    aid = {k: i for i, k in enumerate(axons)}
+    nid = {k: i for i, k in enumerate(neurons)}
+    axon_syn = {aid[k]: [(nid[p], int(w)) for p, w in axons[k]]
+                for k in axons}
+    neuron_syn = {nid[k]: [(nid[p], int(w)) for p, w in neurons[k][0]]
+                  for k in neurons}
+    sig, model_ids = {}, {}
+    for i, k in enumerate(neurons):
+        m = neurons[k][1]
+        s = (m.kind, m.threshold, m.nu, m.lam)
+        model_ids[i] = sig.setdefault(s, len(sig))
+    return hbm.compile_network(axon_syn, neuron_syn, model_ids,
+                               [nid[k] for k in outputs], len(neurons),
+                               dense_pack=dense_pack)
+
+
+def assert_images_equal(a, b):
+    np.testing.assert_array_equal(a.syn_post, b.syn_post)
+    np.testing.assert_array_equal(a.syn_weight, b.syn_weight)
+    np.testing.assert_array_equal(a.syn_outflag, b.syn_outflag)
+    assert a.axon_ptr == b.axon_ptr
+    assert a.neuron_ptr == b.neuron_ptr
+    assert a.model_groups == b.model_groups
+
+
+def assert_shards_equal(a, b):
+    assert a.n_cores == b.n_cores and a.n_max == b.n_max
+    for f in ("core_nids", "core_of_neuron", "local_id", "csr_src",
+              "csr_item", "csr_indptr", "grey_entries", "white_entries",
+              "white_sources"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+
+
+def counter_dict(net):
+    return None if net.counter is None else net.counter.as_dict()
+
+
+# ------------------------------------------------- columnar mapper parity
+@pytest.mark.parametrize("dense", [True, False])
+def test_columnar_compile_matches_legacy_mapper(dense):
+    for seed in range(4):
+        axons, neurons, outputs = random_dicts(seed)
+        spec = NetworkSpec.from_dicts(axons, neurons, outputs)
+        compiled = compile_spec(spec, target="engine", dense_pack=dense)
+        assert_images_equal(compiled.image,
+                            legacy_image(axons, neurons, outputs, dense))
+
+
+def test_bulk_and_dict_routes_identical():
+    axons, neurons, outputs = random_dicts(11)
+    img_dict = compile_spec(NetworkSpec.from_dicts(
+        axons, neurons, outputs), target="engine").image
+    img_bulk = compile_spec(bulk_spec_from_dicts(
+        axons, neurons, outputs), target="engine").image
+    assert_images_equal(img_dict, img_bulk)
+
+
+def test_build_time_shards_match_monolith_slicing():
+    axons, neurons, outputs = random_dicts(3)
+    hier = Hierarchy(2, 2, 2, 4)
+    spec = NetworkSpec.from_dicts(axons, neurons, outputs)
+    compiled = compile_spec(spec, target="hiaer", hierarchy=hier)
+    ref = hbm.shard_image(compiled.image, compiled.flat,
+                          compiled.neuron_core, compiled.axon_core,
+                          hier.n_cores, compiled.n_neurons)
+    assert_shards_equal(compiled.shards, ref)
+
+
+# ------------------------------------------- spec→compile→deploy parity
+@pytest.mark.parametrize("backend", ["simulator", "engine", "hiaer"])
+def test_staged_pipeline_bit_exact_vs_legacy_dicts(backend, tmp_path):
+    """Bulk-built, compiled, SAVED, LOADED, deployed network == legacy
+    dict CRI_network on spikes, membranes, and counter stats."""
+    axons, neurons, outputs = random_dicts(7)
+    legacy = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                         backend=backend, seed=9)
+    spec = bulk_spec_from_dicts(axons, neurons, outputs)
+    compiled = compile_spec(spec, target=backend)
+    path = tmp_path / f"net_{backend}.npz"
+    compiled.save(path)
+    staged = CRI_network.from_compiled(CompiledNetwork.load(path), seed=9)
+    assert staged.backend == backend
+
+    rng = random.Random(4)
+    ax_keys = list(axons)
+    for _ in range(10):
+        inp = rng.sample(ax_keys, k=rng.randint(0, len(ax_keys)))
+        f1, p1 = legacy.step(inp, membranePotential=True)
+        f2, p2 = staged.step(inp, membranePotential=True)
+        assert f1 == f2 and p1 == p2
+    sched = np.asarray(np.stack(
+        [np.eye(len(ax_keys), dtype=np.int32)[: len(ax_keys)]] * 2))
+    np.testing.assert_array_equal(legacy.run_batch(sched),
+                                  staged.run_batch(sched))
+    assert legacy.run(sched[0]) == staged.run(sched[0])
+    assert counter_dict(legacy) == counter_dict(staged)
+
+
+def test_save_load_round_trip_bit_identical(tmp_path):
+    axons, neurons, outputs = random_dicts(5)
+    for target, kw in (("simulator", {}), ("engine", {}),
+                       ("hiaer", {"hierarchy": Hierarchy(1, 2, 2, 8)})):
+        compiled = compile_spec(NetworkSpec.from_dicts(
+            axons, neurons, outputs), target=target, **kw)
+        path = tmp_path / f"art_{target}.npz"
+        compiled.save(path)
+        loaded = CompiledNetwork.load(path)
+        assert loaded.target == target
+        assert loaded.axon_keys == compiled.axon_keys
+        assert loaded.neuron_keys == compiled.neuron_keys
+        for f in ("outputs", "theta", "nu", "lam", "is_lif", "model_gid",
+                  "syn_item", "syn_post", "syn_weight"):
+            np.testing.assert_array_equal(getattr(loaded, f),
+                                          getattr(compiled, f), err_msg=f)
+        if target == "simulator":
+            np.testing.assert_array_equal(loaded.axonW, compiled.axonW)
+            np.testing.assert_array_equal(loaded.neuronW,
+                                          compiled.neuronW)
+        else:
+            np.testing.assert_array_equal(loaded.syn_pos,
+                                          compiled.syn_pos)
+            assert_images_equal(loaded.image, compiled.image)
+            for f in ("axon_base", "axon_rows", "axon_present",
+                      "neuron_base", "neuron_rows", "neuron_present",
+                      "row_owner_axon", "row_owner_neuron",
+                      "axon_row_indptr", "axon_row_indices",
+                      "neuron_row_indptr", "neuron_row_indices"):
+                np.testing.assert_array_equal(
+                    getattr(loaded.flat, f), getattr(compiled.flat, f),
+                    err_msg=f)
+        if target == "hiaer":
+            assert loaded.hierarchy == compiled.hierarchy
+            np.testing.assert_array_equal(loaded.neuron_core,
+                                          compiled.neuron_core)
+            np.testing.assert_array_equal(loaded.axon_core,
+                                          compiled.axon_core)
+            np.testing.assert_array_equal(loaded.axon_ndest,
+                                          compiled.axon_ndest)
+            np.testing.assert_array_equal(loaded.neuron_ndest,
+                                          compiled.neuron_ndest)
+            assert_shards_equal(loaded.shards, compiled.shards)
+
+
+# ------------------------------------------------ batched reconfiguration
+def big_random_net(seed=0, n_axons=40, n_neurons=100, fanout=25):
+    rng = np.random.default_rng(seed)
+    names = [f"n{i}" for i in range(n_neurons)]
+    lif = LIF_neuron(threshold=50, nu=-32, lam=4)
+    axons = {f"a{i}": [(names[j], int(rng.integers(1, 9)))
+                       for j in rng.choice(n_neurons, fanout,
+                                           replace=False)]
+             for i in range(n_axons)}
+    neurons = {k: ([], lif) for k in names}
+    return axons, neurons, names[:4]
+
+
+@pytest.mark.parametrize("backend", ["engine", "hiaer"])
+def test_thousand_synapse_batch_is_one_upload(backend):
+    axons, neurons, outputs = big_random_net()
+    kw = {"hierarchy": Hierarchy(1, 1, 2, 64)} if backend == "hiaer" \
+        else {}
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend=backend, seed=0, **kw)
+    calls = []
+    orig = net._impl.update_weights
+    net._impl.update_weights = lambda w: (calls.append(1), orig(w))[1]
+    pres, posts, ws = [], [], []
+    for a, syns in axons.items():
+        for p, w in syns:
+            pres.append(a)
+            posts.append(p)
+            ws.append(w + 1)
+    assert len(pres) == 1000
+    net.write_synapses(pres, posts, ws)
+    assert len(calls) == 1                  # ONE re-upload / re-shard
+    assert net._dep.weight_uploads == 1
+    np.testing.assert_array_equal(
+        net.read_synapses(pres, posts), np.asarray(ws))
+    # the compiled scan path must see the batch edit
+    net.reset()
+    legacy = CRI_network(axons={k: [(p, w + 1) for p, w in v]
+                               for k, v in axons.items()},
+                         neurons=neurons, outputs=outputs,
+                         backend=backend, seed=0, **kw)
+    sched = [[k] for k in list(axons)[:6]]
+    assert net.run(sched) == legacy.run(sched)
+
+
+def test_write_synapses_batch_semantics():
+    axons, neurons, outputs = big_random_net(3)
+    nets = {b: CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                           backend=b, seed=1)
+            for b in ("simulator", "engine", "hiaer")}
+    a0 = "a0"
+    posts = [p for p, _ in axons[a0][:3]]
+    for b, net in nets.items():
+        # duplicate pairs in one batch resolve last-wins
+        net.write_synapses([a0, a0], [posts[0], posts[0]], [5, 9])
+        assert net.read_synapse(a0, posts[0]) == 9, b
+        # a batch with any missing pair mutates NOTHING
+        before = [net.read_synapse(a0, p) for p in posts]
+        with pytest.raises(KeyError):
+            net.write_synapses([a0, a0, "n0"],
+                               posts[:2] + [posts[0]], [1, 2, 3])
+        assert [net.read_synapse(a0, p) for p in posts] == before, b
+    for b, net in nets.items():
+        # broadcast: one pre against many posts (and the KeyError for a
+        # missing pair names the broadcast key, not an IndexError)
+        np.testing.assert_array_equal(
+            net.read_synapses([a0], posts),
+            [net.read_synapse(a0, p) for p in posts])
+        targeted = {p for p, _ in axons[a0]}
+        missing = next(k for k in net.neuron_keys if k not in targeted)
+        with pytest.raises(KeyError):
+            net.read_synapses([a0], [posts[0], missing])
+        # records are int16: out-of-range writes clip identically in
+        # the readable column and the routed tables
+        net.write_synapse(a0, posts[1], 50_000)
+        assert net.read_synapse(a0, posts[1]) == 32767, b
+    # all three backends agree after the same batched edits
+    sched = [[a0], [], [a0]]
+    runs = {b: net.run(sched) for b, net in nets.items()}
+    assert runs["simulator"] == runs["engine"] == runs["hiaer"]
+
+
+# -------------------------------------------------- synapse index (PR 3)
+def test_synapse_index_keyerrors_and_disambiguation():
+    """Regression: a key naming BOTH an axon and a neuron resolves to
+    the AXON (the legacy scan order), for reads and writes."""
+    lif = LIF_neuron(threshold=1000, nu=-32, lam=63)
+    axons = {"shared": [("t", 7)], "a": [("t", 1)]}
+    neurons = {"shared": ([("t", 3)], lif), "t": ([], lif)}
+    for backend in ("simulator", "engine", "hiaer"):
+        net = CRI_network(axons=axons, neurons=neurons, outputs=["t"],
+                          backend=backend, seed=0)
+        assert net.read_synapse("shared", "t") == 7          # axon wins
+        net.write_synapse("shared", "t", 11)
+        assert net.read_synapse("shared", "t") == 11
+        # the NEURON's synapse is untouched by the axon-space write
+        assert net._neuron_syn[0] == [(1, 3)]
+        with pytest.raises(KeyError):
+            net.read_synapse("a", "missing")                 # bad post
+        with pytest.raises(KeyError):
+            net.read_synapse("nope", "t")                    # bad pre
+        with pytest.raises(KeyError):
+            net.read_synapse("t", "t")           # neuron pre, no synapse
+        with pytest.raises(KeyError):
+            net.write_synapse("a", "a", 5)       # axon->missing post key
+        # semantic check: axon drive uses the edited axon weight, the
+        # neuron->neuron synapse still carries 3
+        net.reset()
+        net.step(["shared"])
+        assert net.read_membrane("t") == [11]
+
+
+def test_empty_batch_is_noop():
+    axons, neurons, outputs = big_random_net(4)
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=0)
+    net.write_synapses([], [], [])
+    assert net._dep.weight_uploads == 0
+    assert net.read_synapses([], []).shape == (0,)
+
+
+# ----------------------------------------------------- bulk spec surface
+def test_spec_validation_errors():
+    spec = NetworkSpec()
+    ax = spec.add_axons(2)
+    nr = spec.add_neurons(3, LIF_neuron(threshold=1))
+    with pytest.raises(ValueError):
+        spec.connect([nr[0]], [7], [1])          # unknown post
+    with pytest.raises(ValueError):
+        spec.connect([-9], [0], [1])             # unknown axon
+    with pytest.raises(TypeError):
+        spec.connect([int(ax[0])], [0], [1.5])   # float weight
+    with pytest.raises(KeyError):
+        spec.set_outputs([5])
+    with pytest.raises(TypeError):
+        spec.add_neurons(1, "not-a-model")
+
+
+def test_bulk_spec_deploys_on_all_backends():
+    rng = np.random.default_rng(2)
+    spec = NetworkSpec()
+    ax = spec.add_axons(6)
+    nr = spec.add_neurons(40, LIF_neuron(threshold=30, nu=-32, lam=5))
+    pre = np.concatenate([np.repeat(ax, 10),
+                          nr[rng.integers(0, 40, 120)]])
+    post = nr[rng.integers(0, 40, pre.shape[0])]
+    w = rng.integers(1, 15, pre.shape[0])
+    spec.connect(pre, post, w)
+    spec.set_outputs(nr[:6])
+    sched = (rng.integers(0, 2, (8, 6)) * 2).astype(np.int32)
+    outs = {}
+    for backend in ("simulator", "engine", "hiaer"):
+        net = CRI_network.from_spec(spec, backend=backend, seed=3)
+        outs[backend] = (net.run(sched),
+                         net.read_membrane(*range(40)))
+    assert outs["simulator"] == outs["engine"] == outs["hiaer"]
+
+
+# ------------------------------------------------- hypothesis properties
+@st.composite
+def spec_network(draw):
+    n_ax = draw(st.integers(1, 5))
+    n_nr = draw(st.integers(2, 16))
+    nrs = [f"n{i}" for i in range(n_nr)]
+    axons = {}
+    for i in range(n_ax):
+        axons[f"a{i}"] = draw(st.lists(
+            st.tuples(st.sampled_from(nrs), st.integers(-40, 40)),
+            max_size=5, unique_by=lambda t: t[0]))
+    neurons = {}
+    for k in nrs:
+        fanout = draw(st.lists(
+            st.tuples(st.sampled_from(nrs), st.integers(-40, 40)),
+            max_size=4, unique_by=lambda t: t[0]))
+        if draw(st.booleans()):
+            model = LIF_neuron(threshold=draw(st.integers(0, 30)),
+                               nu=draw(st.sampled_from([-32, -20, 1])),
+                               lam=draw(st.integers(0, 63)))
+        else:
+            model = ANN_neuron(threshold=draw(st.integers(0, 30)),
+                               nu=draw(st.sampled_from([-32, 1])))
+        neurons[k] = (fanout, model)
+    outputs = draw(st.lists(st.sampled_from(nrs), min_size=1,
+                            max_size=3, unique=True))
+    return axons, neurons, outputs
+
+
+@settings(max_examples=8, deadline=None)
+@given(spec_network(), st.integers(0, 10_000))
+def test_property_three_routes_three_backends(netdef, seed):
+    """Bulk NetworkSpec.connect vs from_dicts vs legacy dict
+    CRI_network: identical HBM images, identical run_batch outputs on
+    simulator/engine/hiaer."""
+    axons, neurons, outputs = netdef
+    spec_d = NetworkSpec.from_dicts(axons, neurons, outputs)
+    spec_b = bulk_spec_from_dicts(axons, neurons, outputs)
+    img_ref = legacy_image(axons, neurons, outputs)
+    assert_images_equal(compile_spec(spec_d, target="engine").image,
+                        img_ref)
+    assert_images_equal(compile_spec(spec_b, target="engine").image,
+                        img_ref)
+    rng = np.random.default_rng(seed)
+    batch = rng.integers(0, 2, (2, 5, len(axons))).astype(np.int32)
+    ref = None
+    for backend in ("simulator", "engine", "hiaer"):
+        legacy_out = CRI_network(axons=axons, neurons=neurons,
+                                 outputs=outputs, backend=backend,
+                                 seed=seed).run_batch(batch)
+        for s in (spec_d, spec_b):
+            out = CRI_network.from_spec(s, backend=backend,
+                                        seed=seed).run_batch(batch)
+            np.testing.assert_array_equal(out, legacy_out)
+        if ref is None:
+            ref = legacy_out
+        np.testing.assert_array_equal(legacy_out, ref)
