@@ -1,0 +1,110 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+"""Device-mesh tier benchmark — events/sec and PEAK PER-DEVICE shard
+memory of `backend="mesh"` vs 1/2/4/8 forced host devices, on the
+clustered topology of benchmarks/hiaer_scaling.py.
+
+The structural claim the mesh tier exists for: per-device synapse-shard
+memory SHRINKS with the device count because each device stores only
+its own cores' ragged entries with their own weight storage — strictly
+below the monolithic dense `w_ext` weight image (R * SLOTS + 1 int32
+slots) the single-device hiaer tier used to hold, at 4+ devices. Any
+violation exits nonzero so CI catches a shard-layout regression.
+
+The XLA_FLAGS line above MUST precede every jax-touching import (jax
+pins the device count at first backend init) — the launch/dryrun.py
+pattern. Results go to BENCH_mesh.json (CI artifact).
+"""
+import json
+import time
+
+import numpy as np
+
+from benchmarks.hiaer_scaling import clustered_net
+from repro.core.api import CRI_network
+from repro.core.costmodel import LEVEL_NAMES
+from repro.core.hbm import SLOTS
+from repro.core.partition import Hierarchy
+
+
+def _run_point(axons, neurons, outputs, hier, n_devices, sched, steps):
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="mesh", seed=2, hierarchy=hier,
+                      n_devices=n_devices)
+    net.run(sched)                        # compile at the timed shape
+    net.reset(); net.counter.reset()
+    t0 = time.time()
+    net.run(sched)
+    dt = time.time() - t0
+    c = net.counter
+    impl = net._impl
+    dense_slots = net.compiled.image.syn_post.size + 1
+    point = {
+        "n_devices": impl.n_devices,
+        "us_per_step": 1e6 * dt / steps,
+        "events_per_sec": c.row_reads * SLOTS / max(dt, 1e-9),
+        "cross_level_events": c.cross_level_events,
+        "peak_device_shard_bytes": max(impl.device_shard_bytes()),
+        "total_shard_entries": impl.shards.n_entries,
+        "monolithic_w_ext_bytes": dense_slots * 4,
+        "collective_stages": len(impl._stages),
+    }
+    for k, v in zip(LEVEL_NAMES, c.level_events):
+        point[f"events_{k}"] = v
+    return point
+
+
+def run(n_clusters=16, size=64, steps=60, device_counts=(1, 2, 4, 8),
+        quiet=False, out_json="BENCH_mesh.json"):
+    axons, neurons, outputs = clustered_net(n_clusters, size)
+    n = len(neurons)
+    hier = Hierarchy(2, 2, 2, -(-n // 8))          # 8 cores, all levels
+    rng = np.random.default_rng(1)
+    ax_keys = list(axons)
+    sched = [[k for k in rng.choice(ax_keys, 3, replace=False)]
+             for _ in range(steps)]
+
+    results = {"n_neurons": n, "n_clusters": n_clusters, "steps": steps,
+               "hierarchy": [hier.n_servers, hier.fpgas_per_server,
+                             hier.cores_per_fpga], "by_devices": {}}
+    failures = []
+    for D in device_counts:
+        point = _run_point(axons, neurons, outputs, hier, D, sched,
+                           steps)
+        # the memory gate: per-device shard strictly below the retired
+        # monolithic dense weight image once the mesh is 4+ wide
+        if D >= 4:
+            ok = point["peak_device_shard_bytes"] < \
+                point["monolithic_w_ext_bytes"]
+            point["below_monolith"] = ok
+            if not ok:
+                failures.append(D)
+        results["by_devices"][str(D)] = point
+        if not quiet:
+            print(f"mesh_bench,devices={D},"
+                  f"ev={point['events_per_sec']:.3e}/s,"
+                  f"peak_dev_bytes={point['peak_device_shard_bytes']},"
+                  f"monolith={point['monolithic_w_ext_bytes']}")
+
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(results, fh, indent=2)
+    if failures:
+        raise SystemExit(
+            f"per-device shard bytes not below the monolithic w_ext "
+            f"image at device counts {failures} — shard layout "
+            f"regression")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_clusters=8, size=24, steps=20)
+    else:
+        run()

@@ -24,12 +24,16 @@ construction — the scalable path), and `CRI_network.from_compiled(...)`
 (a saved artifact) all produce bit-identical networks. The same API
 runs on the dense software simulator (local development), the
 event-driven HBM engine (the accelerator path, with energy/latency
-accounting), or the hierarchical multi-core HiAER tier (per-core HBM
+accounting), the hierarchical multi-core HiAER tier (per-core HBM
 shards with level-aware spike exchange and measured NoC/FireFly/
-Ethernet traffic) — backend="simulator" | "engine" | "hiaer". Results
-are bit-identical across all three (tests/test_api.py,
-tests/test_hiaer.py, tests/test_staged_api.py); this mirrors the
-paper's seamless local-to-cluster transition.
+Ethernet traffic), or the device-mesh tier (the same per-core shards
+executed under shard_map with each jax device owning only its cores'
+state and weights, spike exchange as hierarchical all_gather
+collectives; `n_devices` picks the mesh width) — backend="simulator" |
+"engine" | "hiaer" | "mesh". Results are bit-identical across all four
+(tests/test_api.py, tests/test_hiaer.py, tests/test_staged_api.py,
+tests/test_mesh_runtime.py); this mirrors the paper's seamless
+local-to-cluster transition.
 
 The hiaer backend takes a `partition.Hierarchy` (`hierarchy=...`) plus
 optional explicit placements (`placement={neuron_key: core_id}`,
@@ -85,7 +89,8 @@ class CRI_network:
                  placement: Optional[Dict] = None,
                  axon_placement: Optional[Dict] = None,
                  spec: Optional[NetworkSpec] = None,
-                 compiled: Optional[CompiledNetwork] = None):
+                 compiled: Optional[CompiledNetwork] = None,
+                 n_devices: Optional[int] = None):
         if compiled is None:
             if spec is None:
                 if axons is None or neurons is None or outputs is None:
@@ -112,7 +117,8 @@ class CRI_network:
         self.compiled = compiled
         self._dep: Deployment = deploy(compiled, seed=seed,
                                        vectorized=vectorized,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       n_devices=n_devices)
         self._impl = self._dep.impl
         self.counter: Optional[AccessCounter] = self._dep.counter
         self.image = compiled.image

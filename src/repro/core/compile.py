@@ -13,12 +13,15 @@ storage — no intermediate per-key dicts, no per-synapse Python:
   * engine — the packed §4 HBM routing table via the vectorized Fig. 7
     mapper (`hbm.build_image_columnar`), bit-identical to the legacy
     `hbm.compile_network` walk;
-  * hiaer — the HBM image PLUS the per-core grey/white-matter shards
-    built *directly from the columns* (`hbm.shard_entries`) — the
-    build-time sharding the ROADMAP called for, retiring the
-    materialize-monolithic-then-scan `shard_image` path — together with
-    the placement, axon homing, and the exchange destination tables
-    (`kernels.exchange.build_dest_tables_columns`).
+  * hiaer / mesh — the HBM image PLUS the ragged per-core
+    grey/white-matter shards built *directly from the columns*
+    (`hbm.shard_entries`, each core carrying its own weight storage so
+    the runtime never gathers through a monolithic dense `w_ext`),
+    together with the placement (vectorized BFS,
+    `partition.partition_arrays`), axon homing, and the exchange
+    destination tables (`kernels.exchange.build_dest_tables_columns`);
+    the two targets share the artifact — "mesh" deploys it over a real
+    device mesh (core.mesh_runtime).
 
 `CompiledNetwork` also carries the synapse columns in engine item space
 plus each record's flat position in the packed table: that is the
@@ -36,15 +39,14 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import hbm
-from repro.core.hbm import (CoreShards, FlatImage, HBMImage, Pointer,
-                            SLOTS)
-from repro.core.partition import Hierarchy, partition
+from repro.core.hbm import CoreShards, FlatImage, HBMImage, Pointer
+from repro.core.partition import Hierarchy, partition_arrays
 from repro.core.spec import NetworkSpec, decode_pre
 from repro.kernels import exchange as exch_k
 
 __all__ = ["CompiledNetwork", "compile_spec", "TARGETS"]
 
-TARGETS = ("simulator", "engine", "hiaer")
+TARGETS = ("simulator", "engine", "hiaer", "mesh")
 
 
 @dataclass
@@ -75,7 +77,7 @@ class CompiledNetwork:
     flat: Optional[FlatImage] = None
     axonW: Optional[np.ndarray] = None     # simulator target
     neuronW: Optional[np.ndarray] = None
-    # hiaer target
+    # hiaer / mesh targets
     hierarchy: Optional[Hierarchy] = None
     neuron_core: Optional[np.ndarray] = None
     axon_core: Optional[np.ndarray] = None
@@ -112,7 +114,7 @@ class CompiledNetwork:
             "model_gid": self.model_gid, "syn_item": self.syn_item,
             "syn_post": self.syn_post, "syn_weight": self.syn_weight,
         }
-        meta = {"version": 1, "target": self.target,
+        meta = {"version": 2, "target": self.target,
                 "dense_pack": bool(self.dense_pack),
                 "n_axons": self.n_axons, "n_neurons": self.n_neurons,
                 "axon_keys": self.axon_keys,
@@ -143,8 +145,9 @@ class CompiledNetwork:
                 neuron_ndest=self.neuron_ndest,
                 sh_core_nids=sh.core_nids,
                 sh_core_of_neuron=sh.core_of_neuron,
-                sh_local_id=sh.local_id, sh_csr_src=sh.csr_src,
-                sh_csr_item=sh.csr_item, sh_csr_indptr=sh.csr_indptr,
+                sh_local_id=sh.local_id, sh_entry_pos=sh.entry_pos,
+                sh_entry_item=sh.entry_item, sh_entry_w=sh.entry_w,
+                sh_csr_indptr=sh.csr_indptr,
                 sh_grey=sh.grey_entries, sh_white=sh.white_entries,
                 sh_white_sources=sh.white_sources)
             meta["shard_dims"] = (sh.n_cores, sh.n_max)
@@ -159,9 +162,17 @@ class CompiledNetwork:
     def load(cls, path) -> "CompiledNetwork":
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(z["meta_json"].tobytes().decode("utf-8"))
-            if meta.get("version") != 1:
+            version = meta.get("version")
+            if version not in (1, 2):
                 raise ValueError(
-                    f"unsupported artifact version {meta.get('version')}")
+                    f"unsupported artifact version {version}")
+            if version == 1 and "shard_dims" in meta:
+                # only the hiaer shard arrays changed layout in v2
+                # (padded csr_src/csr_item -> ragged entry_*); plain
+                # simulator/engine v1 artifacts load unchanged
+                raise ValueError(
+                    "version-1 hiaer artifacts predate the ragged "
+                    "shard layout; recompile the spec and re-save")
             c = cls(
                 target=meta["target"], dense_pack=meta["dense_pack"],
                 n_axons=meta["n_axons"], n_neurons=meta["n_neurons"],
@@ -195,8 +206,10 @@ class CompiledNetwork:
                     n_cores=n_cores, n_max=n_max,
                     core_nids=z["sh_core_nids"],
                     core_of_neuron=z["sh_core_of_neuron"],
-                    local_id=z["sh_local_id"], csr_src=z["sh_csr_src"],
-                    csr_item=z["sh_csr_item"],
+                    local_id=z["sh_local_id"],
+                    entry_pos=z["sh_entry_pos"],
+                    entry_item=z["sh_entry_item"],
+                    entry_w=np.array(z["sh_entry_w"]),
                     csr_indptr=z["sh_csr_indptr"],
                     grey_entries=z["sh_grey"],
                     white_entries=z["sh_white"],
@@ -241,17 +254,6 @@ def _rebuild_image(post, weight, outflag, a_base, a_rows, a_present,
 
 
 # ---------------------------------------------------------------- lowering
-def _neuron_adjacency(raw_pre, post, w, is_axon, n_neurons):
-    """Neuron->neuron adjacency dict for the BFS partitioner, in legacy
-    iteration order (ids 0..N-1, per-item synapses in column order)."""
-    adj: Dict[int, List] = {i: [] for i in range(n_neurons)}
-    sel = ~is_axon
-    for p, q, ww in zip(raw_pre[sel].tolist(), post[sel].tolist(),
-                        w[sel].tolist()):
-        adj[p].append((q, ww))
-    return adj
-
-
 def _axon_majority(raw_pre, post, is_axon, neuron_core, n_axons,
                    n_cores) -> np.ndarray:
     """Vectorized majority-target axon homing (ties to the lowest core
@@ -334,14 +336,14 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
         c.axonW, c.neuronW = axonW, neuronW
         return c
 
-    # shared engine/hiaer lowering: the packed HBM image from columns
+    # shared engine/hiaer/mesh lowering: the packed HBM image from columns
     ci = hbm.build_image_columnar(mapper_item, post, w, A, N, model_gid,
                                   outputs, dense_pack=dense_pack)
     c.image, c.flat, c.syn_pos = ci.image, ci.flat, ci.syn_pos
     if target == "engine":
         return c
 
-    # hiaer: placement + axon homing + per-core shards from the columns
+    # hiaer/mesh: placement + axon homing + per-core shards from columns
     is_axon, raw = decode_pre(pre)
     hier = hierarchy if hierarchy is not None else \
         Hierarchy(1, 1, 1, max(N, 1))
@@ -362,12 +364,14 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
         neuron_core = neuron_core.astype(np.int32)
     elif hier.n_cores == 1:
         # the BFS partitioner provably assigns everything to core 0
-        # when there is only one core — skip its O(N^2) frontier scan
+        # when there is only one core — skip it entirely
         neuron_core = np.zeros((N,), np.int32)
     else:
-        adjacency = _neuron_adjacency(raw, post, w, is_axon, N)
-        pl = partition(adjacency, hier)
-        neuron_core = np.asarray([pl[i] for i in range(N)], np.int32)
+        # vectorized locality-first BFS straight from the columns — no
+        # per-synapse adjacency dict on the construction path
+        sel = ~is_axon
+        neuron_core = partition_arrays(raw[sel], post[sel], w[sel], N,
+                                       hier)
         _check_placement(neuron_core, hier, N)
     axon_core = _axon_majority(raw, post, is_axon, neuron_core, A,
                                hier.n_cores)
@@ -382,21 +386,26 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
             axon_core[a] = cc
 
     # build-time sharding straight from the columns (plus in-range A.3
-    # fillers, which shard_image would also keep) — no dense-table scan
+    # fillers, which shard_image would also keep) — no dense-table scan;
+    # each core's shard carries its own weight storage (w16, the stored
+    # int16 record values), so the runtime never gathers through the
+    # dense image
     keep_fill = ci.filler_post < N
     pos_all = np.concatenate([ci.syn_pos, ci.filler_pos[keep_fill]])
     item_all = np.concatenate([syn_item, ci.filler_item[keep_fill]])
     post_all = np.concatenate([post, ci.filler_post[keep_fill]])
+    w_all = np.concatenate([w16.astype(np.int32),
+                            np.zeros((int(keep_fill.sum()),), np.int32)])
     if N == 0:
         pos_all = pos_all[:0]
         item_all = item_all[:0]
         post_all = post_all[:0]
-    sentinel = ci.image.n_rows * SLOTS
+        w_all = w_all[:0]
     c.hierarchy = hier
     c.neuron_core, c.axon_core = neuron_core, axon_core
-    c.shards = hbm.shard_entries(pos_all, item_all, post_all,
+    c.shards = hbm.shard_entries(pos_all, item_all, post_all, w_all,
                                  neuron_core, axon_core, hier.n_cores,
-                                 N, A_eng, sentinel)
+                                 N, A_eng)
     c.axon_ndest, c.neuron_ndest = exch_k.build_dest_tables_columns(
         syn_item, post, axon_core, neuron_core, hier, A_eng, N)
     return c

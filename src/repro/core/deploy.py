@@ -6,9 +6,11 @@
     w = dep.read_synapses(pre, post)     # arrays, one gather
     dep.write_synapses(pre, post, w + 1) # ONE delta upload per batch
 
-One `Deployment` class fronts all three backends (dense simulator, HBM
-event engine, hierarchical multi-core hiaer) with the id-space runtime
-surface; `CRI_network` (core.api) remains the key-space facade on top.
+One `Deployment` class fronts all four backends (dense simulator, HBM
+event engine, hierarchical multi-core hiaer, and the device-mesh
+`mesh` tier running each core's shard on its own jax device) with the
+id-space runtime surface; `CRI_network` (core.api) remains the
+key-space facade on top.
 
 Synapse access replaces the legacy per-call O(fan-out) list scans with
 a precomputed (pre, post) -> column index (one lexsort at first use,
@@ -19,11 +21,13 @@ synapses resolve to the FIRST record — the legacy scan order.
 
 `write_synapses` applies a whole batch as ONE backend update: edit the
 packed table in place at the precomputed flat positions, then a single
-`update_weights` swap (engine) / re-shard gather refresh (hiaer) / one
+`update_weights` swap (engine) / shard-local `update_entry_weights`
+touching only the changed cores' weight storage (hiaer/mesh) / one
 scatter-add pair (simulator) — instead of one full upload per synapse.
 That is what makes host-side plasticity loops (learning.STDP) practical
 on every backend; tests assert a 1000-synapse batch triggers exactly
-one `update_weights`.
+one upload, and that a batch confined to one core rebuilds exactly one
+shard.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ from repro.core import schedule as sched
 from repro.core.compile import CompiledNetwork
 from repro.core.engine import EventEngine
 from repro.core.hiaer import HiAERNetwork
+from repro.core.mesh_runtime import MeshNetwork
 from repro.core.simulator import DenseSimulator
 from repro.core.spec import decode_pre
 
@@ -54,7 +59,8 @@ class Deployment:
     """Uniform runtime handle over one compiled network."""
 
     def __init__(self, compiled: CompiledNetwork, *, seed: int = 0,
-                 vectorized: bool = True, use_pallas: bool = False):
+                 vectorized: bool = True, use_pallas: bool = False,
+                 n_devices: Optional[int] = None):
         self.compiled = compiled
         c = compiled
         out_ids = [int(i) for i in c.outputs]
@@ -78,6 +84,18 @@ class Deployment:
                                      shards=c.shards,
                                      axon_ndest=c.axon_ndest,
                                      neuron_ndest=c.neuron_ndest)
+            self.counter = self.impl.counter
+        elif c.target == "mesh":
+            self.impl = MeshNetwork(c.theta, c.nu, c.lam, c.is_lif,
+                                    c.n_neurons, out_ids,
+                                    hierarchy=c.hierarchy, seed=seed,
+                                    flat=c.flat,
+                                    neuron_core=c.neuron_core,
+                                    axon_core=c.axon_core,
+                                    shards=c.shards,
+                                    axon_ndest=c.axon_ndest,
+                                    neuron_ndest=c.neuron_ndest,
+                                    n_devices=n_devices)
             self.counter = self.impl.counter
         else:
             raise ValueError(f"unknown target {c.target!r}")
@@ -197,10 +215,19 @@ class Deployment:
                 item[ax], posts[ax]].add(delta[ax])
             self.impl.neuronW = self.impl.neuronW.at[
                 item[~ax] - c.item_base, posts[~ax]].add(delta[~ax])
-        else:
+        elif c.target == "engine":
             flat_w = c.image.syn_weight.reshape(-1)
             flat_w[c.syn_pos[cols_u]] = w_u.astype(np.int16)
             self.impl.update_weights(c.image.syn_weight)
+        else:
+            # hiaer/mesh: shard-local update — only the shards whose
+            # entries changed are rebuilt (per-core weight storage);
+            # the host image stays authoritative for save()
+            if c.image is not None:
+                flat_w = c.image.syn_weight.reshape(-1)
+                flat_w[c.syn_pos[cols_u]] = w_u.astype(np.int16)
+            self.impl.update_entry_weights(c.syn_pos[cols_u],
+                                           w_u.astype(np.int32))
         self.weight_uploads += 1
 
     def read_synapse(self, pre: int, post: int) -> int:
@@ -211,8 +238,10 @@ class Deployment:
 
 
 def deploy(compiled: CompiledNetwork, *, seed: int = 0,
-           vectorized: bool = True, use_pallas: bool = False
-           ) -> Deployment:
-    """Bring a compiled network up on its target backend."""
+           vectorized: bool = True, use_pallas: bool = False,
+           n_devices: Optional[int] = None) -> Deployment:
+    """Bring a compiled network up on its target backend. `n_devices`
+    (mesh target only) picks the device-mesh width; default is the
+    largest available device count that evenly divides the core count."""
     return Deployment(compiled, seed=seed, vectorized=vectorized,
-                      use_pallas=use_pallas)
+                      use_pallas=use_pallas, n_devices=n_devices)

@@ -229,7 +229,8 @@ class HBMImage:
 @dataclass
 class CoreShards:
     """`HBMImage` split into per-core shards for the hierarchical
-    multi-core engine (core.hiaer) — §3's HiAER tier over the §4 tables.
+    multi-core engines (core.hiaer, core.mesh_runtime) — §3's HiAER tier
+    over the §4 tables.
 
     The split is by DESTINATION: core c stores every synapse record whose
     postsynaptic neuron is placed on c, because the 16-lane membrane
@@ -239,28 +240,103 @@ class CoreShards:
     cross-core fan-in ('white matter') table — the rows a HiAER event
     from another core activates after the spike exchange delivers it.
 
-    Physically both tables are one per-core CSR sorted by local
-    postsynaptic id, so phase 2 on every core is the same scatter-free
-    cumsum reduction (`kernels.route.csr_segment_sum`) batched over the
-    core axis. Entries reference the monolithic image by flattened
-    position (`csr_src`), so a weight edit is a pure gather refresh and
-    the sharded sum reduces exactly the monolithic multiset of
-    (weight x event-count) terms — int32 wraparound addition is
-    order-free, which is what makes the sharded engine bit-exact vs the
-    single-image `EventEngine`."""
+    The layout is RAGGED: all cores' entries live in one flat array
+    sorted by (core, local post id, monolithic position), and
+    `csr_indptr` holds ABSOLUTE offsets into it — core c's span is
+    `[csr_indptr[c, 0], csr_indptr[c, -1])` and local neuron l's records
+    are `entries[csr_indptr[c, l]:csr_indptr[c, l + 1]]`. Shard memory
+    is therefore linear in synapses no matter how skewed the placement
+    (the padded-to-max (C, E) layout this replaces multiplied it by up
+    to n_cores). Phase 2 on every core is still one scatter-free cumsum
+    reduction (`kernels.route.ragged_segment_sum`).
+
+    Each core owns its own weight storage: `entry_w` carries the record
+    weights in entry order, so the execution tiers never gather through
+    a monolithic dense `w_ext` image — a weight edit updates only the
+    touched cores' spans (`entry_pos` keeps each record's monolithic
+    flat position as the host-side edit index). The sharded sum reduces
+    exactly the monolithic multiset of (weight x event-count) terms —
+    int32 wraparound addition is order-free, which is what makes the
+    sharded engines bit-exact vs the single-image `EventEngine`."""
     n_cores: int
     n_max: int                     # padded neurons per core
     core_nids: np.ndarray          # (C, n_max) int32 global id, -1 pad
     core_of_neuron: np.ndarray     # (N,) int32
     local_id: np.ndarray           # (N,) int32 slot within home core
-    csr_src: np.ndarray            # (C, E) int32 into flat R*SLOTS;
-    #                                sentinel R*SLOTS = appended zero weight
-    csr_item: np.ndarray           # (C, E) int32 source item (axon id,
-    #                                or A + neuron id); sentinel A + N
-    csr_indptr: np.ndarray         # (C, n_max + 1) int32
+    entry_pos: np.ndarray          # (nnz,) int64 flat monolithic
+    #                                position row*SLOTS+slot (host-side
+    #                                weight-edit index, never a gather
+    #                                source on device)
+    entry_item: np.ndarray         # (nnz,) int32 source item (axon id,
+    #                                or A + neuron id)
+    entry_w: np.ndarray            # (nnz,) int32 per-core weight storage
+    csr_indptr: np.ndarray         # (C, n_max + 1) int64 ABSOLUTE
+    #                                offsets into the entry arrays
     grey_entries: np.ndarray       # (C,) int64 core-local records
     white_entries: np.ndarray      # (C,) int64 cross-core records
     white_sources: np.ndarray      # (C,) int64 distinct remote source items
+
+    @property
+    def n_entries(self) -> int:
+        return int(self.entry_pos.shape[0])
+
+    @property
+    def core_offsets(self) -> np.ndarray:
+        """(C + 1,) int64: core c's entries span
+        [core_offsets[c], core_offsets[c + 1])."""
+        return np.append(self.csr_indptr[:, 0],
+                         self.csr_indptr[-1, -1]).astype(np.int64)
+
+    def entries_of_positions(self, positions: np.ndarray) -> np.ndarray:
+        """Flat monolithic positions -> indices into the entry arrays
+        (one lazy argsort of `entry_pos`, then searchsorted; raises
+        KeyError on a position no entry carries). Shared by the
+        hiaer/mesh weight-update paths."""
+        order = getattr(self, "_pos_order", None)
+        if order is None:
+            order = np.argsort(self.entry_pos, kind="stable")
+            self._pos_order = order
+            self._pos_sorted = self.entry_pos[order]
+        i = np.searchsorted(self._pos_sorted, positions)
+        if positions.size and not np.array_equal(
+                self._pos_sorted[np.minimum(
+                    i, self._pos_sorted.shape[0] - 1)], positions):
+            raise KeyError("position not present in shard tables")
+        return order[i]
+
+    def apply_entry_updates(self, positions, weights) -> np.ndarray:
+        """Write `weights` at the entries carrying the given monolithic
+        positions (in place) and return the SORTED UNIQUE core ids whose
+        shards changed — the engines re-upload exactly those."""
+        positions = np.asarray(positions, np.int64).reshape(-1)
+        w = np.asarray(weights, np.int32).reshape(-1)
+        if positions.size == 0:
+            return np.zeros((0,), np.int64)
+        idx = self.entries_of_positions(positions)
+        self.entry_w[idx] = w
+        return np.unique(np.searchsorted(self.core_offsets, idx,
+                                         side="right") - 1)
+
+    def padded(self, sentinel_pos: int = -1, sentinel_item: int = -1):
+        """Expand the ragged layout to the padded-to-max (C, E) view
+        (pos, item, w, per-core-relative indptr) — the legacy shard
+        image. Kept for the ragged-vs-padded identity property tests
+        and per-device padding in the mesh tier; the execution tiers
+        never materialize the full (C, E) expansion."""
+        off = self.core_offsets
+        per_core = np.diff(off)
+        E = max(int(per_core.max()) if per_core.size else 0, 1)
+        C = self.n_cores
+        pos = np.full((C, E), sentinel_pos, np.int64)
+        item = np.full((C, E), sentinel_item, np.int64)
+        w = np.zeros((C, E), np.int32)
+        rows = np.repeat(np.arange(C), per_core)
+        cols = _ranges(per_core)
+        pos[rows, cols] = self.entry_pos
+        item[rows, cols] = self.entry_item
+        w[rows, cols] = self.entry_w
+        indptr_rel = self.csr_indptr - off[:-1, None]
+        return pos, item, w, indptr_rel
 
     def stats(self) -> Dict[str, float]:
         total = int(self.grey_entries.sum() + self.white_entries.sum())
@@ -276,17 +352,18 @@ class CoreShards:
 
 
 def shard_entries(pos: np.ndarray, item: np.ndarray, post: np.ndarray,
-                  neuron_core: np.ndarray, axon_core: np.ndarray,
-                  n_cores: int, n_neurons: int, n_axon_slots: int,
-                  sentinel_src: int) -> CoreShards:
-    """Build `CoreShards` from flat synapse entries: `pos` (flat position
-    into the monolithic R*SLOTS table), `item` (source in engine item
-    space: axon id, or n_axon_slots + neuron id) and `post` (neuron id
-    in [0, n_neurons)). The per-core CSR is sorted by (destination core,
-    local post id) with flat position as the tie-break — identical to
-    scanning the dense table in position order (`shard_image`), so both
-    construction routes produce bit-identical shards. Entries need not
-    arrive pre-sorted."""
+                  weight: np.ndarray, neuron_core: np.ndarray,
+                  axon_core: np.ndarray, n_cores: int, n_neurons: int,
+                  n_axon_slots: int) -> CoreShards:
+    """Build ragged `CoreShards` from flat synapse entries: `pos` (flat
+    position into the monolithic R*SLOTS table), `item` (source in
+    engine item space: axon id, or n_axon_slots + neuron id), `post`
+    (neuron id in [0, n_neurons)) and `weight` (the record's weight —
+    each core's own copy of its synapse memory). Entries are sorted by
+    (destination core, local post id) with flat position as the
+    tie-break — identical to scanning the dense table in position order
+    (`shard_image`), so both construction routes produce bit-identical
+    shards. Entries need not arrive pre-sorted."""
     C, N, A = n_cores, n_neurons, n_axon_slots
     core_of = np.asarray(neuron_core, np.int32)
     counts = np.bincount(core_of, minlength=C) if N else np.zeros(C, int)
@@ -307,6 +384,12 @@ def shard_entries(pos: np.ndarray, item: np.ndarray, post: np.ndarray,
     pos = np.asarray(pos, np.int64)
     item = np.asarray(item, np.int64)
     post = np.asarray(post, np.int64)
+    weight = np.asarray(weight, np.int32)
+    if pos.size >= 2 ** 31:
+        # the engines index entries with device int32; past that a
+        # network must shard across hosts, never silently wrap
+        raise ValueError(f"{pos.size} shard entries exceed int32 "
+                         f"indexing; split the network across hosts")
     dest = core_of[post] if pos.size else np.zeros((0,), np.int32)
     lpost = local_id[post] if pos.size else np.zeros((0,), np.int32)
     is_axon_src = item < A
@@ -320,23 +403,17 @@ def shard_entries(pos: np.ndarray, item: np.ndarray, post: np.ndarray,
 
     per_core = np.bincount(dest, minlength=C) if pos.size else \
         np.zeros(C, int)
-    E = max(int(per_core.max()) if pos.size else 0, 1)
-    csr_src = np.full((C, E), sentinel_src, np.int32)
-    csr_item = np.full((C, E), A + N, np.int32)
-    csr_indptr = np.zeros((C, n_max + 1), np.int32)
     # one global stable sort by (dest core, local post) replaces the
     # per-core argsorts; the trailing position key keeps equal-(core,
     # post) records in monolithic table order (deterministic builds)
     ord_e = np.lexsort((pos, lpost, dest))
-    dest_s = dest[ord_e]
     ent_start = np.zeros(C + 1, np.int64)
     np.cumsum(per_core, out=ent_start[1:])
-    col = np.arange(pos.size, dtype=np.int64) - ent_start[dest_s]
-    csr_src[dest_s, col] = pos[ord_e]
-    csr_item[dest_s, col] = item[ord_e]
     seg = np.bincount(dest.astype(np.int64) * n_max + lpost,
                       minlength=C * n_max).reshape(C, n_max)
-    csr_indptr[:, 1:] = np.cumsum(seg, axis=1)
+    csr_indptr = np.zeros((C, n_max + 1), np.int64)
+    np.cumsum(seg, axis=1, out=csr_indptr[:, 1:])
+    csr_indptr += ent_start[:-1, None]
     white = np.bincount(dest[is_white], minlength=C).astype(np.int64)
     grey = per_core.astype(np.int64) - white
     if is_white.any():
@@ -348,9 +425,20 @@ def shard_entries(pos: np.ndarray, item: np.ndarray, post: np.ndarray,
         white_sources = np.zeros((C,), np.int64)
     return CoreShards(n_cores=C, n_max=n_max, core_nids=core_nids,
                       core_of_neuron=core_of, local_id=local_id,
-                      csr_src=csr_src, csr_item=csr_item,
+                      entry_pos=pos[ord_e],
+                      entry_item=item[ord_e].astype(np.int32),
+                      entry_w=weight[ord_e],
                       csr_indptr=csr_indptr, grey_entries=grey,
                       white_entries=white, white_sources=white_sources)
+
+
+def gather_to_cores(values, core_nids_idx, pad):
+    """Gather a global (N,) vector into the (C, n_max) per-core layout
+    (pad slots read the appended `pad` value) — shared by the hiaer and
+    mesh engines."""
+    v = np.asarray(values)
+    ext = np.append(v, np.asarray(pad, v.dtype))
+    return ext[np.asarray(core_nids_idx)]
 
 
 def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
@@ -367,7 +455,6 @@ def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
     without this dense scan."""
     N = n_neurons
     post_flat = image.syn_post.reshape(-1)
-    sentinel_src = post_flat.size
     A = int(flat.axon_rows.shape[0])
     pos = np.nonzero((post_flat >= 0) & (post_flat < max(N, 1)))[0]
     if N == 0:
@@ -379,8 +466,9 @@ def shard_image(image: HBMImage, flat: FlatImage, neuron_core: np.ndarray,
     pos, aid, nid = pos[owned], aid[owned], nid[owned]
     item = np.where(aid >= 0, aid, A + nid).astype(np.int64)
     post = post_flat[pos]
-    return shard_entries(pos, item, post, neuron_core, axon_core,
-                         n_cores, N, A, sentinel_src)
+    weight = np.asarray(image.syn_weight, np.int32).reshape(-1)[pos]
+    return shard_entries(pos, item, post, weight, neuron_core, axon_core,
+                         n_cores, N, A)
 
 
 class HBMMapper:

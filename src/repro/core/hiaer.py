@@ -33,8 +33,10 @@ tests/test_hiaer.py) rests on three invariants:
     HBM work merely executed on more cores.
 
 The step is single-device jax (scan over T, vmap over B, exactly like
-`EventEngine.run/run_batch`); the per-core leading axis and the
-exchange seam are what future PRs map onto a real `shard_map` mesh.
+`EventEngine.run/run_batch`); `core.mesh_runtime` maps the same
+per-core data model onto a real `shard_map` device mesh, with each
+device owning only its cores' shards and the exchange lowered to
+hierarchical `lax.all_gather` collectives.
 """
 from __future__ import annotations
 
@@ -58,11 +60,18 @@ _INT32_MAX = np.iinfo(np.int32).max
 
 class HiAERTables(NamedTuple):
     """Device-resident per-core state (pytree, passed as a traced
-    argument so weight edits swap arrays under the compiled step)."""
-    w_ext: jnp.ndarray             # (R * SLOTS + 1,) int32, [-1] == 0
-    csr_src: jnp.ndarray           # (C, E) int32 into w_ext
-    csr_item: jnp.ndarray          # (C, E) int32 into item counts
-    csr_indptr: jnp.ndarray        # (C, n_max + 1) int32
+    argument so weight edits swap arrays under the compiled step).
+
+    The synapse tables are the RAGGED per-core layout of
+    `hbm.CoreShards`: every core's records live in one flat entry array
+    (memory linear in synapses), each core carrying its own weight
+    storage (`entry_w`) — there is no monolithic dense `w_ext`
+    weight-gather image anywhere on this path."""
+    entry_w: jnp.ndarray           # (nnz,) int32 per-core weights,
+    #                                core-major entry order
+    entry_item: jnp.ndarray        # (nnz,) int32 into item counts
+    csr_indptr: jnp.ndarray        # (C, n_max + 1) int32 ABSOLUTE
+    #                                offsets into the entry arrays
     core_nids_idx: jnp.ndarray     # (C, n_max) int32 global id, pad -> N
     theta: jnp.ndarray             # (C, n_max) int32, pad = INT32_MAX
     nu: jnp.ndarray                # (C, n_max) int32, pad = -32
@@ -76,11 +85,7 @@ class HiAERTables(NamedTuple):
     neuron_present: jnp.ndarray    # (N,) bool
 
 
-def _to_cores(values, core_nids_idx, pad):
-    """Gather a global (N,) vector into the (C, n_max) per-core layout."""
-    v = np.asarray(values)
-    ext = np.append(v, np.asarray(pad, v.dtype))
-    return ext[np.asarray(core_nids_idx)]
+_to_cores = hbm.gather_to_cores
 
 
 def _axon_majority_placement(axon_syn, neuron_core, n_axon_slots,
@@ -178,13 +183,11 @@ class HiAERNetwork:
                                  n_neurons).astype(np.int32)
         pos_of_neuron = (sh.core_of_neuron.astype(np.int64) * sh.n_max
                          + sh.local_id).astype(np.int32)
-        self._w = np.asarray(image.syn_weight, np.int32)
+        self.shard_rebuilds = 0        # per-core weight-table uploads
         self._tables = HiAERTables(
-            w_ext=jnp.asarray(np.append(self._w.reshape(-1),
-                                        np.int32(0))),
-            csr_src=jnp.asarray(sh.csr_src),
-            csr_item=jnp.asarray(sh.csr_item),
-            csr_indptr=jnp.asarray(sh.csr_indptr),
+            entry_w=jnp.asarray(sh.entry_w, jnp.int32),
+            entry_item=jnp.asarray(sh.entry_item, jnp.int32),
+            csr_indptr=jnp.asarray(sh.csr_indptr, jnp.int32),
             core_nids_idx=jnp.asarray(core_nids_idx),
             theta=jnp.asarray(_to_cores(np.asarray(theta, np.int32),
                                         core_nids_idx, _INT32_MAX)),
@@ -248,16 +251,45 @@ class HiAERNetwork:
         self.Vc = jnp.zeros_like(self.Vc)
         self._spikes = np.zeros((self.n,), bool)
 
+    # -------------------------------------------------- weight updates
+    def _refresh_cores(self, cores) -> None:
+        """Re-upload only the touched cores' weight spans, as ONE
+        combined device update (per-core weight storage means a weight
+        edit never touches the other cores' memories)."""
+        cores = np.asarray(list(cores), np.int64)
+        sh = self.shards
+        if cores.size >= sh.n_cores:
+            ew = jnp.asarray(sh.entry_w, jnp.int32)      # full refresh
+        else:
+            off = sh.core_offsets
+            spans = [np.arange(off[c], off[c + 1]) for c in cores]
+            idx = np.concatenate(spans) if spans else \
+                np.zeros((0,), np.int64)
+            ew = self._tables.entry_w
+            if idx.size:
+                ew = ew.at[jnp.asarray(idx)].set(
+                    jnp.asarray(sh.entry_w[idx], jnp.int32))
+        self._tables = self._tables._replace(entry_w=ew)
+        self.shard_rebuilds += int(cores.size)
+
+    def update_entry_weights(self, positions, weights) -> None:
+        """Batched weight edit at flat monolithic positions: rebuilds
+        ONLY the shards whose entries changed (tables are traced
+        arguments, so there is no retrace/recompile either way)."""
+        cores = self.shards.apply_entry_updates(positions, weights)
+        if cores.size:
+            self._refresh_cores(cores)
+
     def update_weights(self, syn_weight) -> None:
-        """Refresh after an in-place `syn_weight` edit
-        (CRI_network.write_synapse): the shards reference the monolithic
-        image by flat position, so this is one gather-source swap — no
-        retrace/recompile (tables are traced arguments)."""
-        self._w = np.asarray(syn_weight, np.int32)
-        self.flat.syn_weight = np.ascontiguousarray(self._w)
-        self._tables = self._tables._replace(
-            w_ext=jnp.asarray(np.append(self._w.reshape(-1),
-                                        np.int32(0))))
+        """Full refresh after an in-place dense `syn_weight` edit (the
+        legacy whole-image surface; batched runtime edits go through
+        `update_entry_weights`, which touches only the changed shards).
+        The gather happens host-side — the device never sees the dense
+        image."""
+        w = np.asarray(syn_weight, np.int32)
+        self.flat.syn_weight = np.ascontiguousarray(w)
+        self.shards.entry_w[:] = w.reshape(-1)[self.shards.entry_pos]
+        self._refresh_cores(range(self.shards.n_cores))
 
     # -------------------------------------------------- vectorized core
     def _step_impl(self, Vc, key, axon_counts, tables: HiAERTables):
@@ -281,11 +313,11 @@ class HiAERNetwork:
             tables.axon_present, tables.neuron_rows,
             tables.neuron_present)
         # per-core phase 2: every core reduces its grey + white tables
-        # with one batched scatter-free CSR segment sum
-        item_counts = jnp.concatenate(
-            [axon_counts, neuron_counts, jnp.zeros((1,), jnp.int32)])
-        vals = tables.w_ext[tables.csr_src] * item_counts[tables.csr_item]
-        syn_c = route_k.csr_segment_sum(vals, tables.csr_indptr)
+        # with one scatter-free segment sum over the flat ragged entries
+        # (each core's own weight storage — no monolithic w_ext gather)
+        item_counts = jnp.concatenate([axon_counts, neuron_counts])
+        vals = tables.entry_w * item_counts[tables.entry_item]
+        syn_c = route_k.ragged_segment_sum(vals, tables.csr_indptr)
         Vc_next = nrn.integrate_phase(Vc_mid, syn_c)
         return (Vc_next, key, neuron_counts.astype(bool), pr, rr, traffic)
 

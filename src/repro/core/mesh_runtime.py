@@ -1,0 +1,402 @@
+"""Device-mesh HiAER execution tier — the §3 hierarchy on a REAL jax
+device mesh (`CRI_network(..., backend="mesh")`).
+
+The hiaer tier (core.hiaer) already structures every timestep as
+per-core blocks plus a level-by-level spike exchange, but folds all of
+it onto one device. Here the same per-core data model runs under
+`compat.shard_map` over a 1-D mesh of D devices, each owning
+C // D consecutive cores:
+
+  * per-core STATE is sharded: membranes, model tables, and — the part
+    that actually scales — each core's ragged synapse shard with its own
+    weight storage (`hbm.CoreShards.entry_w`). A device holds only its
+    cores' entries padded to the largest per-device span; the monolithic
+    dense `w_ext` weight image of the original hiaer tier exists
+    NOWHERE, so total weight memory per device shrinks with D — the
+    paper's per-core HBM model (each FPGA core owns its synapse memory,
+    only spikes cross the boundary; cf. SpiNNaker2's chip-local SRAM);
+  * the spike exchange is the hierarchical all-gather of Fig. 1b lowered
+    to real collectives: `kernels.exchange.collective_stages` plans one
+    grouped `lax.all_gather` per hierarchy level (NoC -> FireFly ->
+    Ethernet) and `hierarchical_gather_collective` runs them inside the
+    shard_mapped step, reproducing `hierarchical_gather`'s core-ordered
+    global vector on every device;
+  * phase 2 is the same scatter-free ragged segment sum as hiaer, run on
+    the device-local entries with device-rebased CSR offsets.
+
+Bit-exactness vs `backend="engine"`/`backend="hiaer"` (spikes,
+membranes, AccessCounter pointer/row stats AND per-level traffic) holds
+by the same three invariants as the hiaer tier — the noise draw stays in
+global neuron-id order (drawn replicated outside the shard_map), the
+sharded entries are the same monolithic multiset of (weight x
+event-count) terms under order-free int32 addition, and access/traffic
+tallies are computed from the replicated global event counts against the
+monolithic pointer-span/ndest tables.
+
+Multi-device execution on CPU comes from forcing XLA host devices
+(`XLA_FLAGS=--xla_force_host_platform_device_count=8`, the
+launch/dryrun.py pattern — the flag must precede the first jax import);
+tests/test_mesh_runtime.py drives the 8-device parity suite through a
+subprocess. Multi-host `jax.distributed` initialization is the one seam
+left open: the step itself is already expressed entirely in collectives.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
+from repro.core import hbm
+from repro.core import neuron as nrn
+from repro.core import schedule as sched
+from repro.core.costmodel import AccessCounter
+from repro.core.hbm import CoreShards
+from repro.core.partition import Hierarchy
+from repro.kernels import exchange as exch_k
+from repro.kernels import route as route_k
+
+_INT32_MAX = np.iinfo(np.int32).max
+AXIS = "cores"                     # the 1-D mesh axis name
+_to_cores = hbm.gather_to_cores
+
+
+class MeshTables(NamedTuple):
+    """Device-resident state. The first group is sharded over the mesh
+    axis (leading dim = C or D); the second is replicated — replicated
+    arrays are O(A + N) vectors (pointer spans, destination tables, the
+    global noise draw), never synapse-sized."""
+    # sharded, P(AXIS): per-device rows / per-core rows
+    entry_w: jnp.ndarray           # (D, Epad) int32 per-device weight
+    #                                storage, pad 0
+    entry_item: jnp.ndarray        # (D, Epad) int32, pad = A + N
+    csr_indptr: jnp.ndarray        # (C, n_max + 1) int32 DEVICE-rebased
+    #                                offsets into the device's entries
+    core_nids_idx: jnp.ndarray     # (C, n_max) int32 global id, pad -> N
+    theta: jnp.ndarray             # (C, n_max) int32, pad = INT32_MAX
+    nu: jnp.ndarray                # (C, n_max) int32, pad = -32
+    lam: jnp.ndarray               # (C, n_max) int32
+    is_lif: jnp.ndarray            # (C, n_max) bool, pad = False
+    # replicated, P()
+    pos_of_neuron: jnp.ndarray     # (N,) flat core * n_max + local slot
+    axon_ndest: jnp.ndarray        # (A, N_LEVELS) int32
+    neuron_ndest: jnp.ndarray      # (N, N_LEVELS) int32
+    axon_rows: jnp.ndarray         # (A,) int32 monolithic pointer spans
+    axon_present: jnp.ndarray      # (A,) bool
+    neuron_rows: jnp.ndarray       # (N,) int32
+    neuron_present: jnp.ndarray    # (N,) bool
+
+
+def default_device_count(n_cores: int,
+                         available: Optional[int] = None) -> int:
+    """Largest device count <= available that evenly divides the core
+    count (each device owns the same number of whole cores)."""
+    if available is None:
+        available = len(jax.devices())
+    return max(d for d in range(1, min(available, n_cores) + 1)
+               if n_cores % d == 0)
+
+
+class MeshNetwork:
+    """Multi-device HiAER engine; mirrors `HiAERNetwork`'s interface
+    (step/run/run_batch/reset/V/counter/update_entry_weights) so
+    `CRI_network(..., backend="mesh")` drops in unchanged. Built only
+    from the compiler's prebuilt pieces (the staged path — there is no
+    per-dict legacy door at mesh scale)."""
+
+    def __init__(self, theta, nu, lam, is_lif, n_neurons: int,
+                 outputs: Sequence[int], *, hierarchy: Hierarchy,
+                 flat, neuron_core, axon_core, shards: CoreShards,
+                 axon_ndest, neuron_ndest, seed: int = 0,
+                 n_devices: Optional[int] = None):
+        self.n = n_neurons
+        self.outputs = list(outputs)
+        self.flat = flat
+        self.n_axon_slots = int(flat.axon_rows.shape[0])
+        self.hier = hierarchy if hierarchy is not None else \
+            Hierarchy(1, 1, 1, max(n_neurons, 1))
+        self.spec = exch_k.HierSpec.from_hierarchy(self.hier)
+        self.neuron_core = np.asarray(neuron_core, np.int32)
+        self.axon_core = np.asarray(axon_core, np.int32)
+        self.shards = shards
+
+        C = self.hier.n_cores
+        if n_devices is None:
+            n_devices = default_device_count(C)
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        if C % n_devices:
+            raise ValueError(f"n_devices={n_devices} must evenly "
+                             f"divide {C} cores")
+        if n_devices > len(jax.devices()):
+            raise ValueError(f"n_devices={n_devices} > "
+                             f"{len(jax.devices())} available devices")
+        self.n_devices = n_devices
+        self.cores_per_device = C // n_devices
+        self.mesh = make_mesh((n_devices,), (AXIS,),
+                              devices=np.asarray(
+                                  jax.devices()[:n_devices]))
+        self._stages = exch_k.collective_stages(self.spec, n_devices)
+        self._shard = NamedSharding(self.mesh, P(AXIS))
+        self._repl = NamedSharding(self.mesh, P())
+
+        sh = shards
+        core_nids_idx = np.where(sh.core_nids >= 0, sh.core_nids,
+                                 n_neurons).astype(np.int32)
+        pos_of_neuron = (sh.core_of_neuron.astype(np.int64) * sh.n_max
+                         + sh.local_id).astype(np.int32)
+
+        # ---- per-device entry shards: each device's cores' ragged
+        # entries concatenated, padded to the largest per-device span
+        # (pad item = A + N gathers an appended zero event count)
+        off = sh.core_offsets
+        self._dev_off = off[::self.cores_per_device].copy()  # (D + 1,)
+        dev_counts = np.diff(self._dev_off)
+        Epad = max(int(dev_counts.max()) if dev_counts.size else 0, 1)
+        self._Epad = Epad
+        self._n_items = self.n_axon_slots + n_neurons
+        ew, ei = self._device_entry_rows(range(n_devices))
+        # CSR offsets rebased to each core's DEVICE entry array
+        dev_of_core = np.repeat(np.arange(n_devices),
+                                self.cores_per_device)
+        indptr_rebased = (sh.csr_indptr
+                          - self._dev_off[dev_of_core][:, None]) \
+            .astype(np.int32)
+
+        def shd(x):
+            return jax.device_put(np.asarray(x), self._shard)
+
+        def rep(x):
+            return jax.device_put(np.asarray(x), self._repl)
+
+        self._tables = MeshTables(
+            entry_w=shd(ew), entry_item=shd(ei),
+            csr_indptr=shd(indptr_rebased),
+            core_nids_idx=shd(core_nids_idx),
+            theta=shd(_to_cores(np.asarray(theta, np.int32),
+                                core_nids_idx, _INT32_MAX)),
+            nu=shd(_to_cores(np.asarray(nu, np.int32), core_nids_idx,
+                             -32)),
+            lam=shd(_to_cores(np.asarray(lam, np.int32), core_nids_idx,
+                              63)),
+            is_lif=shd(_to_cores(np.asarray(is_lif, bool),
+                                 core_nids_idx, False)),
+            pos_of_neuron=rep(pos_of_neuron),
+            axon_ndest=rep(axon_ndest), neuron_ndest=rep(neuron_ndest),
+            axon_rows=rep(flat.axon_rows),
+            axon_present=rep(flat.axon_present),
+            neuron_rows=rep(flat.neuron_rows),
+            neuron_present=rep(flat.neuron_present),
+        )
+
+        self.Vc = jax.device_put(np.zeros((C, sh.n_max), np.int32),
+                                 self._shard)
+        self.key = jax.random.PRNGKey(seed)
+        self.counter = AccessCounter()
+        self.shard_rebuilds = 0        # per-DEVICE weight-shard uploads
+        self._spikes = np.zeros((n_neurons,), bool)
+
+        in_specs = (P(AXIS), P(), P(),
+                    MeshTables(*([P(AXIS)] * 8 + [P()] * 7)))
+        self._smapped = shard_map(
+            self._device_step, mesh=self.mesh, in_specs=in_specs,
+            out_specs=(P(AXIS), P()), check_vma=False)
+        self._jit_step = jax.jit(self._step_impl)
+        self._jit_run = jax.jit(self._run_impl)
+        self._jit_run_batch = jax.jit(self._run_batch_impl)
+
+    # ------------------------------------------------------------ helpers
+    def _device_entry_rows(self, devices):
+        """Host-side (len(devices), Epad) padded weight/item rows from
+        the ragged shard arrays."""
+        sh = self.shards
+        ew = np.zeros((len(list(devices)), self._Epad), np.int32)
+        ei = np.full_like(ew, self._n_items)
+        for r, d in enumerate(devices):
+            s, e = int(self._dev_off[d]), int(self._dev_off[d + 1])
+            ew[r, :e - s] = sh.entry_w[s:e]
+            ei[r, :e - s] = sh.entry_item[s:e]
+        return ew, ei
+
+    def device_shard_bytes(self) -> List[int]:
+        """Per-device synapse-shard memory: padded weight + item entries
+        plus the device's CSR offsets — the arrays `MeshTables` actually
+        puts on each device (state vectors excluded). The monolithic
+        comparison point is `w_ext` = (R * SLOTS + 1) * 4 bytes, the
+        dense weight image the hiaer tier used to replicate."""
+        ip = self.cores_per_device * (self.shards.n_max + 1) * 4
+        return [self._Epad * (4 + 4) + ip] * self.n_devices
+
+    # ------------------------------------------------------------- state
+    @property
+    def V(self):
+        """Membrane potentials in global neuron-id order."""
+        flat = np.asarray(self.Vc).reshape(-1)
+        return flat[np.asarray(self._tables.pos_of_neuron)]
+
+    def reset(self):
+        self.Vc = jax.device_put(
+            np.zeros(self.Vc.shape, np.int32), self._shard)
+        self._spikes = np.zeros((self.n,), bool)
+
+    # -------------------------------------------------- weight updates
+    def update_entry_weights(self, positions, weights) -> None:
+        """Batched weight edit at flat monolithic positions: re-uploads
+        ONLY the device shards whose entries changed — the untouched
+        devices' buffers are reused verbatim
+        (`jax.make_array_from_single_device_arrays`)."""
+        cores = self.shards.apply_entry_updates(positions, weights)
+        if cores.size:
+            self._refresh_devices(
+                np.unique(cores // self.cores_per_device).tolist())
+
+    def update_weights(self, syn_weight) -> None:
+        """Full refresh from a dense `syn_weight` edit (legacy whole-
+        image surface); batched runtime edits go through
+        `update_entry_weights`."""
+        w = np.asarray(syn_weight, np.int32)
+        self.flat.syn_weight = np.ascontiguousarray(w)
+        self.shards.entry_w[:] = w.reshape(-1)[self.shards.entry_pos]
+        self._refresh_devices(range(self.n_devices))
+
+    def _refresh_devices(self, devices) -> None:
+        """Swap in fresh weight rows for the given device shards; every
+        other device's buffer is reused verbatim."""
+        devices = list(devices)
+        ew_new, _ = self._device_entry_rows(devices)
+        old = self._tables.entry_w
+        # addressable shard of device d covers global row d
+        parts = {int(s.index[0].start or 0): s.data
+                 for s in old.addressable_shards}
+        for r, d in enumerate(devices):
+            parts[d] = jax.device_put(ew_new[r][None],
+                                      self.mesh.devices.flat[d])
+        buf = [parts[d] for d in sorted(parts)]
+        self._tables = self._tables._replace(
+            entry_w=jax.make_array_from_single_device_arrays(
+                old.shape, self._shard, buf))
+        self.shard_rebuilds += len(devices)
+
+    # -------------------------------------------------- vectorized core
+    def _device_step(self, Vc, u_ext, axon_counts, t: MeshTables):
+        """The shard_mapped body: one device's cores for one timestep.
+        Vc (cpd, n_max); sharded table rows are this device's blocks;
+        u_ext/axon_counts and the replicated tables arrive whole."""
+        uc = u_ext[t.core_nids_idx]
+        Vc_mid, spikes_c = nrn.fire_phase_from_u(
+            Vc, t.theta, t.nu, t.lam, t.is_lif, uc)
+        # hierarchical exchange: one grouped all_gather per level
+        flat = exch_k.hierarchical_gather_collective(
+            spikes_c.astype(jnp.int32).reshape(-1), self._stages, AXIS)
+        neuron_counts = flat[t.pos_of_neuron]      # (N,) replicated
+        # phase 2 on the device-local ragged entries (pad item -> 0)
+        item_counts = jnp.concatenate(
+            [axon_counts, neuron_counts, jnp.zeros((1,), jnp.int32)])
+        vals = t.entry_w[0] * item_counts[t.entry_item[0]]
+        syn_c = route_k.ragged_segment_sum(vals, t.csr_indptr)
+        Vc_next = nrn.integrate_phase(Vc_mid, syn_c)
+        return Vc_next, neuron_counts
+
+    def _step_impl(self, Vc, key, axon_counts, tables: MeshTables):
+        """One timestep: sharded fire/route/integrate + replicated
+        access & traffic tallies. Returns (Vc', key', spikes (N,),
+        ptr_reads, row_reads, traffic (4,))."""
+        key, sub = jax.random.split(key)
+        # global-order noise draw (PRNG parity with engine/hiaer),
+        # replicated then gathered into each device's core layout
+        u = nrn.noise_draw(sub, self.n)
+        u_ext = jnp.concatenate([u, jnp.zeros((1,), jnp.int32)])
+        Vc_next, neuron_counts = self._smapped(Vc, u_ext, axon_counts,
+                                               tables)
+        _, _, pr, rr = route_k.access_counts(
+            axon_counts, neuron_counts, tables.axon_rows,
+            tables.axon_present, tables.neuron_rows,
+            tables.neuron_present)
+        traffic = (axon_counts @ tables.axon_ndest
+                   + neuron_counts @ tables.neuron_ndest)
+        return (Vc_next, key, neuron_counts.astype(bool), pr, rr,
+                traffic)
+
+    def _run_impl(self, Vc, key, counts, tables):
+        """T timesteps under one lax.scan; counts: (T, A) int32."""
+        def body(carry, c):
+            Vc, key = carry
+            Vc, key, spikes, pr, rr, tr = self._step_impl(Vc, key, c,
+                                                          tables)
+            return (Vc, key), (spikes, pr, rr, tr)
+
+        (Vc, key), outs = jax.lax.scan(body, (Vc, key), counts)
+        return (Vc, key) + outs
+
+    def _run_batch_impl(self, key, counts, tables):
+        """B independent samples; counts: (B, T, A) int32. Sample b runs
+        from V = 0 under stream fold_in(key, b) — identical to
+        EventEngine.run_batch. Samples run under one sequential scan
+        (not vmap: the shard_mapped step stays rank-stable), which is
+        output-identical since samples are independent."""
+        B = counts.shape[0]
+        keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(
+            jnp.arange(B))
+
+        def body(carry, xs):
+            k, c = xs
+            V0 = jnp.zeros(self.Vc.shape, jnp.int32)
+            _, _, spikes, prs, rrs, trs = self._run_impl(V0, k, c,
+                                                         tables)
+            return carry, (spikes, prs, rrs, trs)
+
+        _, outs = jax.lax.scan(body, 0, (keys, counts))
+        return outs
+
+    # ----------------------------------------------------------- stepping
+    def _tally(self, prs, rrs, trs):
+        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
+        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
+        self.counter.add_level_events(
+            np.asarray(trs, np.int64).reshape(-1, exch_k.N_LEVELS)
+            .sum(axis=0))
+
+    def step(self, axon_inputs: Sequence[int]) -> np.ndarray:
+        """One timestep; returns bool (n,) spikes fired this step."""
+        self.counter.timesteps += 1
+        counts = jnp.asarray(sched.encode_ids(axon_inputs,
+                                              self.n_axon_slots))
+        self.Vc, self.key, spikes, pr, rr, tr = self._jit_step(
+            self.Vc, self.key, counts, self._tables)
+        self._tally(pr, rr, tr)
+        self._spikes = np.asarray(spikes)
+        return self._spikes
+
+    def run(self, schedule) -> np.ndarray:
+        """T timesteps in one dispatch; returns (T, n) bool spikes."""
+        counts = sched.encode_schedule(schedule, self.n_axon_slots)
+        T = counts.shape[0]
+        self.counter.timesteps += T
+        self.Vc, self.key, spikes, prs, rrs, trs = self._jit_run(
+            self.Vc, self.key, jnp.asarray(counts), self._tables)
+        self._tally(prs, rrs, trs)
+        spikes = np.asarray(spikes)
+        if T:
+            self._spikes = spikes[-1]
+        return spikes
+
+    def run_batch(self, schedules) -> np.ndarray:
+        """B samples x T timesteps per dispatch; same contract as
+        EventEngine.run_batch. Returns (B, T, n) bool spikes."""
+        if len(schedules) == 0:
+            return np.zeros((0, 0, self.n), bool)
+        counts = sched.encode_batch(schedules, self.n_axon_slots)
+        B, T = counts.shape[0], counts.shape[1]
+        self.counter.timesteps += B * T
+        spikes, prs, rrs, trs = self._jit_run_batch(
+            self.key, jnp.asarray(counts), self._tables)
+        self._tally(prs, rrs, trs)
+        self.key, _ = jax.random.split(self.key)
+        return np.asarray(spikes)
+
+    def read_membrane(self, ids: Sequence[int]) -> List[int]:
+        V = np.asarray(self.V)
+        return [int(V[i]) for i in ids]

@@ -16,6 +16,14 @@ Algorithm: locality-first BFS growth (a light multilevel scheme):
   3. cores fill FPGAs in order, FPGAs fill servers — so BFS locality at
      core level automatically concentrates traffic at the cheapest levels.
 
+`partition_arrays` is the vectorized production implementation (NumPy
+frontier expansion over the CSR adjacency, O(E + N log N) plus frontier
+scans instead of the reference loop's O(N · frontier) Python pass per
+pick); `partition` is the dict front door over it, and `partition_loop`
+keeps the original per-node Python walk as the parity oracle — both
+produce identical assignments (ties broken by lowest node index, the
+deterministic order the reference's max-over-set realizes).
+
 `traffic_cost` evaluates an assignment under per-level costs; tests verify
 BFS beats random placement on clustered topologies and that capacity
 constraints hold. `allocate` maps whole jobs (networks) onto the cluster
@@ -23,6 +31,7 @@ bin-packing style (the NSG scheduling layer).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass
 from typing import Dict, Hashable, List, Sequence, Tuple
 
@@ -79,8 +88,11 @@ def _graph(adjacency: Dict[Hashable, List[Tuple[Hashable, int]]]):
     return nodes, idx, nbrs
 
 
-def partition(adjacency, hier: Hierarchy) -> Dict[Hashable, int]:
-    """neuron key -> core id, locality-first BFS growth."""
+def partition_loop(adjacency, hier: Hierarchy) -> Dict[Hashable, int]:
+    """Reference implementation: the original per-node Python walk,
+    O(N · frontier) per pick. Kept as the parity oracle for
+    `partition_arrays` (ties in (gain, degree) resolve to the lowest
+    node index — what max-over-an-int-set realizes)."""
     nodes, idx, nbrs = _graph(adjacency)
     n = len(nodes)
     if n > hier.capacity:
@@ -108,6 +120,118 @@ def partition(adjacency, hier: Hierarchy) -> Dict[Hashable, int]:
             if j in unassigned:
                 gain[j] += w
     return {nodes[i]: int(assign[i]) for i in range(n)}
+
+
+def partition_arrays(pre: np.ndarray, post: np.ndarray, w: np.ndarray,
+                     n: int, hier: Hierarchy) -> np.ndarray:
+    """Vectorized locality-first BFS over synapse COLUMNS: `pre`/`post`
+    are neuron indices in [0, n) and `w` the synapse weights (axon
+    sources must be filtered out by the caller). Returns the (n,) int32
+    core assignment — identical to `partition_loop` on the equivalent
+    adjacency.
+
+    The frontier expansion is NumPy over a symmetric CSR of the
+    deduplicated undirected |w|-graph: assigning a node updates its
+    neighbours' gains with one sliced add. Candidate selection is a
+    lazy max-heap over (gain, degree, -index) — gains only grow within
+    a core epoch, so stale heap entries are discarded on pop — compared
+    against the single best zero-gain seed (a degree-presorted cursor),
+    instead of the reference's scan of every unassigned node per pick."""
+    if n > hier.capacity:
+        raise ValueError(f"network ({n}) exceeds capacity "
+                         f"({hier.capacity})")
+    if n == 0:
+        return np.zeros((0,), np.int32)
+    pre = np.asarray(pre, np.int64)
+    post = np.asarray(post, np.int64)
+    w = np.abs(np.asarray(w, np.float64))
+    # undirected dedup: accumulate |w| per unordered pair, no self-loops
+    a = np.minimum(pre, post)
+    b = np.maximum(pre, post)
+    keep = a != b
+    key = a[keep] * n + b[keep]
+    uk, inv = (np.unique(key, return_inverse=True) if key.size
+               else (np.zeros((0,), np.int64), np.zeros((0,), np.int64)))
+    ew = np.bincount(inv, weights=w[keep],
+                     minlength=uk.shape[0]) if key.size else uk * 0.0
+    ua, ub = uk // n, uk % n
+    # symmetric CSR adjacency (both directions of every undirected edge)
+    src = np.concatenate([ua, ub])
+    dst = np.concatenate([ub, ua])
+    eww = np.concatenate([ew, ew])
+    order = np.argsort(src, kind="stable")
+    nbr = dst[order]
+    nbw = eww[order]
+    indptr = np.zeros((n + 1,), np.int64)
+    np.cumsum(np.bincount(src, minlength=n), out=indptr[1:])
+    degree = np.bincount(src, weights=eww, minlength=n)
+
+    assign = np.full(n, -1, np.int64)
+    gain = np.zeros(n)
+    heap: List[Tuple[float, float, int]] = []   # (-gain, -degree, i)
+    # zero-gain seeds in (max degree, lowest index) order with a cursor
+    seed_order = np.lexsort((np.arange(n), -degree))
+    cursor = 0
+    core = 0
+    filled = 0
+    for _ in range(n):
+        if filled >= hier.neurons_per_core:
+            core += 1
+            filled = 0
+            gain[:] = 0.0
+            heap = []
+        while cursor < n and assign[seed_order[cursor]] >= 0:
+            cursor += 1
+        cand = int(seed_order[cursor])  # best (0, degree, -i) candidate
+        # drop stale heap tops (assigned, or superseded by a later
+        # push with a larger gain — gains only grow within an epoch)
+        while heap and (assign[heap[0][2]] >= 0
+                        or -heap[0][0] != gain[heap[0][2]]):
+            heapq.heappop(heap)
+        if heap:
+            g, d, i = heap[0]
+            # frontier gains are > 0, so the seed only wins on a
+            # genuine (gain, degree, -index) comparison
+            if (-g, -d, -i) > (gain[cand], degree[cand], -cand):
+                cand = i
+                heapq.heappop(heap)
+        assign[cand] = core
+        filled += 1
+        s, e = indptr[cand], indptr[cand + 1]
+        js, ws = nbr[s:e], nbw[s:e]
+        sel = assign[js] < 0
+        js, ws = js[sel], ws[sel]
+        gain[js] += ws                  # CSR rows are deduplicated
+        live = js[gain[js] > 0.0]
+        gl = gain[live]
+        dl = degree[live]
+        for k in range(live.shape[0]):
+            heapq.heappush(heap, (-gl[k], -dl[k], int(live[k])))
+    return assign.astype(np.int32)
+
+
+def partition(adjacency, hier: Hierarchy) -> Dict[Hashable, int]:
+    """neuron key -> core id, locality-first BFS growth (vectorized
+    implementation; see `partition_arrays`)."""
+    nodes = list(adjacency)
+    idx = {k: i for i, k in enumerate(nodes)}
+    pre: List[int] = []
+    post: List[int] = []
+    w: List[int] = []
+    for p, posts in adjacency.items():
+        i = idx[p]
+        for q, ww in posts:
+            j = idx.get(q)
+            if j is None:
+                continue
+            pre.append(i)
+            post.append(j)
+            w.append(ww)
+    assign = partition_arrays(np.asarray(pre, np.int64),
+                              np.asarray(post, np.int64),
+                              np.asarray(w, np.float64), len(nodes),
+                              hier)
+    return {nodes[i]: int(assign[i]) for i in range(len(nodes))}
 
 
 def level_event_counts(adjacency, src_assignment: Dict[Hashable, int],

@@ -9,7 +9,10 @@ expresses that as stacked per-level concatenations over the
 (servers, fpgas, cores, neurons) axes; on one device each fold lowers to
 a reshape inside the jit-compiled step, and the loop is the exact seam
 where `shard_map` + `lax.all_gather` slot in when the core axis becomes
-a real device mesh (cf. core.distributed_engine's dense dry-run).
+a real device mesh — `collective_stages` / `hierarchical_gather_collective`
+realize that lowering for the mesh tier (core.mesh_runtime), one grouped
+all-gather per hierarchy level (cf. core.distributed_engine's dense
+dry-run).
 
 The exchange also *measures* the traffic the partitioner's
 `traffic_cost` only estimates: `build_dest_tables` precomputes, for
@@ -25,6 +28,7 @@ from __future__ import annotations
 
 from typing import Dict, List, NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,6 +63,60 @@ def hierarchical_gather(x_core, spec: HierSpec):
     x = x.reshape(spec.servers, spec.fpgas, -1)      # NoC: core -> FPGA
     x = x.reshape(spec.servers, -1)                  # FireFly: FPGA -> server
     return x.reshape(-1)                             # Ethernet: server -> all
+
+
+def collective_stages(spec: HierSpec, n_dev: int) -> List[List[List[int]]]:
+    """The device-mesh lowering plan for `hierarchical_gather`: one
+    `axis_index_groups` list per hierarchy level, for a 1-D device mesh
+    where each of `n_dev` devices owns C // n_dev consecutive cores.
+
+    Stage l gathers the aggregates of the previous level's blocks within
+    every level-l subtree (cores within an FPGA over the NoC, FPGA
+    aggregates within a server over FireFly, server aggregates over
+    Ethernet), so after all stages every device holds the global
+    core-ordered vector — exactly `hierarchical_gather`'s folds, with
+    each reshape replaced by a grouped `lax.all_gather`. Each group
+    lists one representative per already-aggregated block (same offset r
+    within the block, so the groups partition the devices); gathering in
+    block order concatenates the aggregates in core order. Levels whose
+    subtree is smaller than one device's core span fold into the next
+    stage (their exchange is device-local); n_dev == 1 yields no stages
+    at all."""
+    C = spec.n_cores
+    if n_dev < 1 or C % n_dev:
+        raise ValueError(f"{n_dev} devices must evenly divide "
+                         f"{C} cores")
+    cpd = C // n_dev
+    stages: List[List[List[int]]] = []
+    b = 1                          # devices already aggregated per block
+    for size in (spec.cores, spec.cores * spec.fpgas, C):
+        if size % cpd:
+            continue               # subtree not device-aligned: fold up
+        L = size // cpd            # devices per level-l subtree
+        if L <= b:
+            continue               # subtree already within one block
+        m = L // b                 # blocks to concatenate per subtree
+        groups = []
+        for blk in range(0, n_dev, L):
+            for r in range(b):
+                groups.append([blk + r + j * b for j in range(m)])
+        stages.append(groups)
+        b = L
+    return stages
+
+
+def hierarchical_gather_collective(x_local, stages, axis_name: str):
+    """`hierarchical_gather` over a real device mesh: `x_local` is this
+    device's flattened per-core block ((C // n_dev) * n_max,); each
+    stage is one grouped tiled `lax.all_gather` along `axis_name` (the
+    NoC / FireFly / Ethernet hop of Fig. 1b). Returns the (C * n_max,)
+    core-ordered global vector, replicated on every device. Must run
+    inside `shard_map` over the 1-D core/device mesh axis."""
+    for groups in stages:
+        x_local = jax.lax.all_gather(x_local, axis_name,
+                                     axis_index_groups=groups,
+                                     tiled=True)
+    return x_local
 
 
 def build_dest_tables(axon_syn: Dict[int, List[Tuple[int, int]]],

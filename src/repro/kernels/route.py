@@ -204,6 +204,20 @@ def csr_segment_sum(vals, indptr):
             - jnp.take_along_axis(cs, indptr[..., :-1], axis=-1))
 
 
+def ragged_segment_sum(vals, indptr):
+    """Segment sums of the FLAT `vals` (nnz,) over segments delimited by
+    ABSOLUTE offsets `indptr` (..., n_segments + 1): one inclusive
+    cumsum + fancy boundary gathers. Unlike `csr_segment_sum` (which
+    broadcasts a batched vals axis), the leading axes of `indptr` all
+    index into the single flat value array — the ragged per-core layout
+    of `hbm.CoreShards`, where core c's segment offsets live in row c of
+    `indptr` and shard memory stays linear in synapses. Exact under
+    int32 wraparound (cs[j] - cs[i] recovers the segment sum mod 2^32)."""
+    zero = jnp.zeros((1,), vals.dtype)
+    cs = jnp.concatenate([zero, jnp.cumsum(vals)])
+    return cs[indptr[..., 1:]] - cs[indptr[..., :-1]]
+
+
 def accumulate_csr(tables: RouteTables, row_gate, n_neurons: int):
     """Phase 2 via the post-sorted CSR: gather each record's weight and
     owning-row gate in post order, then `csr_segment_sum`. Linear in

@@ -1,4 +1,7 @@
-"""HBM layout invariants — §4 / Fig. 2 / Fig. 7 / A.3."""
+"""HBM layout invariants — §4 / Fig. 2 / Fig. 7 / A.3 — plus the
+ragged-vs-padded CoreShards identity property: the ragged offset-indexed
+shard layout carries exactly the information of the padded-to-max
+(C, E) expansion it replaced, at memory linear in synapses."""
 import numpy as np
 from _hyp import given, settings, st
 
@@ -70,6 +73,106 @@ def test_pointer_relative_rows_small():
     assert (region >= 0).sum() == 33
     # 33 synapses over 40 posts -> ceil per-slot occupancy rows
     assert ptr.n_rows <= 3
+
+
+def _padded_reference(pos, item, post, weight, neuron_core, axon_core,
+                      n_cores, n_neurons, n_axon_slots):
+    """The retired padded-to-max shard construction, kept as the oracle:
+    scatter each entry into a dense (C, E) image sorted by (dest core,
+    local post, position)."""
+    C = n_cores
+    core_of = np.asarray(neuron_core, np.int64)
+    counts = np.bincount(core_of, minlength=C) if n_neurons else \
+        np.zeros(C, int)
+    n_max = max(int(counts.max()) if n_neurons else 0, 1)
+    local = np.zeros(n_neurons, np.int64)
+    nxt = np.zeros(C, np.int64)
+    for i in range(n_neurons):
+        local[i] = nxt[core_of[i]]
+        nxt[core_of[i]] += 1
+    dest = core_of[post]
+    lpost = local[post]
+    order = np.lexsort((pos, lpost, dest))
+    per_core = np.bincount(dest, minlength=C)
+    E = max(int(per_core.max()) if len(pos) else 0, 1)
+    p = np.full((C, E), -1, np.int64)
+    it = np.full((C, E), -1, np.int64)
+    w = np.zeros((C, E), np.int32)
+    col = np.zeros(C, np.int64)
+    for e in order:
+        c = dest[e]
+        p[c, col[c]] = pos[e]
+        it[c, col[c]] = item[e]
+        w[c, col[c]] = weight[e]
+        col[c] += 1
+    ip = np.zeros((C, n_max + 1), np.int64)
+    for e in range(len(pos)):
+        ip[dest[e], lpost[e] + 1] += 1
+    ip = np.cumsum(ip, axis=1)
+    return p, it, w, ip
+
+
+def _check_ragged_vs_padded(n_axons, n_neurons, n_syn, n_cores, seed):
+    """The ragged CoreShards layout expands (`padded()`) to exactly the
+    padded-to-max image a dense scatter builds — no entry lost,
+    reordered, or reweighted — while storing only
+    sum(entries) + (C, n_max + 1) offsets (linear in synapses even for
+    fully skewed placements)."""
+    rng = np.random.default_rng(seed)
+    A, N = n_axons, n_neurons
+    pos = rng.choice(10_000, n_syn, replace=False).astype(np.int64)
+    item = rng.integers(0, A + N, n_syn).astype(np.int64)
+    post = rng.integers(0, N, n_syn).astype(np.int64)
+    weight = rng.integers(-30_000, 30_000, n_syn).astype(np.int32)
+    neuron_core = rng.integers(0, n_cores, N).astype(np.int32)
+    axon_core = rng.integers(0, n_cores, A).astype(np.int32)
+    sh = hbm.shard_entries(pos, item, post, weight, neuron_core,
+                           axon_core, n_cores, N, A)
+    got = sh.padded()
+    want = _padded_reference(pos, item, post, weight, neuron_core,
+                             axon_core, n_cores, N, A)
+    for g, w_, name in zip(got, want, ("pos", "item", "w", "indptr")):
+        np.testing.assert_array_equal(g, w_, err_msg=name)
+    # ragged memory is linear in entries: no padded (C, E) array exists
+    assert sh.entry_pos.shape == (n_syn,)
+    assert sh.entry_w.shape == (n_syn,)
+    assert sh.core_offsets[-1] == n_syn
+    # weights are the per-core copy of the record values, entry order
+    lookup = dict(zip(pos.tolist(), weight.tolist()))
+    assert [lookup[p] for p in sh.entry_pos.tolist()] == \
+        sh.entry_w.tolist()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 12), st.integers(0, 30),
+       st.integers(1, 6), st.integers(0, 10_000))
+def test_ragged_vs_padded_shard_image_identity(n_axons, n_neurons,
+                                               n_syn, n_cores, seed):
+    _check_ragged_vs_padded(n_axons, n_neurons, n_syn, n_cores, seed)
+
+
+def test_ragged_vs_padded_deterministic_smoke():
+    """The same identity without hypothesis (always runs), including
+    the degenerate shapes: empty entries, one core, fully skewed
+    all-on-one-core placements."""
+    for seed in range(8):
+        rng = np.random.default_rng(1000 + seed)
+        _check_ragged_vs_padded(int(rng.integers(1, 5)),
+                                int(rng.integers(1, 13)),
+                                int(rng.integers(0, 31)),
+                                int(rng.integers(1, 7)), seed)
+    _check_ragged_vs_padded(1, 1, 0, 1, 0)      # no synapses at all
+    # fully skewed: every post on one core of many (the padded layout's
+    # worst case — ragged memory stays at n_syn entries)
+    rng = np.random.default_rng(7)
+    pos = rng.choice(1000, 20, replace=False).astype(np.int64)
+    sh = hbm.shard_entries(pos, rng.integers(0, 3, 20),
+                           np.zeros(20, np.int64),
+                           rng.integers(-5, 5, 20).astype(np.int32),
+                           np.zeros(1, np.int32), np.zeros(2, np.int32),
+                           8, 1, 2)
+    assert sh.entry_pos.shape == (20,)
+    assert np.diff(sh.core_offsets).tolist() == [20, 0, 0, 0, 0, 0, 0, 0]
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,0 +1,284 @@
+"""Device-mesh HiAER tier (core.mesh_runtime) — the bit-exactness
+contract of the mesh backend: spikes, membranes, AccessCounter
+pointer/row statistics AND per-level event traffic must be
+integer-identical to `backend="engine"` / `backend="hiaer"` across
+randomized topologies, hierarchies, and degenerate placements, while
+every device holds only its own cores' ragged shard (no monolithic
+`w_ext` anywhere on the path).
+
+The multi-device half runs in a SUBPROCESS with
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` (the
+launch/dryrun.py pattern — jax pins the device count at first backend
+init, so the forcing flag must be set before the interpreter imports
+jax; the parent test process keeps its single real CPU device). This
+file doubles as that child script: `python tests/test_mesh_runtime.py
+--child` executes the 8-device parity suite directly.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# --------------------------------------------------------- pure helpers
+def test_collective_stages_structure():
+    """The per-level all-gather plan: groups partition the devices at
+    every stage, concatenate blocks in core order, and collapse to the
+    single-device no-op when one device owns everything."""
+    from repro.kernels.exchange import HierSpec, collective_stages
+    # 8 cores on 8 devices: one stage per hierarchy level
+    st = collective_stages(HierSpec(2, 2, 2), 8)
+    assert st == [
+        [[0, 1], [2, 3], [4, 5], [6, 7]],            # NoC
+        [[0, 2], [1, 3], [4, 6], [5, 7]],            # FireFly
+        [[0, 4], [1, 5], [2, 6], [3, 7]],            # Ethernet
+    ]
+    for groups in st:                    # each stage partitions devices
+        flat = sorted(sum(groups, []))
+        assert flat == list(range(8))
+    # 8 cores on 4 devices: NoC is device-local, two stages remain
+    assert collective_stages(HierSpec(2, 2, 2), 4) == [
+        [[0, 1], [2, 3]], [[0, 2], [1, 3]]]
+    # 8 cores on 2 devices: only the Ethernet hop crosses devices
+    assert collective_stages(HierSpec(2, 2, 2), 2) == [[[0, 1]]]
+    # one device: everything local, no collectives
+    assert collective_stages(HierSpec(2, 2, 2), 1) == []
+    # 4 cores in one FPGA on 4 devices: a single NoC-level stage
+    assert collective_stages(HierSpec(1, 1, 4), 4) == [
+        [[0, 1, 2, 3]]]
+
+
+def test_device_count_selection_and_validation():
+    import pytest
+
+    from repro.core.api import CRI_network, Hierarchy, LIF_neuron
+    from repro.core.mesh_runtime import default_device_count
+    assert default_device_count(8, available=3) == 2
+    assert default_device_count(6, available=8) == 6
+    assert default_device_count(5, available=2) == 1
+    lif = LIF_neuron(threshold=5, nu=-32, lam=63)
+    net_kw = dict(axons={"a": [("x", 3)]},
+                  neurons={"x": ([], lif), "y": ([], lif)},
+                  outputs=["x"], backend="mesh",
+                  hierarchy=Hierarchy(1, 1, 3, 1))
+    with pytest.raises(ValueError):      # 2 devices cannot split 3 cores
+        CRI_network(n_devices=2, **net_kw)
+    with pytest.raises(ValueError):      # more devices than exist
+        CRI_network(n_devices=3000, **net_kw)
+
+
+def test_mesh_single_device_parity():
+    """On one device the mesh tier is the shard_map-wrapped hiaer step:
+    still bit-exact vs the engine, stages empty (no collectives)."""
+    from repro.core.api import CRI_network, Hierarchy
+    from test_routing_vectorized import drive, random_net
+    axons, neurons, outputs = random_net(21)
+    hier = Hierarchy(2, 2, 2, 1000)
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=21)
+    mesh = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                       backend="mesh", seed=21, hierarchy=hier)
+    assert mesh._impl.n_devices == 1
+    assert mesh._impl._stages == []
+    assert drive(21, eng, list(axons)) == drive(21, mesh, list(axons))
+    d1, d2 = eng.counter.as_dict(), mesh.counter.as_dict()
+    for k in ("pointer_reads", "row_reads", "timesteps",
+              "total_accesses"):
+        assert d1[k] == d2[k], k
+
+
+def test_no_dense_weight_image_on_device():
+    """Per-core weight storage: the device tables carry exactly the
+    ragged entries (linear in synapses) — there is no w_ext field and
+    no (R * SLOTS)-sized weight array anywhere in the hiaer/mesh
+    tables."""
+    from repro.core.api import CRI_network, Hierarchy
+    from test_routing_vectorized import random_net
+    axons, neurons, outputs = random_net(2, n_neurons=30)
+    for backend in ("hiaer", "mesh"):
+        net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                          backend=backend, seed=0,
+                          hierarchy=Hierarchy(1, 2, 2, 30))
+        t = net._impl._tables
+        assert not hasattr(t, "w_ext")
+        dense = net.compiled.image.syn_post.size   # R * SLOTS slots
+        nnz = net.compiled.shards.n_entries
+        assert nnz < dense                          # fillers pad rows
+        # weight storage is the ragged entries (padded per device on
+        # mesh), never the dense image
+        assert t.entry_w.size <= max(nnz, 1) < dense
+        import jax
+        for leaf in jax.tree_util.tree_leaves(t):   # nothing dense-sized
+            assert leaf.size < dense
+
+
+# ------------------------------------------- the 8-device parity suite
+def test_mesh_eight_forced_devices_subprocess():
+    proc = subprocess.run(
+        [sys.executable, str(Path(__file__).resolve()), "--child"],
+        env={"PYTHONPATH": f"{ROOT / 'src'}:{ROOT / 'tests'}",
+             "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        capture_output=True, text=True, timeout=560, cwd=str(ROOT))
+    assert proc.returncode == 0, \
+        proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "MESH-8DEV-OK" in proc.stdout
+
+
+def _child() -> int:
+    import jax
+
+    from repro.core.api import CRI_network, Hierarchy, LIF_neuron
+    from test_routing_vectorized import drive, random_net
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    hiers = [
+        Hierarchy(2, 2, 2, 8),           # all three levels, 8 cores
+        Hierarchy(1, 2, 2, 12),          # NoC + FireFly, 4 cores
+        Hierarchy(1, 1, 4, 12),          # NoC only, 4 cores
+        Hierarchy(1, 1, 1, 1000),        # single core (trivial exchange)
+    ]
+
+    def check(eng, mesh, hi, ax_keys, seed):
+        a = drive(seed, eng, ax_keys)
+        b = drive(seed, mesh, ax_keys)
+        c = drive(seed, hi, ax_keys)
+        assert a == b == c, "spike/membrane mismatch"
+        d1, d2 = eng.counter.as_dict(), mesh.counter.as_dict()
+        for k in ("pointer_reads", "row_reads", "timesteps",
+                  "total_accesses"):
+            assert d1[k] == d2[k], k
+        assert mesh.counter.level_events == hi.counter.level_events
+
+    # randomized topologies x hierarchies (incl. zero-fanout fillers)
+    for seed in range(4):
+        hier = hiers[seed % len(hiers)]
+        axons, neurons, outputs = random_net(seed)
+        eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                          backend="engine", seed=seed)
+        mesh = CRI_network(axons=axons, neurons=neurons,
+                           outputs=outputs, backend="mesh", seed=seed,
+                           hierarchy=hier)
+        hi = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                         backend="hiaer", seed=seed, hierarchy=hier)
+        assert mesh._impl.n_devices == min(8, hier.n_cores)
+        check(eng, mesh, hi, list(axons), seed)
+    print("randomized topologies OK", flush=True)
+
+    # every divisor device count runs the same 8-core network bit-exact
+    axons, neurons, outputs = random_net(31)
+    hier = Hierarchy(2, 2, 2, 1000)
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=31)
+    ref = drive(31, eng, list(axons))
+    for nd in (2, 4, 8):
+        mesh = CRI_network(axons=axons, neurons=neurons,
+                           outputs=outputs, backend="mesh", seed=31,
+                           hierarchy=hier, n_devices=nd)
+        assert mesh._impl.n_devices == nd
+        assert len(mesh._impl._stages) == {2: 1, 4: 2, 8: 3}[nd]
+        assert drive(31, mesh, list(axons)) == ref
+    print("divisor device counts OK", flush=True)
+
+    # degenerate placement: everything on core 3 — zero cross-level
+    axons, neurons, outputs = random_net(5)
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=5)
+    mesh = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                       backend="mesh", seed=5,
+                       hierarchy=Hierarchy(2, 2, 2, 1000),
+                       placement={k: 3 for k in neurons},
+                       axon_placement={k: 3 for k in axons})
+    assert drive(5, eng, list(axons)) == drive(5, mesh, list(axons))
+    assert mesh.counter.cross_level_events == 0
+    assert mesh._impl.shards.stats()["white_entries"] == 0
+    print("all-on-one-core OK", flush=True)
+
+    # degenerate placement: ring with neighbours on different servers —
+    # every neuron->neuron synapse crosses Ethernet
+    n = 12
+    lif = LIF_neuron(threshold=2, nu=-32, lam=63)
+    names = [f"n{i}" for i in range(n)]
+    neurons = {names[i]: ([(names[(i + 1) % n], 5)], lif)
+               for i in range(n)}
+    axons = {"a0": [(names[i], 9) for i in range(n)]}
+    hier = Hierarchy(2, 1, 1, n)
+    placement = {names[i]: i % 2 for i in range(n)}
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=names[:3],
+                      backend="engine", seed=2)
+    mesh = CRI_network(axons=axons, neurons=neurons, outputs=names[:3],
+                       backend="mesh", seed=2, hierarchy=hier,
+                       placement=placement)
+    for _ in range(8):
+        f1, p1 = eng.step(["a0"], membranePotential=True)
+        f2, p2 = mesh.step(["a0"], membranePotential=True)
+        assert (f1, p1) == (f2, p2)
+    ev = mesh.counter.level_events
+    assert ev[0] == 8 and ev[1] == 0 and ev[2] == 0 and ev[3] >= 8
+    assert mesh._impl.shards.stats()["white_frac"] > 0.5
+    print("every-synapse-cross-core OK", flush=True)
+
+    # run == sequential steps; run_batch parity vs engine
+    import random as pyrandom
+    a_def = random_net(9)
+    hier = Hierarchy(1, 2, 2, 12)
+    mk = lambda: CRI_network(axons=a_def[0], neurons=a_def[1],
+                             outputs=a_def[2], backend="mesh", seed=4,
+                             hierarchy=hier)
+    a, b = mk(), mk()
+    rng = pyrandom.Random(8)
+    sched = [rng.sample(list(a_def[0]), k=rng.randint(0, len(a_def[0])))
+             for _ in range(12)]
+    assert a.run(sched) == [b.step(s) for s in sched]
+    assert a.counter.as_dict() == b.counter.as_dict()
+    assert a.read_membrane(*a.neuron_keys) == \
+        b.read_membrane(*b.neuron_keys)
+    eng = CRI_network(axons=a_def[0], neurons=a_def[1], outputs=a_def[2],
+                      backend="engine", seed=4)
+    nprng = np.random.default_rng(0)
+    batch = nprng.integers(0, 2, (3, 6, len(a_def[0]))) \
+        .astype(np.int32)
+    np.testing.assert_array_equal(eng.run_batch(batch),
+                                  mk().run_batch(batch))
+    print("run/run_batch OK", flush=True)
+
+    # weight edits on a live 8-device mesh: shard-local rebuilds only,
+    # and the compiled scan sees the batch
+    n = 16
+    lif = LIF_neuron(threshold=50, nu=-32, lam=3)
+    names = [f"n{i}" for i in range(n)]
+    neurons = {names[i]: ([(names[(i + 1) % n], 3)], lif)
+               for i in range(n)}
+    axons = {"a0": [(names[i], 7) for i in range(n)]}
+    hier = Hierarchy(2, 2, 2, 2)
+    placement = {names[i]: i % 8 for i in range(n)}
+    mesh = CRI_network(axons=axons, neurons=neurons, outputs=names[:2],
+                       backend="mesh", seed=0, hierarchy=hier,
+                       placement=placement)
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=names[:2],
+                      backend="engine", seed=0)
+    ws = list(range(1, n + 1))
+    mesh.write_synapses(["a0"] * n, names, ws)
+    eng.write_synapses(["a0"] * n, names, ws)
+    assert mesh._impl.shard_rebuilds == 8      # every device touched
+    mesh.write_synapses(["a0"], [names[0]], [40])
+    eng.write_synapses(["a0"], [names[0]], [40])
+    assert mesh._impl.shard_rebuilds == 9      # one shard only
+    np.testing.assert_array_equal(mesh.read_synapses(["a0"], names),
+                                  eng.read_synapses(["a0"], names))
+    assert drive(1, eng, ["a0"]) == drive(1, mesh, ["a0"])
+    print("shard-local weight edits OK", flush=True)
+
+    print("MESH-8DEV-OK", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        sys.exit(_child())
+    sys.exit("run under pytest, or with --child for the 8-device suite")

@@ -9,6 +9,7 @@ from _hyp import given, settings, st
 
 from repro.core.partition import (Hierarchy, Job, allocate,
                                   level_event_counts, partition,
+                                  partition_arrays, partition_loop,
                                   random_assignment, traffic_cost)
 
 
@@ -73,6 +74,60 @@ def test_allocate_first_fit():
     assert len(set(used)) == len(used)     # no core shared
     with pytest.raises(ValueError):
         allocate([Job("x", 10_000)], h)
+
+
+def _check_partition_parity(seed, n):
+    """The NumPy frontier-expansion partitioner assigns every neuron to
+    exactly the core the reference O(N·frontier) Python walk picks —
+    including zero-weight edges, isolated nodes, duplicate synapses and
+    self-loops — and respects capacity on every hierarchy shape."""
+    rng = np.random.default_rng(seed)
+    adj = {}
+    for i in range(n):
+        k = int(rng.integers(0, min(5, n) + 1))
+        adj[i] = [(int(j), int(rng.integers(-9, 10)))   # 0-weights too
+                  for j in rng.integers(0, n, k)]       # dups + self ok
+    for hier in (Hierarchy(1, 1, 2, -(-n // 2)),
+                 Hierarchy(2, 2, 2, max(n // 6, 1) + 1),
+                 Hierarchy(1, 1, 1, n)):
+        if n > hier.capacity:
+            continue
+        got = partition(adj, hier)
+        ref = partition_loop(adj, hier)
+        assert got == ref
+        counts = np.bincount(list(got.values()),
+                             minlength=hier.n_cores)
+        assert counts.max() <= hier.neurons_per_core
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 120))
+def test_vectorized_partition_matches_loop(seed, n):
+    _check_partition_parity(seed, n)
+
+
+def test_vectorized_partition_matches_loop_deterministic():
+    """Always-run (no hypothesis) parity smoke over fixed seeds."""
+    for seed, n in ((0, 1), (1, 2), (2, 17), (3, 60), (4, 120),
+                    (5, 90)):
+        _check_partition_parity(seed, n)
+
+
+def test_partition_arrays_column_door():
+    """partition_arrays (the compile-path front door) equals the dict
+    door on the equivalent adjacency."""
+    rng = np.random.default_rng(3)
+    n, s = 80, 400
+    pre = rng.integers(0, n, s)
+    post = rng.integers(0, n, s)
+    w = rng.integers(1, 12, s)
+    hier = Hierarchy(1, 2, 2, -(-n // 4))
+    got = partition_arrays(pre, post, w, n, hier)
+    adj = {i: [] for i in range(n)}
+    for p, q, ww in zip(pre.tolist(), post.tolist(), w.tolist()):
+        adj[p].append((q, ww))
+    ref = partition(adj, hier)
+    assert got.tolist() == [ref[i] for i in range(n)]
 
 
 @settings(max_examples=10, deadline=None)

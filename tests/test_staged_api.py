@@ -109,9 +109,9 @@ def assert_images_equal(a, b):
 
 def assert_shards_equal(a, b):
     assert a.n_cores == b.n_cores and a.n_max == b.n_max
-    for f in ("core_nids", "core_of_neuron", "local_id", "csr_src",
-              "csr_item", "csr_indptr", "grey_entries", "white_entries",
-              "white_sources"):
+    for f in ("core_nids", "core_of_neuron", "local_id", "entry_pos",
+              "entry_item", "entry_w", "csr_indptr", "grey_entries",
+              "white_entries", "white_sources"):
         np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
                                       err_msg=f)
 
@@ -184,7 +184,8 @@ def test_staged_pipeline_bit_exact_vs_legacy_dicts(backend, tmp_path):
 def test_save_load_round_trip_bit_identical(tmp_path):
     axons, neurons, outputs = random_dicts(5)
     for target, kw in (("simulator", {}), ("engine", {}),
-                       ("hiaer", {"hierarchy": Hierarchy(1, 2, 2, 8)})):
+                       ("hiaer", {"hierarchy": Hierarchy(1, 2, 2, 8)}),
+                       ("mesh", {"hierarchy": Hierarchy(1, 2, 2, 8)})):
         compiled = compile_spec(NetworkSpec.from_dicts(
             axons, neurons, outputs), target=target, **kw)
         path = tmp_path / f"art_{target}.npz"
@@ -213,7 +214,7 @@ def test_save_load_round_trip_bit_identical(tmp_path):
                 np.testing.assert_array_equal(
                     getattr(loaded.flat, f), getattr(compiled.flat, f),
                     err_msg=f)
-        if target == "hiaer":
+        if target in ("hiaer", "mesh"):
             assert loaded.hierarchy == compiled.hierarchy
             np.testing.assert_array_equal(loaded.neuron_core,
                                           compiled.neuron_core)
@@ -247,8 +248,13 @@ def test_thousand_synapse_batch_is_one_upload(backend):
     net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
                       backend=backend, seed=0, **kw)
     calls = []
-    orig = net._impl.update_weights
-    net._impl.update_weights = lambda w: (calls.append(1), orig(w))[1]
+    # engine uploads the whole image; hiaer applies the batch as ONE
+    # shard-local update_entry_weights call
+    meth = "update_weights" if backend == "engine" \
+        else "update_entry_weights"
+    orig = getattr(net._impl, meth)
+    setattr(net._impl, meth,
+            lambda *a: (calls.append(1), orig(*a))[1])
     pres, posts, ws = [], [], []
     for a, syns in axons.items():
         for p, w in syns:
@@ -269,6 +275,39 @@ def test_thousand_synapse_batch_is_one_upload(backend):
                          backend=backend, seed=0, **kw)
     sched = [[k] for k in list(axons)[:6]]
     assert net.run(sched) == legacy.run(sched)
+
+
+def test_single_core_batch_rebuilds_one_shard():
+    """Per-core weight storage: a batch whose edits all land on ONE
+    core's shard rebuilds exactly that shard, not the full table set;
+    a cross-core batch rebuilds exactly the touched shards."""
+    n = 12
+    names = [f"n{i}" for i in range(n)]
+    lif = LIF_neuron(threshold=50, nu=-32, lam=4)
+    axons = {"a0": [(names[i], 5) for i in range(n)]}
+    neurons = {k: ([], lif) for k in names}
+    placement = {names[i]: i % 2 for i in range(n)}   # even->0, odd->1
+    net = CRI_network(axons=axons, neurons=neurons, outputs=names[:2],
+                      backend="hiaer", seed=0,
+                      hierarchy=Hierarchy(1, 1, 2, n),
+                      placement=placement)
+    assert net._impl.shard_rebuilds == 0
+    core0 = [names[i] for i in range(0, n, 2)]
+    net.write_synapses(["a0"] * len(core0), core0,
+                       list(range(1, len(core0) + 1)))
+    assert net._impl.shard_rebuilds == 1       # only core 0's shard
+    assert net._dep.weight_uploads == 1
+    net.write_synapses(["a0", "a0"], [names[0], names[1]], [7, 8])
+    assert net._impl.shard_rebuilds == 3       # both cores touched
+    # the edits are live in the compiled scan
+    legacy = {p: w for p, w in zip(core0, range(1, len(core0) + 1))}
+    legacy[names[0]], legacy[names[1]] = 7, 8
+    ref = CRI_network(
+        axons={"a0": [(p, legacy.get(p, 5)) for p, _ in axons["a0"]]},
+        neurons=neurons, outputs=names[:2], backend="hiaer", seed=0,
+        hierarchy=Hierarchy(1, 1, 2, n), placement=placement)
+    sched = [["a0"], [], ["a0"]]
+    assert net.run(sched) == ref.run(sched)
 
 
 def test_write_synapses_batch_semantics():
