@@ -1,16 +1,26 @@
 import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
-"""Device-mesh tier benchmark — events/sec and PEAK PER-DEVICE shard
-memory of `backend="mesh"` vs 1/2/4/8 forced host devices, on the
-clustered topology of benchmarks/hiaer_scaling.py.
+"""Device-mesh tier benchmark — events/sec, PEAK PER-DEVICE shard
+memory, EXCHANGE BYTES, and batched-vs-sequential throughput of
+`backend="mesh"` vs 1/2/4/8 forced host devices, on the clustered
+topology of benchmarks/hiaer_scaling.py.
 
-The structural claim the mesh tier exists for: per-device synapse-shard
-memory SHRINKS with the device count because each device stores only
-its own cores' ragged entries with their own weight storage — strictly
-below the monolithic dense `w_ext` weight image (R * SLOTS + 1 int32
-slots) the single-device hiaer tier used to hold, at 4+ devices. Any
-violation exits nonzero so CI catches a shard-layout regression.
+Three structural claims, each gated so CI catches a regression
+(violations exit nonzero):
+
+  * per-device synapse-shard memory SHRINKS with the device count
+    (each device stores only its own cores' ragged entries) — strictly
+    below the monolithic dense `w_ext` weight image at 4+ devices;
+  * the bit-packed wire format moves >= 16x fewer exchange bytes than
+    the unpacked int32 event lanes — both the per-level collective
+    bytes (`exchange_bytes_per_step`, device counts with real hops)
+    and the replicated per-device event-vector floor
+    (`event_vector_bytes`, every device count);
+  * the batched sharded `run_batch` (samples folded into the
+    shard_mapped state, one collective per level per step for the
+    whole batch) delivers >= 2x the events/sec of the sequential
+    per-sample path at B=8.
 
 The XLA_FLAGS line above MUST precede every jax-touching import (jax
 pins the device count at first backend init) — the launch/dryrun.py
@@ -49,10 +59,51 @@ def _run_point(axons, neurons, outputs, hier, n_devices, sched, steps):
         "total_shard_entries": impl.shards.n_entries,
         "monolithic_w_ext_bytes": dense_slots * 4,
         "collective_stages": len(impl._stages),
+        # wire accounting: per-level collective bytes one device
+        # receives per exchange round, packed vs unpacked, plus the
+        # replicated per-device event-vector floor
+        "exchange_bytes_per_step_packed":
+            impl.exchange_bytes_per_step(packed=True),
+        "exchange_bytes_per_step_unpacked":
+            impl.exchange_bytes_per_step(packed=False),
+        "event_vector_bytes_packed": impl.event_vector_bytes(packed=True),
+        "event_vector_bytes_unpacked":
+            impl.event_vector_bytes(packed=False),
     }
     for k, v in zip(LEVEL_NAMES, c.level_events):
         point[f"events_{k}"] = v
     return point
+
+
+def _batch_point(axons, neurons, outputs, hier, n_devices, counts):
+    """Batched sharded run_batch vs the sequential per-sample path
+    (B separate run() dispatches), same compiled network, events/sec
+    from each window's own measured row reads."""
+    B = counts.shape[0]
+    net = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="mesh", seed=3, hierarchy=hier,
+                      n_devices=n_devices)
+    net.run_batch(counts)                 # compile the batched stream
+    net.counter.reset()
+    t0 = time.time()
+    net.run_batch(counts)
+    dt_b = time.time() - t0
+    ev_b = net.counter.row_reads * SLOTS / max(dt_b, 1e-9)
+
+    net.reset(); net.run(counts[0])       # compile the per-sample scan
+    net.counter.reset()
+    t0 = time.time()
+    for b in range(B):
+        net.reset()
+        net.run(counts[b])
+    dt_s = time.time() - t0
+    ev_s = net.counter.row_reads * SLOTS / max(dt_s, 1e-9)
+    return {
+        "batch_size": int(B),
+        "batched_events_per_sec": ev_b,
+        "sequential_events_per_sec": ev_s,
+        "batched_speedup": ev_b / max(ev_s, 1e-9),
+    }
 
 
 def run(n_clusters=16, size=64, steps=60, device_counts=(1, 2, 4, 8),
@@ -79,22 +130,52 @@ def run(n_clusters=16, size=64, steps=60, device_counts=(1, 2, 4, 8),
                 point["monolithic_w_ext_bytes"]
             point["below_monolith"] = ok
             if not ok:
-                failures.append(D)
+                failures.append(f"shard-bytes@{D}")
+        # the wire gate: packed exchange <= 1/16 of the unpacked bytes,
+        # on the replicated event-vector floor everywhere and on the
+        # collective wire wherever a real hop exists
+        ok = point["event_vector_bytes_packed"] * 16 \
+            <= point["event_vector_bytes_unpacked"]
+        if point["collective_stages"]:
+            ok = ok and point["exchange_bytes_per_step_packed"] * 16 \
+                <= point["exchange_bytes_per_step_unpacked"]
+        point["packed_16x"] = ok
+        if not ok:
+            failures.append(f"packed-bytes@{D}")
         results["by_devices"][str(D)] = point
         if not quiet:
             print(f"mesh_bench,devices={D},"
                   f"ev={point['events_per_sec']:.3e}/s,"
                   f"peak_dev_bytes={point['peak_device_shard_bytes']},"
-                  f"monolith={point['monolithic_w_ext_bytes']}")
+                  f"monolith={point['monolithic_w_ext_bytes']},"
+                  f"xchg_packed={point['exchange_bytes_per_step_packed']},"
+                  f"xchg_unpacked="
+                  f"{point['exchange_bytes_per_step_unpacked']}")
+
+    # batched vs sequential run_batch at the widest mesh, B=8
+    D = max(device_counts)
+    rngb = np.random.default_rng(5)
+    counts = rngb.integers(0, 2, (8, steps, len(ax_keys))) \
+        .astype(np.int32)
+    bp = _batch_point(axons, neurons, outputs, hier, D, counts)
+    bp["n_devices"] = D
+    results["batched"] = bp
+    if bp["batched_speedup"] < 2.0:
+        failures.append(f"batched-speedup@{D}"
+                        f"={bp['batched_speedup']:.2f}")
+    if not quiet:
+        print(f"mesh_bench,batched,B=8,devices={D},"
+              f"batched={bp['batched_events_per_sec']:.3e}/s,"
+              f"sequential={bp['sequential_events_per_sec']:.3e}/s,"
+              f"speedup={bp['batched_speedup']:.2f}x")
 
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(results, fh, indent=2)
     if failures:
         raise SystemExit(
-            f"per-device shard bytes not below the monolithic w_ext "
-            f"image at device counts {failures} — shard layout "
-            f"regression")
+            f"mesh bench gates failed: {failures} — shard layout, "
+            f"packed wire, or batched-run_batch regression")
     return results
 
 

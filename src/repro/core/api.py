@@ -29,8 +29,10 @@ shards with level-aware spike exchange and measured NoC/FireFly/
 Ethernet traffic), or the device-mesh tier (the same per-core shards
 executed under shard_map with each jax device owning only its cores'
 state and weights, spike exchange as hierarchical all_gather
-collectives; `n_devices` picks the mesh width) — backend="simulator" |
-"engine" | "hiaer" | "mesh". Results are bit-identical across all four
+collectives over bit-packed uint32 presence words — `packed=False`
+falls back to int32 event lanes, bit-exact either way; `n_devices`
+picks the mesh width) — backend="simulator" | "engine" | "hiaer" |
+"mesh". Results are bit-identical across all four
 (tests/test_api.py, tests/test_hiaer.py, tests/test_staged_api.py,
 tests/test_mesh_runtime.py); this mirrors the paper's seamless
 local-to-cluster transition.
@@ -90,7 +92,8 @@ class CRI_network:
                  axon_placement: Optional[Dict] = None,
                  spec: Optional[NetworkSpec] = None,
                  compiled: Optional[CompiledNetwork] = None,
-                 n_devices: Optional[int] = None):
+                 n_devices: Optional[int] = None,
+                 packed: bool = True):
         if compiled is None:
             if spec is None:
                 if axons is None or neurons is None or outputs is None:
@@ -118,7 +121,8 @@ class CRI_network:
         self._dep: Deployment = deploy(compiled, seed=seed,
                                        vectorized=vectorized,
                                        use_pallas=use_pallas,
-                                       n_devices=n_devices)
+                                       n_devices=n_devices,
+                                       packed=packed)
         self._impl = self._dep.impl
         self.counter: Optional[AccessCounter] = self._dep.counter
         self.image = compiled.image

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 E_ACCESS_PJ = 744.0       # energy per HBM access (64-bit slot read)
 NS_PER_ACCESS = 2.84      # effective pipelined latency per access
 FIXED_NS = 120.0          # per-timestep control overhead (pointer setup)
@@ -54,6 +56,21 @@ class AccessCounter:
     def add_level_events(self, per_level) -> None:
         for i, v in enumerate(per_level):
             self.level_events[i] += int(v)
+
+    def tally(self, pointer_reads, row_reads, level_events=None) -> None:
+        """Fold device tallies into the counter host-side, in exact
+        Python ints (device tallies are int32 per step/sample; summing
+        here keeps long runs from wrapping). Accepts scalars or any
+        per-step/per-sample array shape; `level_events` is any stack of
+        (N_LEVELS,) traffic rows. The one tally path shared by
+        engine/hiaer/mesh step/run/run_batch."""
+        self.pointer_reads += int(np.asarray(pointer_reads,
+                                             np.int64).sum())
+        self.row_reads += int(np.asarray(row_reads, np.int64).sum())
+        if level_events is not None:
+            self.add_level_events(
+                np.asarray(level_events, np.int64)
+                .reshape(-1, len(LEVEL_NAMES)).sum(axis=0))
 
     def energy_uJ(self) -> float:
         return self.total_accesses * E_ACCESS_PJ * 1e-6

@@ -60,7 +60,7 @@ class Deployment:
 
     def __init__(self, compiled: CompiledNetwork, *, seed: int = 0,
                  vectorized: bool = True, use_pallas: bool = False,
-                 n_devices: Optional[int] = None):
+                 n_devices: Optional[int] = None, packed: bool = True):
         self.compiled = compiled
         c = compiled
         out_ids = [int(i) for i in c.outputs]
@@ -83,7 +83,8 @@ class Deployment:
                                      axon_core=c.axon_core,
                                      shards=c.shards,
                                      axon_ndest=c.axon_ndest,
-                                     neuron_ndest=c.neuron_ndest)
+                                     neuron_ndest=c.neuron_ndest,
+                                     packed=packed)
             self.counter = self.impl.counter
         elif c.target == "mesh":
             self.impl = MeshNetwork(c.theta, c.nu, c.lam, c.is_lif,
@@ -95,7 +96,7 @@ class Deployment:
                                     shards=c.shards,
                                     axon_ndest=c.axon_ndest,
                                     neuron_ndest=c.neuron_ndest,
-                                    n_devices=n_devices)
+                                    n_devices=n_devices, packed=packed)
             self.counter = self.impl.counter
         else:
             raise ValueError(f"unknown target {c.target!r}")
@@ -239,9 +240,14 @@ class Deployment:
 
 def deploy(compiled: CompiledNetwork, *, seed: int = 0,
            vectorized: bool = True, use_pallas: bool = False,
-           n_devices: Optional[int] = None) -> Deployment:
+           n_devices: Optional[int] = None,
+           packed: bool = True) -> Deployment:
     """Bring a compiled network up on its target backend. `n_devices`
     (mesh target only) picks the device-mesh width; default is the
-    largest available device count that evenly divides the core count."""
+    largest available device count that evenly divides the core count.
+    `packed` (hiaer/mesh) selects the bit-packed spike wire format —
+    uint32 presence words instead of int32 event lanes, bit-exact
+    either way; default on (the 32x-narrower exchange)."""
     return Deployment(compiled, seed=seed, vectorized=vectorized,
-                      use_pallas=use_pallas, n_devices=n_devices)
+                      use_pallas=use_pallas, n_devices=n_devices,
+                      packed=packed)

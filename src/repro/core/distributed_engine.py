@@ -16,7 +16,15 @@ real TPUs, kernels/spike_matmul.py).
 
 The spike exchange is a hierarchical all-gather of 1-bit spike vectors:
 exactly the paper's "keep most event traffic on fast local links" — the
-slow cross-pod hop carries only the pod-boundary summary once.
+slow cross-pod hop carries only the pod-boundary summary once. The wire
+format is the shared bit-packed representation of `kernels.exchange`
+(`pack_events`/`unpack_events`, uint32 presence words): this module no
+longer hand-rolls its own 1-bit packing — it is a thin consumer of the
+same primitives the production mesh tier (core.mesh_runtime) exchanges
+with, and `small_reference_step` remains the dense single-device oracle
+the packed path is tested against (tests/test_system.py). Shards whose
+local bit count is not word-aligned (n_loc % 32 != 0, impossible at the
+paper's scale) fall back to the dense bool gather.
 
 `step` is pjit-compatible; `hiaer_snn_40b` dry-runs it at full scale
 (160e6 neurons, 40e9 synapses => 2.4e5 synapses/neuron avg fan-in 250,
@@ -35,6 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import neuron as nrn
 from repro.distributed.context import batch_axes, get_mesh, tp_axis
+from repro.kernels import exchange as exch_k
 
 
 @dataclass(frozen=True)
@@ -108,10 +117,24 @@ def make_snn_step(cfg: SNNShardConfig, mesh):
                 V, theta, jnp.full_like(theta, -32), lam,
                 jnp.ones((n_loc,), bool), key)
             # --- HiAER multicast: hierarchical all-gather of spike bits,
-            # fast axis first (NoC -> FireFly -> Ethernet)
-            bits = spikes_prev
-            for ax in reversed(all_axes):      # model, data, pod
-                bits = jax.lax.all_gather(bits, ax, tiled=True)
+            # fast axis first (NoC -> FireFly -> Ethernet), over the
+            # shared packed wire format: each shard's bool vector packs
+            # to uint32 presence words (kernels.exchange.pack_events),
+            # the hops gather WORDS (32x fewer bytes per link), and the
+            # global vector unpacks once at the destination. Word
+            # packing commutes with concatenation only when every
+            # shard's bit count is word-aligned; otherwise fall back to
+            # the dense bool gather (same values, wide wire).
+            if spikes_prev.shape[0] % exch_k.PACK_BITS == 0:
+                words = exch_k.pack_events(spikes_prev)
+                for ax in reversed(all_axes):  # model, data, pod
+                    words = jax.lax.all_gather(words, ax, tiled=True)
+                bits = exch_k.unpack_events(
+                    words, words.shape[0] * exch_k.PACK_BITS)
+            else:
+                bits = spikes_prev
+                for ax in reversed(all_axes):  # model, data, pod
+                    bits = jax.lax.all_gather(bits, ax, tiled=True)
             # --- phase 2 (integrate): windowed event-driven synaptic sum.
             # Local connectivity ("grey matter"): this device's neurons see
             # the presynaptic window anchored at their own global offset —

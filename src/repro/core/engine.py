@@ -216,9 +216,8 @@ class EventEngine:
         counts = jnp.asarray(self.encode_axons(axon_inputs))
         self.V, self.key, spikes, pr, rr = self._jit_step(
             self.V, self.key, counts, self.tables)
-        self.counter.pointer_reads += int(pr)
-        self.counter.row_reads += int(rr)
-        self._spikes = np.asarray(spikes)
+        self.counter.tally(pr, rr)
+        self._spikes = np.asarray(spikes, bool)
         return self._spikes
 
     def run(self, schedule) -> np.ndarray:
@@ -238,9 +237,8 @@ class EventEngine:
             return out
         self.V, self.key, spikes, prs, rrs = self._jit_run(
             self.V, self.key, jnp.asarray(counts), self.tables)
-        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
-        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
-        spikes = np.asarray(spikes)
+        self.counter.tally(prs, rrs)
+        spikes = np.asarray(spikes, bool)
         if T:
             self._spikes = spikes[-1]
         return spikes
@@ -274,10 +272,9 @@ class EventEngine:
             return out
         spikes, prs, rrs = self._jit_run_batch(self.key, jnp.asarray(counts),
                                                self.tables)
-        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
-        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
+        self.counter.tally(prs, rrs)
         self.key, _ = jax.random.split(self.key)
-        return np.asarray(spikes)
+        return np.asarray(spikes, bool)
 
     def read_membrane(self, ids: Sequence[int]) -> List[int]:
         V = np.asarray(self.V)

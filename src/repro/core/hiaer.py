@@ -119,13 +119,17 @@ class HiAERNetwork:
                  axon_placement: Optional[Dict[int, int]] = None,
                  seed: int = 0, flat=None, neuron_core=None,
                  axon_core=None, shards=None, axon_ndest=None,
-                 neuron_ndest=None):
+                 neuron_ndest=None, packed: bool = True):
         """Either pass the legacy adjacency dicts (axon_syn/neuron_syn;
         placement, shards, and traffic tables are derived here), or pass
         the compiler's prebuilt pieces (neuron_core, axon_core, shards,
         axon_ndest, neuron_ndest — all five together) and skip the
-        per-dict derivation entirely (the core.compile staged path)."""
+        per-dict derivation entirely (the core.compile staged path).
+        `packed` selects the bit-packed spike wire format
+        (`kernels.exchange.exchange_packed`, uint32 presence words) —
+        bit-exact vs the unpacked int32 exchange, default on."""
         self.image = image
+        self.packed = bool(packed)
         self.n = n_neurons
         self.outputs = list(outputs)
         self.flat = flat if flat is not None else image.flatten()
@@ -183,6 +187,8 @@ class HiAERNetwork:
                                  n_neurons).astype(np.int32)
         pos_of_neuron = (sh.core_of_neuron.astype(np.int64) * sh.n_max
                          + sh.local_id).astype(np.int32)
+        pos_word, pos_bit = exch_k.packed_positions(
+            sh.core_of_neuron, sh.local_id, sh.n_max)
         self.shard_rebuilds = 0        # per-core weight-table uploads
         self._tables = HiAERTables(
             entry_w=jnp.asarray(sh.entry_w, jnp.int32),
@@ -200,7 +206,9 @@ class HiAERNetwork:
             exchange=exch_k.ExchangeTables(
                 pos_of_neuron=jnp.asarray(pos_of_neuron),
                 axon_ndest=jnp.asarray(axon_ndest),
-                neuron_ndest=jnp.asarray(neuron_ndest)),
+                neuron_ndest=jnp.asarray(neuron_ndest),
+                pos_word=jnp.asarray(pos_word),
+                pos_bit=jnp.asarray(pos_bit)),
             axon_rows=jnp.asarray(self.flat.axon_rows),
             axon_present=jnp.asarray(self.flat.axon_present),
             neuron_rows=jnp.asarray(self.flat.neuron_rows),
@@ -305,8 +313,12 @@ class HiAERNetwork:
         Vc_mid, spikes_c = nrn.fire_phase_from_u(
             Vc, tables.theta, tables.nu, tables.lam, tables.is_lif, uc)
         # hierarchical spike exchange: every core learns the global fired
-        # vector; per-level deliveries are measured as they happen
-        neuron_counts, traffic = exch_k.exchange(
+        # vector; per-level deliveries are measured as they happen. The
+        # wire format is a trace-time switch: packed uint32 presence
+        # words (32x narrower, consumed by word gather + bit extract) or
+        # the int32 event lanes — bit-exact either way.
+        xfn = exch_k.exchange_packed if self.packed else exch_k.exchange
+        neuron_counts, traffic = xfn(
             spikes_c, axon_counts, self.spec, tables.exchange)
         _, _, pr, rr = route_k.access_counts(
             axon_counts, neuron_counts, tables.axon_rows,
@@ -347,13 +359,6 @@ class HiAERNetwork:
         return spikes, prs, rrs, trs
 
     # ----------------------------------------------------------- stepping
-    def _tally(self, prs, rrs, trs):
-        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
-        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
-        self.counter.add_level_events(
-            np.asarray(trs, np.int64).reshape(-1, exch_k.N_LEVELS)
-            .sum(axis=0))
-
     def step(self, axon_inputs: Sequence[int]) -> np.ndarray:
         """One timestep; returns bool (n,) spikes fired this step."""
         self.counter.timesteps += 1
@@ -361,8 +366,8 @@ class HiAERNetwork:
                                               self.n_axon_slots))
         self.Vc, self.key, spikes, pr, rr, tr = self._jit_step(
             self.Vc, self.key, counts, self._tables)
-        self._tally(pr, rr, tr)
-        self._spikes = np.asarray(spikes)
+        self.counter.tally(pr, rr, tr)
+        self._spikes = np.asarray(spikes, bool)
         return self._spikes
 
     def run(self, schedule) -> np.ndarray:
@@ -373,8 +378,8 @@ class HiAERNetwork:
         self.counter.timesteps += T
         self.Vc, self.key, spikes, prs, rrs, trs = self._jit_run(
             self.Vc, self.key, jnp.asarray(counts), self._tables)
-        self._tally(prs, rrs, trs)
-        spikes = np.asarray(spikes)
+        self.counter.tally(prs, rrs, trs)
+        spikes = np.asarray(spikes, bool)
         if T:
             self._spikes = spikes[-1]
         return spikes
@@ -391,9 +396,9 @@ class HiAERNetwork:
         self.counter.timesteps += B * T
         spikes, prs, rrs, trs = self._jit_run_batch(
             self.key, jnp.asarray(counts), self._tables)
-        self._tally(prs, rrs, trs)
+        self.counter.tally(prs, rrs, trs)
         self.key, _ = jax.random.split(self.key)
-        return np.asarray(spikes)
+        return np.asarray(spikes, bool)
 
     def read_membrane(self, ids: Sequence[int]) -> List[int]:
         V = np.asarray(self.V)

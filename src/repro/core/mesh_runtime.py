@@ -18,9 +18,20 @@ C // D consecutive cores:
   * the spike exchange is the hierarchical all-gather of Fig. 1b lowered
     to real collectives: `kernels.exchange.collective_stages` plans one
     grouped `lax.all_gather` per hierarchy level (NoC -> FireFly ->
-    Ethernet) and `hierarchical_gather_collective` runs them inside the
-    shard_mapped step, reproducing `hierarchical_gather`'s core-ordered
-    global vector on every device;
+    Ethernet) and `hierarchical_gather_collective[_packed]` runs them
+    inside the shard_mapped step, reproducing `hierarchical_gather`'s
+    core-ordered global vector on every device. The wire format is
+    BIT-PACKED by default (`packed=True`): fired flags travel as uint32
+    presence words (`pack_events`, ceil(n_max/32) words per core) and
+    destinations read their neurons' bits with one word gather + bit
+    extract (`route.packed_gather_counts`) — per-level collective bytes
+    and the replicated event-vector floor both drop ~32x, the
+    address-event-bits wire of the paper's fabric;
+  * `run_batch` folds the sample batch INTO the device-local state
+    inside shard_map (rank-stable on jax 0.4.x, unlike
+    vmap-of-shard_map): B samples share one collective per hierarchy
+    level per timestep, recovering the monolithic engine's batched
+    throughput at mesh scale;
   * phase 2 is the same scatter-free ragged segment sum as hiaer, run on
     the device-local entries with device-rebased CSR offsets.
 
@@ -82,6 +93,8 @@ class MeshTables(NamedTuple):
     is_lif: jnp.ndarray            # (C, n_max) bool, pad = False
     # replicated, P()
     pos_of_neuron: jnp.ndarray     # (N,) flat core * n_max + local slot
+    pos_word: jnp.ndarray          # (N,) int32 packed-wire word index
+    pos_bit: jnp.ndarray           # (N,) int32 bit within the word
     axon_ndest: jnp.ndarray        # (A, N_LEVELS) int32
     neuron_ndest: jnp.ndarray      # (N, N_LEVELS) int32
     axon_rows: jnp.ndarray         # (A,) int32 monolithic pointer spans
@@ -111,8 +124,9 @@ class MeshNetwork:
                  outputs: Sequence[int], *, hierarchy: Hierarchy,
                  flat, neuron_core, axon_core, shards: CoreShards,
                  axon_ndest, neuron_ndest, seed: int = 0,
-                 n_devices: Optional[int] = None):
+                 n_devices: Optional[int] = None, packed: bool = True):
         self.n = n_neurons
+        self.packed = bool(packed)
         self.outputs = list(outputs)
         self.flat = flat
         self.n_axon_slots = int(flat.axon_rows.shape[0])
@@ -148,6 +162,8 @@ class MeshNetwork:
                                  n_neurons).astype(np.int32)
         pos_of_neuron = (sh.core_of_neuron.astype(np.int64) * sh.n_max
                          + sh.local_id).astype(np.int32)
+        pos_word, pos_bit = exch_k.packed_positions(
+            sh.core_of_neuron, sh.local_id, sh.n_max)
 
         # ---- per-device entry shards: each device's cores' ragged
         # entries concatenated, padded to the largest per-device span
@@ -185,6 +201,7 @@ class MeshNetwork:
             is_lif=shd(_to_cores(np.asarray(is_lif, bool),
                                  core_nids_idx, False)),
             pos_of_neuron=rep(pos_of_neuron),
+            pos_word=rep(pos_word), pos_bit=rep(pos_bit),
             axon_ndest=rep(axon_ndest), neuron_ndest=rep(neuron_ndest),
             axon_rows=rep(flat.axon_rows),
             axon_present=rep(flat.axon_present),
@@ -199,11 +216,20 @@ class MeshNetwork:
         self.shard_rebuilds = 0        # per-DEVICE weight-shard uploads
         self._spikes = np.zeros((n_neurons,), bool)
 
-        in_specs = (P(AXIS), P(), P(),
-                    MeshTables(*([P(AXIS)] * 8 + [P()] * 7)))
+        table_specs = MeshTables(*([P(AXIS)] * 8 + [P()] * 9))
         self._smapped = shard_map(
-            self._device_step, mesh=self.mesh, in_specs=in_specs,
+            self._device_step, mesh=self.mesh,
+            in_specs=(P(AXIS), P(), P(), table_specs),
             out_specs=(P(AXIS), P()), check_vma=False)
+        # the batched step: B samples folded into the device-local state
+        # (leading axis of Vc is the batch, the CORE axis stays the
+        # sharded one) — rank-stable on jax 0.4.x, unlike
+        # vmap-of-shard_map, and all B samples share one collective per
+        # hierarchy level per timestep.
+        self._smapped_batch = shard_map(
+            self._device_step, mesh=self.mesh,
+            in_specs=(P(None, AXIS), P(), P(), table_specs),
+            out_specs=(P(None, AXIS), P()), check_vma=False)
         self._jit_step = jax.jit(self._step_impl)
         self._jit_run = jax.jit(self._run_impl)
         self._jit_run_batch = jax.jit(self._run_batch_impl)
@@ -229,6 +255,21 @@ class MeshNetwork:
         dense weight image the hiaer tier used to replicate."""
         ip = self.cores_per_device * (self.shards.n_max + 1) * 4
         return [self._Epad * (4 + 4) + ip] * self.n_devices
+
+    def exchange_bytes_per_step(self, packed: Optional[bool] = None) -> int:
+        """Wire bytes one device receives per spike-exchange round under
+        this mesh's collective plan (`exch_k.exchange_bytes_per_step`);
+        `packed=None` reports the deployed wire format."""
+        return exch_k.exchange_bytes_per_step(
+            self.spec, self.n_devices, self.shards.n_max,
+            self.packed if packed is None else packed)
+
+    def event_vector_bytes(self, packed: Optional[bool] = None) -> int:
+        """Replicated global event-vector bytes per device — the
+        O(C * n_max) per-device floor the bitpacking cuts ~32x."""
+        return exch_k.event_vector_bytes(
+            self.spec, self.shards.n_max,
+            self.packed if packed is None else packed)
 
     # ------------------------------------------------------------- state
     @property
@@ -283,19 +324,36 @@ class MeshNetwork:
     # -------------------------------------------------- vectorized core
     def _device_step(self, Vc, u_ext, axon_counts, t: MeshTables):
         """The shard_mapped body: one device's cores for one timestep.
-        Vc (cpd, n_max); sharded table rows are this device's blocks;
-        u_ext/axon_counts and the replicated tables arrive whole."""
-        uc = u_ext[t.core_nids_idx]
+        Vc (cpd, n_max) — or (B, cpd, n_max) with a folded sample batch,
+        in which case u_ext/axon_counts carry a matching leading B and
+        all samples ride the SAME per-level collectives; sharded table
+        rows are this device's blocks; u_ext/axon_counts and the
+        replicated tables arrive whole."""
+        uc = jnp.take(u_ext, t.core_nids_idx, axis=-1)
         Vc_mid, spikes_c = nrn.fire_phase_from_u(
             Vc, t.theta, t.nu, t.lam, t.is_lif, uc)
-        # hierarchical exchange: one grouped all_gather per level
-        flat = exch_k.hierarchical_gather_collective(
-            spikes_c.astype(jnp.int32).reshape(-1), self._stages, AXIS)
-        neuron_counts = flat[t.pos_of_neuron]      # (N,) replicated
+        lead = spikes_c.shape[:-2]         # () or (B,)
+        if self.packed:
+            # bit-packed wire: pack fired flags to uint32 presence words
+            # BEFORE the hops, gather words, read bits at the
+            # destination — per-level bytes drop ~32x
+            words = exch_k.pack_events(spikes_c)
+            flat = exch_k.hierarchical_gather_collective_packed(
+                words.reshape(lead + (-1,)), self._stages, AXIS,
+                axis=len(lead))
+            neuron_counts = route_k.packed_gather_counts(
+                flat, t.pos_word, t.pos_bit)           # (..., N)
+        else:
+            flat = exch_k.hierarchical_gather_collective(
+                spikes_c.astype(jnp.int32).reshape(lead + (-1,)),
+                self._stages, AXIS, axis=len(lead))
+            neuron_counts = jnp.take(flat, t.pos_of_neuron, axis=-1)
         # phase 2 on the device-local ragged entries (pad item -> 0)
         item_counts = jnp.concatenate(
-            [axon_counts, neuron_counts, jnp.zeros((1,), jnp.int32)])
-        vals = t.entry_w[0] * item_counts[t.entry_item[0]]
+            [axon_counts, neuron_counts,
+             jnp.zeros(lead + (1,), jnp.int32)], axis=-1)
+        vals = t.entry_w[0] * jnp.take(item_counts, t.entry_item[0],
+                                       axis=-1)
         syn_c = route_k.ragged_segment_sum(vals, t.csr_indptr)
         Vc_next = nrn.integrate_phase(Vc_mid, syn_c)
         return Vc_next, neuron_counts
@@ -332,33 +390,46 @@ class MeshNetwork:
         return (Vc, key) + outs
 
     def _run_batch_impl(self, key, counts, tables):
-        """B independent samples; counts: (B, T, A) int32. Sample b runs
-        from V = 0 under stream fold_in(key, b) — identical to
-        EventEngine.run_batch. Samples run under one sequential scan
-        (not vmap: the shard_mapped step stays rank-stable), which is
-        output-identical since samples are independent."""
+        """B independent samples in ONE sharded stream; counts:
+        (B, T, A) int32. Sample b runs from V = 0 under stream
+        fold_in(key, b) — identical to EventEngine.run_batch. The batch
+        axis is FOLDED into the device-local state arrays inside
+        shard_map (`_smapped_batch`; rank-stable on jax 0.4.x, unlike
+        vmap-of-shard_map), so the scan is over T only and all B
+        samples share one grouped all_gather per hierarchy level per
+        timestep instead of B of them. Output-identical to the retired
+        per-sample sequential scan: samples are independent and every
+        per-sample op is elementwise in the batch axis."""
         B = counts.shape[0]
         keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(
             jnp.arange(B))
 
-        def body(carry, xs):
-            k, c = xs
-            V0 = jnp.zeros(self.Vc.shape, jnp.int32)
-            _, _, spikes, prs, rrs, trs = self._run_impl(V0, k, c,
-                                                         tables)
-            return carry, (spikes, prs, rrs, trs)
+        def body(carry, c):                # c: (B, A) — step for all B
+            Vc, keys = carry
+            ks = jax.vmap(jax.random.split)(keys)     # (B, 2, key)
+            keys_next, subs = ks[:, 0], ks[:, 1]
+            # per-sample global-order noise draws (PRNG parity), stacked
+            u = jax.vmap(lambda s: nrn.noise_draw(s, self.n))(subs)
+            u_ext = jnp.concatenate(
+                [u, jnp.zeros((B, 1), jnp.int32)], axis=1)
+            Vc, neuron_counts = self._smapped_batch(Vc, u_ext, c,
+                                                    tables)
+            _, _, pr, rr = route_k.access_counts(
+                c, neuron_counts, tables.axon_rows, tables.axon_present,
+                tables.neuron_rows, tables.neuron_present)   # (B,) each
+            traffic = (c @ tables.axon_ndest
+                       + neuron_counts @ tables.neuron_ndest)
+            return (Vc, keys_next), (neuron_counts.astype(bool), pr,
+                                     rr, traffic)
 
-        _, outs = jax.lax.scan(body, 0, (keys, counts))
-        return outs
+        V0 = jnp.zeros((B,) + self.Vc.shape, jnp.int32)
+        _, (spikes, prs, rrs, trs) = jax.lax.scan(
+            body, (V0, keys), jnp.swapaxes(counts, 0, 1))
+        # scan stacks per-timestep leading axes: (T, B, ...) -> (B, T, ...)
+        return (jnp.swapaxes(spikes, 0, 1), prs, rrs,
+                jnp.swapaxes(trs, 0, 1))
 
     # ----------------------------------------------------------- stepping
-    def _tally(self, prs, rrs, trs):
-        self.counter.pointer_reads += int(np.asarray(prs, np.int64).sum())
-        self.counter.row_reads += int(np.asarray(rrs, np.int64).sum())
-        self.counter.add_level_events(
-            np.asarray(trs, np.int64).reshape(-1, exch_k.N_LEVELS)
-            .sum(axis=0))
-
     def step(self, axon_inputs: Sequence[int]) -> np.ndarray:
         """One timestep; returns bool (n,) spikes fired this step."""
         self.counter.timesteps += 1
@@ -366,8 +437,8 @@ class MeshNetwork:
                                               self.n_axon_slots))
         self.Vc, self.key, spikes, pr, rr, tr = self._jit_step(
             self.Vc, self.key, counts, self._tables)
-        self._tally(pr, rr, tr)
-        self._spikes = np.asarray(spikes)
+        self.counter.tally(pr, rr, tr)
+        self._spikes = np.asarray(spikes, bool)
         return self._spikes
 
     def run(self, schedule) -> np.ndarray:
@@ -377,15 +448,17 @@ class MeshNetwork:
         self.counter.timesteps += T
         self.Vc, self.key, spikes, prs, rrs, trs = self._jit_run(
             self.Vc, self.key, jnp.asarray(counts), self._tables)
-        self._tally(prs, rrs, trs)
-        spikes = np.asarray(spikes)
+        self.counter.tally(prs, rrs, trs)
+        spikes = np.asarray(spikes, bool)
         if T:
             self._spikes = spikes[-1]
         return spikes
 
     def run_batch(self, schedules) -> np.ndarray:
-        """B samples x T timesteps per dispatch; same contract as
-        EventEngine.run_batch. Returns (B, T, n) bool spikes."""
+        """B samples x T timesteps in ONE batched sharded dispatch;
+        same contract as EventEngine.run_batch. Returns (B, T, n) bool
+        spikes — the wire between devices carries packed uint32
+        presence words (packed=True), never int32 event lanes."""
         if len(schedules) == 0:
             return np.zeros((0, 0, self.n), bool)
         counts = sched.encode_batch(schedules, self.n_axon_slots)
@@ -393,9 +466,9 @@ class MeshNetwork:
         self.counter.timesteps += B * T
         spikes, prs, rrs, trs = self._jit_run_batch(
             self.key, jnp.asarray(counts), self._tables)
-        self._tally(prs, rrs, trs)
+        self.counter.tally(prs, rrs, trs)
         self.key, _ = jax.random.split(self.key)
-        return np.asarray(spikes)
+        return np.asarray(spikes, bool)
 
     def read_membrane(self, ids: Sequence[int]) -> List[int]:
         V = np.asarray(self.V)

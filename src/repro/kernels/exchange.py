@@ -11,8 +11,21 @@ a reshape inside the jit-compiled step, and the loop is the exact seam
 where `shard_map` + `lax.all_gather` slot in when the core axis becomes
 a real device mesh — `collective_stages` / `hierarchical_gather_collective`
 realize that lowering for the mesh tier (core.mesh_runtime), one grouped
-all-gather per hierarchy level (cf. core.distributed_engine's dense
-dry-run).
+all-gather per hierarchy level (core.distributed_engine's pod-scale
+dry-run consumes the same primitives).
+
+The wire format is bit-packed by default: the fabric moves address-event
+BITS, so fired flags pack to uint32 presence words (`pack_events`,
+ceil(n_max/32) words per core) before any hop, and destinations read
+their neurons' bits with one word gather + bit extract
+(`kernels.route.packed_gather_counts` at `packed_positions`) — never a
+full unpack. `exchange_packed` and
+`hierarchical_gather_collective_packed` are the packed twins of the
+int32-lane paths (`hierarchical_gather`'s folds are width-generic and
+carry presence words as-is), bit-exact on counts and traffic since fired counts
+are 0/1 by construction; `exchange_bytes_per_step` /
+`event_vector_bytes` account the ~32x the packing buys per level and
+per device.
 
 The exchange also *measures* the traffic the partitioner's
 `traffic_cost` only estimates: `build_dest_tables` precomputes, for
@@ -33,8 +46,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import LEVEL_NAMES
+from repro.kernels import route as route_k
 
 N_LEVELS = len(LEVEL_NAMES)    # local / NoC / FireFly / Ethernet
+PACK_BITS = 32                 # presence bits per packed uint32 word
+
+
+# ------------------------------------------------------ packed wire format
+# The HiAER fabric moves address-event BITS, not int32 lanes: a fired
+# flag is one bit on the wire. The packed representation stores each
+# core's n_max presence bits as ceil(n_max / 32) uint32 words
+# (LSB-first within a word), cutting every exchanged byte ~32x. Packing
+# is lossless exactly because fired flags are 0/1; multi-event sources
+# (axons driven k times per step) never ride the packed wire — their
+# count vector is replicated input, not exchanged.
+
+def packed_words(width: int) -> int:
+    """Words per packed event vector of `width` presence bits."""
+    return -(-max(int(width), 0) // PACK_BITS)
+
+
+def pack_events(bits):
+    """(..., n) {0,1} flags -> (..., ceil(n/32)) uint32 presence words,
+    bit i of word w = element w*32 + i (LSB-first). Ragged tails
+    (n % 32 != 0) pad with zero bits; `unpack_events(_, n)` inverts
+    exactly. jit/vmap/shard_map friendly (static shapes only)."""
+    n = bits.shape[-1]
+    W = packed_words(n)
+    pad = [(0, 0)] * (bits.ndim - 1) + [(0, W * PACK_BITS - n)]
+    b = jnp.pad(bits.astype(jnp.uint32), pad)
+    b = b.reshape(bits.shape[:-1] + (W, PACK_BITS))
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_events(words, width: int):
+    """Inverse of `pack_events`: (..., W) uint32 -> (..., width) int32
+    presence flags (the first `width` bits, LSB-first per word)."""
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (-1,))
+    return flat[..., :width].astype(jnp.int32)
+
+
+def packed_positions(core, local, n_max: int):
+    """Host-side word/bit coordinates of per-core slot (core, local) in
+    the packed core-ordered wire vector: each core contributes
+    `packed_words(n_max)` words, so slot (c, l) lives at bit l % 32 of
+    word c * Wc + l // 32. These are the static gather tables the
+    destination side uses to read presence bits without a full unpack
+    (`kernels.route.packed_gather_counts`)."""
+    Wc = packed_words(n_max)
+    core = np.asarray(core, np.int64)
+    local = np.asarray(local, np.int64)
+    return ((core * Wc + local // PACK_BITS).astype(np.int32),
+            (local % PACK_BITS).astype(np.int32))
 
 
 class HierSpec(NamedTuple):
@@ -105,18 +171,63 @@ def collective_stages(spec: HierSpec, n_dev: int) -> List[List[List[int]]]:
     return stages
 
 
-def hierarchical_gather_collective(x_local, stages, axis_name: str):
+def hierarchical_gather_collective(x_local, stages, axis_name: str,
+                                   axis: int = 0):
     """`hierarchical_gather` over a real device mesh: `x_local` is this
     device's flattened per-core block ((C // n_dev) * n_max,); each
     stage is one grouped tiled `lax.all_gather` along `axis_name` (the
     NoC / FireFly / Ethernet hop of Fig. 1b). Returns the (C * n_max,)
     core-ordered global vector, replicated on every device. Must run
-    inside `shard_map` over the 1-D core/device mesh axis."""
+    inside `shard_map` over the 1-D core/device mesh axis. `axis` is
+    the array axis the gather concatenates along — leading axes before
+    it (e.g. a folded sample batch) ride every hop unchanged, so B
+    samples share one collective per level."""
     for groups in stages:
         x_local = jax.lax.all_gather(x_local, axis_name,
                                      axis_index_groups=groups,
-                                     tiled=True)
+                                     tiled=True, axis=axis)
     return x_local
+
+
+def hierarchical_gather_collective_packed(words_local, stages,
+                                          axis_name: str, axis: int = 0):
+    """The packed-wire device-mesh exchange: every grouped
+    `lax.all_gather` in `stages` runs over uint32 presence WORDS
+    ((C // n_dev) * Wc per device) instead of int32 event lanes —
+    per-level collective bytes and the replicated event-vector floor
+    both drop ~32x. The hop plan is identical to the unpacked
+    collective; only the payload dtype/width changes."""
+    return hierarchical_gather_collective(words_local, stages, axis_name,
+                                          axis=axis)
+
+
+def exchange_bytes_per_step(spec: HierSpec, n_dev: int, n_max: int,
+                            packed: bool = True) -> int:
+    """Wire bytes one device RECEIVES per spike-exchange round under the
+    `collective_stages` plan: at each stage every device gathers
+    (group_size - 1) peer blocks of the current aggregate size, which
+    then becomes the next stage's block. The packed wire carries
+    `packed_words(n_max)` uint32 words per core; the unpacked wire one
+    int32 lane per neuron slot — the ~32x the bitpacking buys. n_dev = 1
+    has no collectives (0 wire bytes); see `event_vector_bytes` for the
+    replicated per-device floor that shrinks even then."""
+    per_core = packed_words(n_max) if packed else max(int(n_max), 0)
+    block = (spec.n_cores // n_dev) * per_core * 4
+    total = 0
+    for groups in collective_stages(spec, n_dev):
+        m = len(groups[0])
+        total += (m - 1) * block
+        block *= m
+    return total
+
+
+def event_vector_bytes(spec: HierSpec, n_max: int,
+                       packed: bool = True) -> int:
+    """Bytes of the replicated global event vector every device holds
+    after the exchange — the per-device O(C * n_max) floor ROADMAP
+    flags at 160M neurons. Packed: C * ceil(n_max/32) uint32 words."""
+    per_core = packed_words(n_max) if packed else max(int(n_max), 0)
+    return spec.n_cores * per_core * 4
 
 
 def build_dest_tables(axon_syn: Dict[int, List[Tuple[int, int]]],
@@ -196,10 +307,15 @@ def build_dest_tables_columns(pre_item: np.ndarray, post: np.ndarray,
 
 class ExchangeTables(NamedTuple):
     """Device-resident exchange state (pytree — passed as a traced
-    argument so placements/weights swap without recompiling)."""
+    argument so placements/weights swap without recompiling).
+    `pos_word`/`pos_bit` are the packed-wire coordinates of each neuron
+    (`packed_positions` of its (core, local) slot) — the word-gather
+    tables of the bit-packed exchange."""
     pos_of_neuron: jnp.ndarray     # (N,) flat (core * n_max + local) slot
     axon_ndest: jnp.ndarray        # (A, N_LEVELS) int32
     neuron_ndest: jnp.ndarray      # (N, N_LEVELS) int32
+    pos_word: jnp.ndarray          # (N,) int32 packed-wire word index
+    pos_bit: jnp.ndarray           # (N,) int32 bit within the word
 
 
 def exchange(spikes_core, axon_counts, spec: HierSpec,
@@ -212,6 +328,25 @@ def exchange(spikes_core, axon_counts, spec: HierSpec,
     multiplicity of the routing phase."""
     flat = hierarchical_gather(spikes_core.astype(jnp.int32), spec)
     neuron_counts = flat[tables.pos_of_neuron]
+    traffic = (axon_counts @ tables.axon_ndest
+               + neuron_counts @ tables.neuron_ndest)
+    return neuron_counts, traffic
+
+
+def exchange_packed(spikes_core, axon_counts, spec: HierSpec,
+                    tables: ExchangeTables):
+    """Bit-exact twin of `exchange` over the packed uint32 wire format:
+    fired flags are packed to presence words BEFORE the level folds, and
+    each destination reads its neurons' bits with one word gather + bit
+    extract (`kernels.route.packed_gather_counts`) — never a full
+    unpack, since fired counts are 0/1 by construction. Traffic tallies
+    are computed from the recovered counts against the same static ndest
+    tables, so per-level traffic is integer-identical to the unpacked
+    exchange."""
+    words = pack_events(spikes_core)
+    flat = hierarchical_gather(words, spec)
+    neuron_counts = route_k.packed_gather_counts(flat, tables.pos_word,
+                                                 tables.pos_bit)
     traffic = (axon_counts @ tables.axon_ndest
                + neuron_counts @ tables.neuron_ndest)
     return neuron_counts, traffic

@@ -205,17 +205,20 @@ def csr_segment_sum(vals, indptr):
 
 
 def ragged_segment_sum(vals, indptr):
-    """Segment sums of the FLAT `vals` (nnz,) over segments delimited by
-    ABSOLUTE offsets `indptr` (..., n_segments + 1): one inclusive
-    cumsum + fancy boundary gathers. Unlike `csr_segment_sum` (which
-    broadcasts a batched vals axis), the leading axes of `indptr` all
-    index into the single flat value array — the ragged per-core layout
-    of `hbm.CoreShards`, where core c's segment offsets live in row c of
-    `indptr` and shard memory stays linear in synapses. Exact under
-    int32 wraparound (cs[j] - cs[i] recovers the segment sum mod 2^32)."""
-    zero = jnp.zeros((1,), vals.dtype)
-    cs = jnp.concatenate([zero, jnp.cumsum(vals)])
-    return cs[indptr[..., 1:]] - cs[indptr[..., :-1]]
+    """Segment sums of the FLAT `vals` (..., nnz) over segments
+    delimited by ABSOLUTE offsets `indptr` (..., n_segments + 1): one
+    inclusive cumsum + fancy boundary gathers. Unlike `csr_segment_sum`
+    (which broadcasts a batched vals axis against matching indptr
+    axes), the leading axes of `indptr` all index into the same flat
+    value axis — the ragged per-core layout of `hbm.CoreShards`, where
+    core c's segment offsets live in row c of `indptr` and shard memory
+    stays linear in synapses. Leading axes of `vals` (a folded sample
+    batch) broadcast through: (B, nnz) vals x (C, S + 1) indptr ->
+    (B, C, S). Exact under int32 wraparound (cs[j] - cs[i] recovers the
+    segment sum mod 2^32)."""
+    zero = jnp.zeros(vals.shape[:-1] + (1,), vals.dtype)
+    cs = jnp.concatenate([zero, jnp.cumsum(vals, axis=-1)], axis=-1)
+    return cs[..., indptr[..., 1:]] - cs[..., indptr[..., :-1]]
 
 
 def accumulate_csr(tables: RouteTables, row_gate, n_neurons: int):
@@ -237,12 +240,46 @@ def access_counts(axon_counts, neuron_counts, axon_rows, axon_present,
     `AccessCounter` semantics, shared by the monolithic engine
     (`route_event_counts`) and the sharded hiaer engine (which counts
     against the monolithic spans so its tallies stay bit-exact vs
-    `backend="engine"`)."""
+    `backend="engine"`). Counts may carry leading batch axes (the
+    batched mesh step): tallies reduce over the item axis only, one
+    scalar pair per sample."""
     ax_ct = axon_counts * axon_present
     nr_ct = neuron_counts * neuron_present
-    pointer_reads = ax_ct.sum() + nr_ct.sum()
-    row_reads = (ax_ct * axon_rows).sum() + (nr_ct * neuron_rows).sum()
+    pointer_reads = ax_ct.sum(axis=-1) + nr_ct.sum(axis=-1)
+    row_reads = ((ax_ct * axon_rows).sum(axis=-1)
+                 + (nr_ct * neuron_rows).sum(axis=-1))
     return ax_ct, nr_ct, pointer_reads, row_reads
+
+
+# --------------------------------------------------- packed-wire consume
+def popcount32(x):
+    """Per-word bit population count of uint32 presence words (SWAR —
+    the FPGA's event-count reduction over a packed spike word). Returns
+    int32; summing it over a packed event vector counts the fired
+    events without ever unpacking."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def packed_gather_counts(words, word_idx, bit_idx):
+    """Per-item 0/1 event counts straight off the packed wire: one word
+    gather + bit extract per destination item — no full unpack of the
+    global event vector. `words` (..., W) uint32 presence words (leading
+    axes = folded sample batch); `word_idx`/`bit_idx` (N,) int32 from
+    `kernels.exchange.packed_positions`. Returns (..., N) int32.
+
+    Presence bits carry counts of 0/1 exactly — which fired-neuron
+    events always are. Multi-event sources (axons driven k > 1 times
+    per step) cannot ride a presence bit; their counts stay on the
+    replicated int32 side (or fall back to `exchange.unpack_events` of
+    a per-count bit plane), which is why only the spike vector is
+    packed on the wire."""
+    w = jnp.take(words, word_idx, axis=-1)
+    return ((w >> bit_idx.astype(jnp.uint32)) & jnp.uint32(1)) \
+        .astype(jnp.int32)
 
 
 def route_event_counts(tables: RouteTables, axon_counts, spikes):

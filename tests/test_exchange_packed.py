@@ -1,0 +1,194 @@
+"""Bit-packed spike wire format (kernels.exchange pack/unpack +
+kernels.route packed consume) — the invariants the 32x exchange cut
+rests on:
+
+  * pack -> unpack is the identity for every width, including ragged
+    tails (width % 32 != 0), and word popcounts equal fired counts;
+  * pack -> hierarchical_gather (over words) -> unpack equals the
+    unpacked hierarchical_gather for random widths AND random
+    hierarchies (the property pinning the wire format itself);
+  * destinations can read any neuron's presence bit with one word
+    gather + bit extract (`packed_gather_counts` at
+    `packed_positions`), never a full unpack;
+  * `exchange_packed` is integer-identical to `exchange` on counts and
+    per-level traffic, and the byte accounting matches the collective
+    plan stage by stage.
+
+The multi-device half of the contract (packed words over real grouped
+`lax.all_gather`s, batched sharded run_batch) lives in
+tests/test_mesh_runtime.py's 8-forced-device subprocess suite.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st
+
+from repro.kernels import exchange as exch_k
+from repro.kernels import route as route_k
+from repro.kernels.exchange import (HierSpec, exchange_bytes_per_step,
+                                    event_vector_bytes, pack_events,
+                                    packed_positions, packed_words,
+                                    unpack_events)
+
+
+# ------------------------------------------------------- pack primitives
+def test_pack_unpack_roundtrip_ragged_tails():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 31, 32, 33, 63, 64, 65, 100, 256):
+        bits = rng.integers(0, 2, (3, n)).astype(np.int32)
+        words = pack_events(jnp.asarray(bits))
+        assert words.dtype == jnp.uint32
+        assert words.shape == (3, packed_words(n))
+        np.testing.assert_array_equal(np.asarray(unpack_events(words, n)),
+                                      bits)
+        # popcount over the words counts the fired events exactly
+        assert int(route_k.popcount32(words).sum()) == int(bits.sum())
+
+
+def test_pack_is_lsb_first():
+    # bit i of word w encodes element w*32 + i
+    bits = np.zeros((70,), np.int32)
+    bits[[0, 1, 33, 64, 69]] = 1
+    words = np.asarray(pack_events(jnp.asarray(bits)))
+    assert words.tolist() == [0b11, 1 << 1, (1 << 0) | (1 << 5)]
+
+
+def test_packed_gather_counts_reads_single_bits():
+    rng = np.random.default_rng(1)
+    spec = HierSpec(2, 2, 2)
+    n_max = 37                                   # ragged tail
+    bits = rng.integers(0, 2, (spec.n_cores, n_max)).astype(bool)
+    words = exch_k.hierarchical_gather(pack_events(jnp.asarray(bits)),
+                                       spec)
+    flat = np.asarray(exch_k.hierarchical_gather(
+        jnp.asarray(bits, jnp.int32), spec))
+    core = np.repeat(np.arange(spec.n_cores), n_max)
+    local = np.tile(np.arange(n_max), spec.n_cores)
+    wi, bi = packed_positions(core, local, n_max)
+    got = route_k.packed_gather_counts(words, jnp.asarray(wi),
+                                       jnp.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(got), flat)
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+       st.integers(1, 70), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_property_packed_gather_equals_unpacked(servers, fpgas, cores,
+                                                n_max, seed):
+    """pack -> gather(words) -> unpack == gather(bits) for random
+    widths (incl. n_max % 32 != 0 ragged tails) and hierarchies."""
+    spec = HierSpec(servers, fpgas, cores)
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (spec.n_cores, n_max)).astype(bool)
+    ref = np.asarray(exch_k.hierarchical_gather(
+        jnp.asarray(bits, jnp.int32), spec))
+    words = exch_k.hierarchical_gather(pack_events(jnp.asarray(bits)),
+                                       spec)
+    # full unpack of the core-ordered word vector: per-core word blocks
+    Wc = packed_words(n_max)
+    per_core = unpack_events(words.reshape(spec.n_cores, Wc), n_max)
+    np.testing.assert_array_equal(
+        np.asarray(per_core).reshape(-1), ref)
+    # and the gather-one-bit consume path agrees everywhere
+    core = np.repeat(np.arange(spec.n_cores), n_max)
+    local = np.tile(np.arange(n_max), spec.n_cores)
+    wi, bi = packed_positions(core, local, n_max)
+    got = route_k.packed_gather_counts(words, jnp.asarray(wi),
+                                       jnp.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+# -------------------------------------------------- exchange equivalence
+def _random_tables(rng, spec, n_max, n_neurons, n_axons):
+    """ExchangeTables over a random neuron placement (every neuron on a
+    random (core, local) slot, slots unique)."""
+    C = spec.n_cores
+    slots = rng.choice(C * n_max, n_neurons, replace=False)
+    core, local = slots // n_max, slots % n_max
+    wi, bi = packed_positions(core, local, n_max)
+    return core, local, exch_k.ExchangeTables(
+        pos_of_neuron=jnp.asarray((core * n_max + local), jnp.int32),
+        axon_ndest=jnp.asarray(
+            rng.integers(0, 4, (n_axons, exch_k.N_LEVELS)), jnp.int32),
+        neuron_ndest=jnp.asarray(
+            rng.integers(0, 4, (n_neurons, exch_k.N_LEVELS)), jnp.int32),
+        pos_word=jnp.asarray(wi), pos_bit=jnp.asarray(bi))
+
+
+def test_exchange_packed_matches_unpacked():
+    rng = np.random.default_rng(2)
+    for spec, n_max in ((HierSpec(2, 2, 2), 33), (HierSpec(1, 2, 3), 5),
+                        (HierSpec(1, 1, 1), 64)):
+        n_neurons = spec.n_cores * n_max // 2 + 1
+        core, local, tables = _random_tables(rng, spec, n_max,
+                                             n_neurons, n_axons=4)
+        spikes_core = np.zeros((spec.n_cores, n_max), bool)
+        fired = rng.random(n_neurons) < 0.4
+        spikes_core[core[fired], local[fired]] = True
+        axon_counts = jnp.asarray(rng.integers(0, 3, (4,)), jnp.int32)
+        a = exch_k.exchange(jnp.asarray(spikes_core), axon_counts, spec,
+                            tables)
+        b = exch_k.exchange_packed(jnp.asarray(spikes_core), axon_counts,
+                                   spec, tables)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        np.testing.assert_array_equal(np.asarray(a[0]) != 0, fired)
+
+
+# ------------------------------------------------------- byte accounting
+def test_exchange_bytes_accounting():
+    spec = HierSpec(2, 2, 2)
+    # 8 devices, n_max=128: packed blocks of 4 words grow 16->32->64 B
+    assert exchange_bytes_per_step(spec, 8, 128, packed=True) == 112
+    assert exchange_bytes_per_step(spec, 8, 128, packed=False) == 3584
+    assert event_vector_bytes(spec, 128, packed=True) == 128
+    assert event_vector_bytes(spec, 128, packed=False) == 4096
+    # one device: no collectives, but the replicated floor still shrinks
+    assert exchange_bytes_per_step(spec, 1, 128, packed=True) == 0
+    assert event_vector_bytes(spec, 33, packed=True) \
+        == spec.n_cores * 2 * 4
+    # the ratio is exactly n_max / ceil(n_max/32) at every device count
+    for n_dev in (2, 4, 8):
+        for n_max in (31, 32, 33, 128):
+            p = exchange_bytes_per_step(spec, n_dev, n_max, packed=True)
+            u = exchange_bytes_per_step(spec, n_dev, n_max, packed=False)
+            assert u * packed_words(n_max) == p * n_max
+            if n_max >= 16:
+                assert p * 16 <= u
+
+
+# ------------------------------------------- backend knob (single device)
+def test_hiaer_packed_knob_bit_exact_and_batched():
+    from repro.core.api import CRI_network, Hierarchy
+    from test_routing_vectorized import drive, random_net
+
+    axons, neurons, outputs = random_net(13)
+    hier = Hierarchy(2, 2, 2, 1000)
+    eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                      backend="engine", seed=13)
+    hi_p = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                       backend="hiaer", seed=13, hierarchy=hier)
+    hi_u = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                       backend="hiaer", seed=13, hierarchy=hier,
+                       packed=False)
+    assert hi_p._impl.packed and not hi_u._impl.packed
+    r = drive(13, eng, list(axons))
+    assert drive(13, hi_p, list(axons)) == r
+    assert drive(13, hi_u, list(axons)) == r
+    assert hi_p.counter.as_dict() == hi_u.counter.as_dict()
+
+    # batched path: bool dtype and engine==hiaer==mesh on both formats
+    rng = np.random.default_rng(4)
+    batch = rng.integers(0, 2, (3, 6, len(axons))).astype(np.int32)
+    eng2 = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                       backend="engine", seed=13)
+    ref = eng2.run_batch(batch)
+    assert ref.dtype == np.bool_
+    for backend in ("hiaer", "mesh"):
+        for pk in (True, False):
+            net = CRI_network(axons=axons, neurons=neurons,
+                              outputs=outputs, backend=backend, seed=13,
+                              hierarchy=hier, packed=pk)
+            out = net.run_batch(batch)
+            assert out.dtype == np.bool_
+            np.testing.assert_array_equal(out, ref)

@@ -185,6 +185,49 @@ def _child() -> int:
         assert drive(31, mesh, list(axons)) == ref
     print("divisor device counts OK", flush=True)
 
+    # packed vs unpacked wire format: bit-exact on spikes, membranes,
+    # access counts AND per-level traffic over real 8-device
+    # collectives; the packed wire moves ceil(n_max/32) words per core
+    # where the unpacked one moves n_max int32 lanes
+    mesh_u = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                         backend="mesh", seed=31, hierarchy=hier,
+                         n_devices=8, packed=False)
+    mesh_p = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                         backend="mesh", seed=31, hierarchy=hier,
+                         n_devices=8)
+    assert mesh_p._impl.packed and not mesh_u._impl.packed
+    assert drive(31, mesh_u, list(axons)) == ref
+    assert drive(31, mesh_p, list(axons)) == ref
+    assert mesh_p.counter.as_dict() == mesh_u.counter.as_dict()
+    n_max = mesh_p._impl.shards.n_max
+    words = -(-n_max // 32)
+    assert (mesh_u._impl.exchange_bytes_per_step() * words
+            == mesh_p._impl.exchange_bytes_per_step() * n_max)
+    assert mesh_p._impl.event_vector_bytes() * n_max \
+        == mesh_u._impl.event_vector_bytes() * words
+    print("packed wire parity OK", flush=True)
+
+    # batched run_batch: B samples folded into the sharded step (one
+    # collective per level per step for the whole batch) must be
+    # bit-identical to the engine's vmapped batch, bool dtype, on both
+    # wire formats
+    nprng = np.random.default_rng(3)
+    batch = nprng.integers(0, 3, (4, 5, len(axons))).astype(np.int32)
+    eng_b = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                        backend="engine", seed=31)
+    rb = eng_b.run_batch(batch)
+    assert rb.dtype == np.bool_
+    for pk in (True, False):
+        m = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
+                        backend="mesh", seed=31, hierarchy=hier,
+                        n_devices=8, packed=pk)
+        out = m.run_batch(batch)
+        assert out.dtype == np.bool_
+        np.testing.assert_array_equal(rb, out)
+        for k in ("pointer_reads", "row_reads", "timesteps"):
+            assert m.counter.as_dict()[k] == eng_b.counter.as_dict()[k]
+    print("batched sharded run_batch OK", flush=True)
+
     # degenerate placement: everything on core 3 — zero cross-level
     axons, neurons, outputs = random_net(5)
     eng = CRI_network(axons=axons, neurons=neurons, outputs=outputs,
