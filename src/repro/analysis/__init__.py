@@ -1,0 +1,30 @@
+"""Static network analysis — the compiler stage that makes "minimal
+constraints in topology" safe: bad configurations fail loudly at compile
+time instead of silently mis-routing spikes or overflowing accumulators
+at runtime.
+
+Three passes, one report format:
+
+  * `validate` — a pure-numpy pass over `NetworkSpec`/`CompiledNetwork`
+    columns: dangling/duplicate synapses, dead neurons and unreachable
+    outputs, placement/hierarchy consistency, and accumulation-bound
+    propagation against the int32 accumulate path (`repro.analysis
+    .validate`). Wired into `compile_spec(..., validate=True)` (default
+    on) and exposed as `python -m repro.analysis <artifact.npz>`.
+  * `tracelint` — an AST pass over the source tree flagging host-Python
+    hazards inside the jitted step paths (`repro.analysis.tracelint`;
+    `python -m repro.analysis.tracelint src/repro`).
+  * `retrace` — a jit-compilation counter asserting each backend
+    compiles exactly once per (topology, batch-shape)
+    (`repro.analysis.retrace`; used from tests and
+    benchmarks/mesh_bench.py).
+"""
+from repro.analysis.retrace import (RetraceDetector, RetraceError,
+                                    compile_counts, no_retrace)
+from repro.analysis.validate import (AnalysisError, AnalysisReport,
+                                     Finding, validate_compiled,
+                                     validate_spec)
+
+__all__ = ["AnalysisError", "AnalysisReport", "Finding",
+           "validate_compiled", "validate_spec", "RetraceDetector",
+           "RetraceError", "compile_counts", "no_retrace"]

@@ -1,0 +1,36 @@
+"""CLI: analyze a saved compiled artifact.
+
+    python -m repro.analysis <artifact.npz> [--max-events-per-source K]
+
+Loads the `CompiledNetwork`, runs every validator pass, prints the
+rendered `AnalysisReport` (the exact text `compile_spec(...,
+validate=True)` raises with on the same network), and exits nonzero if
+the report contains errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static network analysis of a compiled artifact.")
+    ap.add_argument("artifact", help=".npz saved by CompiledNetwork.save")
+    ap.add_argument("--max-events-per-source", type=int, default=1,
+                    help="worst-case events per axon per timestep for "
+                         "the accumulation bound (default 1)")
+    args = ap.parse_args(argv)
+    # import after argparse so `--help` works without jax/numpy warm-up
+    from repro.core.compile import CompiledNetwork
+    from repro.analysis.validate import validate_compiled
+    compiled = CompiledNetwork.load(args.artifact)
+    report = validate_compiled(
+        compiled, max_events_per_source=args.max_events_per_source)
+    print(report.render())
+    return 1 if report.errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Retrace detector — a regression gate for the jit compile cache.
+
+Every performance result since the event-driven engine landed depends on
+each backend's step/run/run_batch tracing ONCE per (topology,
+batch-shape) and replaying the compiled executable afterwards. A stray
+host-dependent value in a carry, a Python scalar that should be an
+array, or a shape that varies call-to-call silently turns every call
+into a fresh XLA compile — correct results, catastrophic throughput.
+
+This harness reads the per-function compilation-cache entry count that
+`jax.jit` exposes (`jitted._cache_size()`), so it counts exactly the
+user-visible traces — no global monitoring hooks, no noise from XLA's
+internal sub-compiles.
+
+    eng = deploy(compiled).impl
+    det = RetraceDetector.of(eng)          # finds _jit_step/_jit_run/...
+    eng.run_batch(batches)                 # first call traces
+    det.snapshot()
+    eng.run_batch(batches)                 # same shapes: must replay
+    det.assert_no_retrace()                # raises RetraceError if not
+
+    with no_retrace(eng):                  # context-manager form — the
+        eng.run_batch(batches)             # timed region of mesh_bench
+
+`compile_counts(obj)` returns the raw {name: entries} map for asserting
+the stronger "compiled exactly once" property in tests.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Tuple
+
+__all__ = ["RetraceError", "RetraceDetector", "no_retrace",
+           "compile_counts", "jit_functions"]
+
+
+class RetraceError(RuntimeError):
+    """A watched jitted function re-traced inside a no-retrace region."""
+
+
+def jit_functions(obj) -> Dict[str, object]:
+    """{attribute name: jitted function} for every attribute of `obj`
+    exposing a jit compilation cache (`_cache_size`). A jitted function
+    itself maps to {'<jit>': fn}; backend objects (EventEngine,
+    HiAERNetwork, MeshNetwork, DenseSimulator) yield their
+    `_jit_step`-style attributes."""
+    if callable(getattr(obj, "_cache_size", None)):
+        return {"<jit>": obj}
+    out = {}
+    for name, v in getattr(obj, "__dict__", {}).items():
+        if callable(getattr(v, "_cache_size", None)):
+            out[name] = v
+    return out
+
+
+def compile_counts(*objects) -> Dict[Tuple[str, str], int]:
+    """{(object label, function name): cache entries} right now. One
+    entry per distinct traced signature — "compiled exactly once per
+    (topology, batch-shape)" is `count == number of distinct shapes
+    fed`."""
+    out = {}
+    for obj in objects:
+        label = type(obj).__name__
+        for name, fn in jit_functions(obj).items():
+            out[(label, name)] = int(fn._cache_size())
+    return out
+
+
+class RetraceDetector:
+    """Snapshot/compare the compile caches of a set of jitted
+    functions."""
+
+    def __init__(self, fns: Dict[Tuple[str, str], object]):
+        self._fns = fns
+        self._base: Dict[Tuple[str, str], int] = {}
+        self.snapshot()
+
+    @classmethod
+    def of(cls, *objects) -> "RetraceDetector":
+        fns = {}
+        for obj in objects:
+            label = type(obj).__name__
+            for name, fn in jit_functions(obj).items():
+                fns[(label, name)] = fn
+        if not fns:
+            raise ValueError(
+                f"no jitted functions found on "
+                f"{[type(o).__name__ for o in objects]}")
+        return cls(fns)
+
+    def counts(self) -> Dict[Tuple[str, str], int]:
+        return {k: int(fn._cache_size()) for k, fn in self._fns.items()}
+
+    def snapshot(self) -> Dict[Tuple[str, str], int]:
+        self._base = self.counts()
+        return dict(self._base)
+
+    def deltas(self) -> Dict[Tuple[str, str], int]:
+        """Cache growth since the last snapshot (only nonzero entries)."""
+        return {k: v - self._base[k] for k, v in self.counts().items()
+                if v != self._base[k]}
+
+    def assert_no_retrace(self) -> None:
+        d = self.deltas()
+        if d:
+            grew = ", ".join(f"{label}.{name} (+{n})"
+                             for (label, name), n in sorted(d.items()))
+            raise RetraceError(
+                f"jit retrace detected: {grew} recompiled inside a "
+                f"no-retrace region — a traced shape or a host value in "
+                f"the call signature is varying call-to-call")
+
+
+@contextmanager
+def no_retrace(*objects):
+    """Assert that no watched jitted function re-traces inside the
+    block (call once with warm caches — e.g. after the warmup run of a
+    benchmark). Yields the detector for inspection."""
+    det = RetraceDetector.of(*objects)
+    yield det
+    det.assert_no_retrace()

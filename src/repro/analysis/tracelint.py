@@ -1,0 +1,459 @@
+"""Jit-hygiene lint — an AST pass over the source tree guarding the jit
+boundary every performance result depends on.
+
+The pass finds the **jit roots** of each module — functions decorated
+with `@jax.jit`/`@partial(jax.jit, ...)`, functions handed to
+`jax.jit(...)`, `shard_map(...)`, `jax.vmap(...)`, or a `jax.lax`
+control-flow combinator (scan/cond/while_loop/...) — then takes the
+transitive closure over module-local calls, `self.method(...)` calls,
+and cross-module `repro.*` imports. Inside that closure it flags the
+host-Python hazards that either fail at trace time or, worse, silently
+retrace every call:
+
+  * host-scalar — `.item()` / `.tolist()` anywhere, and
+    `float(x)`/`int(x)`/`bool(x)` applied to a function parameter
+    (a traced value in a jitted path): device syncs or concretization
+    errors;
+  * numpy-call — `np.*(...)` calls: at best trace-time constants that
+    hide retraces, at worst a silent host round trip per call;
+  * py-loop — Python `for`/`while` statements: a static unroll at best
+    (linear trace growth), a retrace-per-iteration at worst;
+  * dict-iter — `.items()`/`.keys()`/`.values()` iteration feeding the
+    traced computation: closure contents silently baked into the trace.
+
+Deliberate host-side builders are silenced per file via `ALLOWLIST`
+below (path suffix -> rule names) or per line with an inline
+`# tracelint: allow=<rule>[,<rule>]` comment.
+
+CLI (CI gate):  python -m repro.analysis.tracelint src/repro
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+__all__ = ["LintFinding", "lint_paths", "lint_file", "main", "ALLOWLIST"]
+
+# path suffix (posix) -> rules silenced for that file. Every entry is a
+# deliberate design decision, documented where the code lives.
+ALLOWLIST: Dict[str, Set[str]] = {
+    # static unrolls over the (tiny, fixed) hierarchy collective
+    # stages: the stage list is a compile-time schedule, one trace total
+    "kernels/exchange.py": {"py-loop"},
+    # per-mesh-axis all-gather chain: unrolls over the static axis
+    # names of the device mesh, never over traced values
+    "core/distributed_engine.py": {"py-loop"},
+    # sharding-constraint resolution walks the static (dim, axis-spec)
+    # zip of a shape — trace-time config, not data
+    "distributed/context.py": {"py-loop"},
+}
+
+_WRAP_ATTRS = {"jit", "vmap", "pmap", "shard_map"}
+_LAX_COMBINATORS = {"scan", "cond", "switch", "while_loop", "fori_loop",
+                    "map", "associative_scan", "custom_root"}
+_HOST_SCALAR_ATTRS = {"item", "tolist"}
+_DICT_ITER_ATTRS = {"items", "keys", "values"}
+_CAST_BUILTINS = {"float", "int", "bool"}
+
+
+@dataclass
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    qualname: str
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] "
+                f"{self.qualname}: {self.message}")
+
+
+# ------------------------------------------------------------- indexing
+class _ModuleIndex:
+    """One parsed module: its function defs by qualname, import
+    aliases, and raw source lines (for inline allow comments)."""
+
+    def __init__(self, path: Path, dotted: str, tree: ast.Module,
+                 lines: List[str]):
+        self.path = path
+        self.dotted = dotted
+        self.tree = tree
+        self.lines = lines
+        self.funcs: Dict[str, ast.AST] = {}       # qualname -> def node
+        self.mod_alias: Dict[str, str] = {}       # name -> dotted module
+        self.obj_alias: Dict[str, Tuple[str, str]] = {}  # name ->
+        #                                           (dotted module, attr)
+        self.np_aliases: Set[str] = set()
+        self._index()
+
+    def _index(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    target = a.name if a.asname else a.name.split(".")[0]
+                    self.mod_alias[name] = target
+                    if a.name == "numpy":
+                        self.np_aliases.add(name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level or not node.module:
+                    continue
+                for a in node.names:
+                    name = a.asname or a.name
+                    self.obj_alias[name] = (node.module, a.name)
+                    if node.module == "numpy":
+                        self.np_aliases.add(name)
+
+        def collect(body, prefix):
+            for node in body:
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    self.funcs[prefix + node.name] = node
+                elif isinstance(node, ast.ClassDef):
+                    collect(node.body, prefix + node.name + ".")
+        collect(self.tree.body, "")
+
+    def allow_inline(self, line: int, rule: str) -> bool:
+        if not 1 <= line <= len(self.lines):
+            return False
+        text = self.lines[line - 1]
+        mark = "# tracelint: allow="
+        i = text.find(mark)
+        if i < 0:
+            return False
+        rules = text[i + len(mark):].split()[0]
+        return rule in rules.split(",")
+
+
+def _dotted_name(node) -> Optional[str]:
+    """Attribute/Name chain -> 'a.b.c' (None for anything else)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node) -> bool:
+    """Does this expression evaluate to a jit-like wrapper? Covers
+    `jax.jit`, bare `jit`, `shard_map`, `partial(jax.jit, ...)`, and
+    `jax.jit(...)` / `partial(...)` call results used as decorators."""
+    d = _dotted_name(node)
+    if d is not None:
+        leaf = d.split(".")[-1]
+        return leaf in _WRAP_ATTRS
+    if isinstance(node, ast.Call):
+        fd = _dotted_name(node.func)
+        if fd is not None and fd.split(".")[-1] == "partial":
+            return bool(node.args) and _is_jit_expr(node.args[0])
+        return _is_jit_expr(node.func)
+    return False
+
+
+def _wrapper_fn_args(call: ast.Call) -> List[ast.AST]:
+    """The function-valued operands of a jit/vmap/shard_map/lax call."""
+    fd = _dotted_name(call.func)
+    if fd is None:
+        return []
+    leaf = fd.split(".")[-1]
+    if leaf in _WRAP_ATTRS:
+        return call.args[:1]
+    if leaf in _LAX_COMBINATORS and ("lax" in fd.split(".")[:-1]
+                                     or fd.startswith("lax.")):
+        # every positional arg that looks like a function reference
+        return list(call.args)
+    return []
+
+
+# --------------------------------------------------------- root discovery
+def _find_roots(idx: _ModuleIndex) -> List[Tuple[str, ast.AST]]:
+    """(qualname, def node) for every jit root in the module."""
+    roots: List[Tuple[str, ast.AST]] = []
+    seen: Set[int] = set()
+
+    def add(qualname, node):
+        if id(node) not in seen:
+            seen.add(id(node))
+            roots.append((qualname, node))
+
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.stack: List[str] = []   # class/function name stack
+            # nested function defs visible in each enclosing scope —
+            # `shard_map(f, ...)`/`lax.scan(body, ...)` over a local
+            # def must root that def, not silently skip it
+            self.locals: List[Dict[str, ast.AST]] = []
+
+        def qual(self, name):
+            return ".".join(self.stack + [name])
+
+        def visit_ClassDef(self, node):
+            self.stack.append(node.name)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        def _visit_def(self, node):
+            if any(_is_jit_expr(d) for d in node.decorator_list):
+                add(self.qual(node.name), node)
+            if self.locals:
+                self.locals[-1][node.name] = node
+            self.stack.append(node.name)
+            self.locals.append({})
+            self.generic_visit(node)
+            self.locals.pop()
+            self.stack.pop()
+
+        visit_FunctionDef = _visit_def
+        visit_AsyncFunctionDef = _visit_def
+
+        def visit_Call(self, node):
+            for fn_arg in _wrapper_fn_args(node):
+                target = self._resolve_local(fn_arg)
+                if target is not None:
+                    add(*target)
+            self.generic_visit(node)
+
+        def _resolve_local(self, node):
+            """A function-valued argument -> (qualname, def node):
+            innermost local defs first, then module/class level."""
+            if isinstance(node, ast.Name):
+                for scope in reversed(self.locals):
+                    if node.id in scope:
+                        return self.qual(node.id), scope[node.id]
+                if node.id in idx.funcs:
+                    return node.id, idx.funcs[node.id]
+            elif isinstance(node, ast.Attribute) and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id == "self":
+                for cls in reversed(self.stack):
+                    q = f"{cls}.{node.attr}"
+                    if q in idx.funcs:
+                        return q, idx.funcs[q]
+            return None
+
+    V().visit(idx.tree)
+    return roots
+
+
+# ------------------------------------------------------------- violations
+class _BodyScan(ast.NodeVisitor):
+    """Scan one jit-reachable function subtree: record violations and
+    the calls to chase for the transitive closure."""
+
+    def __init__(self, idx: _ModuleIndex, qualname: str, node):
+        self.idx = idx
+        self.qualname = qualname
+        self.findings: List[LintFinding] = []
+        self.callees: List[Tuple[str, str]] = []   # (dotted mod, name)
+        self.params: List[Set[str]] = [_param_names(node)]
+        self.cls = qualname.rsplit(".", 1)[0] if "." in qualname else None
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+    # ---- scope tracking: nested defs/lambdas add their params
+    def _visit_def(self, node):
+        self.params.append(_param_names(node))
+        self.generic_visit(node)
+        self.params.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+    visit_Lambda = _visit_def
+
+    def _traced(self, name: str) -> bool:
+        return any(name in p for p in self.params)
+
+    def _flag(self, node, rule, message):
+        if rule in _file_allow(self.idx.path):
+            return
+        if self.idx.allow_inline(node.lineno, rule):
+            return
+        self.findings.append(LintFinding(
+            str(self.idx.path), node.lineno, rule, self.qualname,
+            message))
+
+    # ---- rules
+    def visit_For(self, node):
+        self._flag(node, "py-loop",
+                   "Python for-loop in a jit-reachable path — a static "
+                   "unroll at best (trace grows with the bound), a "
+                   "retrace per call at worst; use lax.scan/fori_loop "
+                   "or allowlist a deliberate host-side builder")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        self._flag(node, "py-loop",
+                   "Python while-loop in a jit-reachable path — cannot "
+                   "depend on traced values; use lax.while_loop")
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr in _HOST_SCALAR_ATTRS:
+                self._flag(node, "host-scalar",
+                           f".{f.attr}() forces a host sync and fails "
+                           f"on tracers")
+            elif f.attr in _DICT_ITER_ATTRS:
+                self._flag(node, "dict-iter",
+                           f".{f.attr}() iteration inside a jitted "
+                           f"path bakes dict contents into the trace")
+            elif isinstance(f.value, ast.Name) and \
+                    f.value.id in self.idx.np_aliases:
+                self._flag(node, "numpy-call",
+                           f"{f.value.id}.{f.attr}(...) is host numpy "
+                           f"— a trace-time constant or a concretization "
+                           f"error; use jnp")
+        elif isinstance(f, ast.Name) and f.id in _CAST_BUILTINS:
+            if node.args and isinstance(node.args[0], ast.Name) and \
+                    self._traced(node.args[0].id):
+                self._flag(node, "host-scalar",
+                           f"{f.id}() on a function parameter "
+                           f"concretizes a traced value")
+        self._chase(f)
+        self.generic_visit(node)
+
+    # ---- closure edges
+    def _chase(self, f):
+        idx = self.idx
+        if isinstance(f, ast.Name):
+            if f.id in idx.funcs:
+                self.callees.append((idx.dotted, f.id))
+            elif f.id in idx.obj_alias:
+                mod, attr = idx.obj_alias[f.id]
+                self.callees.append((mod, attr))
+        elif isinstance(f, ast.Attribute) and \
+                isinstance(f.value, ast.Name):
+            if f.value.id == "self" and self.cls is not None:
+                self.callees.append((idx.dotted,
+                                     f"{self.cls}.{f.attr}"))
+            elif f.value.id in idx.mod_alias:
+                self.callees.append((idx.mod_alias[f.value.id], f.attr))
+            elif f.value.id in idx.obj_alias:
+                mod, attr = idx.obj_alias[f.value.id]
+                self.callees.append((f"{mod}.{attr}", f.attr))
+
+
+def _param_names(node) -> Set[str]:
+    a = node.args
+    names = [p.arg for p in
+             a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names if n not in ("self", "cls")}
+
+
+def _file_allow(path: Path) -> Set[str]:
+    posix = path.as_posix()
+    out: Set[str] = set()
+    for suffix, rules in ALLOWLIST.items():
+        if posix.endswith(suffix):
+            out |= rules
+    return out
+
+
+# --------------------------------------------------------------- driver
+def _load_modules(root: Path) -> Dict[str, _ModuleIndex]:
+    """Parse every .py under `root`, keyed by dotted module name (the
+    package name is `root`'s basename — lint `src/repro` and modules
+    are `repro.*`, matching how the code imports itself)."""
+    root = root.resolve()
+    pkg = root.name
+    modules: Dict[str, _ModuleIndex] = {}
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root)
+        parts = (pkg,) + rel.with_suffix("").parts
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        dotted = ".".join(parts)
+        text = path.read_text()
+        try:
+            tree = ast.parse(text)
+        except SyntaxError as e:
+            raise SyntaxError(f"{path}: {e}") from e
+        modules[dotted] = _ModuleIndex(path, dotted, tree,
+                                       text.splitlines())
+    return modules
+
+
+def lint_paths(root) -> List[LintFinding]:
+    """Lint a source tree: discover jit roots in every module, close
+    over their callees (within the tree), and return the findings,
+    sorted by (path, line)."""
+    modules = _load_modules(Path(root))
+    queue: List[Tuple[str, str, ast.AST]] = []
+    for dotted, idx in modules.items():
+        for qualname, node in _find_roots(idx):
+            queue.append((dotted, qualname, node))
+    visited: Set[Tuple[str, str]] = set()
+    findings: List[LintFinding] = []
+    while queue:
+        dotted, qualname, node = queue.pop()
+        if (dotted, qualname) in visited or dotted not in modules:
+            continue
+        visited.add((dotted, qualname))
+        scan = _BodyScan(modules[dotted], qualname, node)
+        findings.extend(scan.findings)
+        for mod, name in scan.callees:
+            target = modules.get(mod)
+            if target is not None and name in target.funcs:
+                queue.append((mod, name, target.funcs[name]))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_file(path) -> List[LintFinding]:
+    """Lint one module in isolation (no cross-module closure)."""
+    p = Path(path)
+    return lint_paths(p.parent) if p.is_dir() else \
+        _lint_single(p)
+
+
+def _lint_single(path: Path) -> List[LintFinding]:
+    text = path.read_text()
+    idx = _ModuleIndex(path, path.stem, ast.parse(text),
+                       text.splitlines())
+    findings: List[LintFinding] = []
+    seen: Set[str] = set()
+    queue = list(_find_roots(idx))
+    while queue:
+        qualname, node = queue.pop()
+        if qualname in seen:
+            continue
+        seen.add(qualname)
+        scan = _BodyScan(idx, qualname, node)
+        findings.extend(scan.findings)
+        for mod, name in scan.callees:
+            if mod == idx.dotted and name in idx.funcs:
+                queue.append((name, idx.funcs[name]))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if not args:
+        print("usage: python -m repro.analysis.tracelint <src-root> "
+              "[<src-root> ...]", file=sys.stderr)
+        return 2
+    findings: List[LintFinding] = []
+    for root in args:
+        p = Path(root)
+        findings.extend(lint_paths(p) if p.is_dir() else _lint_single(p))
+    for f in findings:
+        print(f.render())
+    print(f"tracelint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

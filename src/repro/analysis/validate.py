@@ -1,0 +1,396 @@
+"""Network validator — a pure-numpy static-analysis pass over
+`NetworkSpec`/`CompiledNetwork`.
+
+The paper's interface claim ("shields the user from complexity ... with
+minimal constraints in topology") only holds if a bad configuration
+fails loudly at compile time. This pass consolidates the scattered
+ad-hoc checks of the build pipeline into one structured report:
+
+  * synapses      — dangling pre/post ids, duplicate (pre, post) pairs;
+  * reachability  — dead neurons (no fan-in) and output neurons no axon
+                    can reach (noise-driven neurons excepted: nu > -17
+                    fires without input, Table 1);
+  * placement     — hierarchy consistency: every neuron placed, core
+                    ids in range, per-core load against
+                    `Hierarchy.neurons_per_core`, axon homing in range,
+                    shard/placement agreement, per-FPGA HBM footprint
+                    against `hbm.HBM_BYTES`;
+  * accumulation  — worst-case membrane accumulate bounds: given each
+                    neuron's fan-in and the stored int16 weights, bound
+                    the one-step synaptic sum and flag any neuron that
+                    can overflow the int32 accumulate path
+                    (`kernels.route` segment sums, `costmodel.ACC_MIN/
+                    ACC_MAX`), reporting neuron AND core ids.
+
+Every finding is a structured `Finding` (severity, code, pass name,
+message, ids); `AnalysisReport.render()` is the single text format, so
+`compile_spec(..., validate=True)` raising `AnalysisError` and
+`python -m repro.analysis artifact.npz` print identical diagnostics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.costmodel import ACC_MAX, ACC_MIN
+from repro.core.hbm import HBM_BYTES, SLOT_BYTES, W_MAX, W_MIN
+from repro.core.neuron import NOISE_BITS
+
+__all__ = ["Finding", "AnalysisReport", "AnalysisError",
+           "validate_compiled", "validate_spec", "structural_error",
+           "accumulation_bounds", "synapse_findings",
+           "placement_findings"]
+
+_ID_CAP = 100           # ids stored per finding (full count kept separately)
+NOISELESS_NU = -NOISE_BITS  # nu <= -17 disables noise (Table 1)
+
+
+@dataclass
+class Finding:
+    """One analysis result: `severity` ('error' | 'warning'), a stable
+    `code` (E_*/W_*), the `pass_name` that produced it, a rendered
+    `message`, structured `ids` (e.g. {'neurons': [...], 'cores': [...]})
+    and `count` (total offenders; `ids` lists at most the first 100)."""
+    severity: str
+    code: str
+    pass_name: str
+    message: str
+    ids: Dict[str, List[int]] = field(default_factory=dict)
+    count: int = 1
+
+    def render(self) -> str:
+        return f"[{self.severity}] {self.code} ({self.pass_name}): " \
+               f"{self.message}"
+
+
+class AnalysisError(ValueError):
+    """Raised when an `AnalysisReport` contains errors. Subclasses
+    ValueError so pre-analyzer callers catching the old ad-hoc raises
+    keep working; `.report` carries the structured findings and the
+    message is exactly `report.render()` — the same text the CLI
+    prints."""
+
+    def __init__(self, report: "AnalysisReport"):
+        super().__init__(report.render())
+        self.report = report
+
+
+@dataclass
+class AnalysisReport:
+    findings: List[Finding] = field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "warning"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def add(self, severity, code, pass_name, message, ids=None,
+            count=None) -> Finding:
+        ids = {k: [int(i) for i in np.asarray(v).reshape(-1)[:_ID_CAP]]
+               for k, v in (ids or {}).items()}
+        n = count if count is not None else \
+            max([len(v) for v in ids.values()] or [1])
+        f = Finding(severity, code, pass_name, message, ids, int(n))
+        self.findings.append(f)
+        return f
+
+    def render(self) -> str:
+        head = (f"network analysis: {len(self.errors)} error(s), "
+                f"{len(self.warnings)} warning(s)")
+        return "\n".join([head] + ["  " + f.render()
+                                   for f in self.findings])
+
+    def raise_if_errors(self) -> None:
+        if self.errors:
+            raise AnalysisError(self)
+
+    def by_code(self, code: str) -> List[Finding]:
+        return [f for f in self.findings if f.code == code]
+
+
+def structural_error(pass_name: str, code: str, message: str,
+                     **ids) -> AnalysisError:
+    """A single-finding error report for structural build failures (bad
+    placement dicts, unknown targets) — same rendering as the validator
+    passes, so every compile diagnostic speaks one format."""
+    r = AnalysisReport()
+    r.add("error", code, pass_name, message,
+          ids={k: np.atleast_1d(v) for k, v in ids.items()})
+    return AnalysisError(r)
+
+
+def _fmt_ids(arr, cap: int = 8) -> str:
+    a = np.asarray(arr).reshape(-1)
+    body = ", ".join(str(int(i)) for i in a[:cap])
+    return body + (f", ... ({a.size} total)" if a.size > cap else "")
+
+
+# ------------------------------------------------------------------ passes
+def _check_synapses(rep, item, post, A_slots, N):
+    bad_post = np.nonzero((post < 0) | (post >= N))[0]
+    if bad_post.size:
+        rep.add("error", "E_SYN_POST_RANGE", "synapses",
+                f"dangling postsynaptic id(s): synapse(s) "
+                f"{_fmt_ids(bad_post)} target neuron(s) "
+                f"{_fmt_ids(post[bad_post])} outside [0, {N})",
+                ids={"synapses": bad_post, "neurons": post[bad_post]})
+    n_items = A_slots + N
+    bad_pre = np.nonzero((item < 0) | (item >= max(n_items, 1)))[0]
+    if bad_pre.size:
+        rep.add("error", "E_SYN_PRE_RANGE", "synapses",
+                f"dangling source item(s): synapse(s) "
+                f"{_fmt_ids(bad_pre)} source from item(s) "
+                f"{_fmt_ids(item[bad_pre])} outside [0, {n_items}) "
+                f"(axons [0, {A_slots}), neurons [{A_slots}, {n_items}))",
+                ids={"synapses": bad_pre, "items": item[bad_pre]})
+    if bad_post.size or bad_pre.size:
+        return                       # duplicates need in-range keys
+    if item.size:
+        key = item * max(N, 1) + post
+        uniq, counts = np.unique(key, return_counts=True)
+        dup = uniq[counts > 1]
+        if dup.size:
+            rep.add("warning", "W_SYN_DUPLICATE", "synapses",
+                    f"{dup.size} duplicate (pre, post) pair(s) — e.g. "
+                    f"item {int(dup[0] // max(N, 1))} -> neuron "
+                    f"{int(dup[0] % max(N, 1))}; duplicate records sum "
+                    f"at integrate time",
+                    ids={"items": dup // max(N, 1),
+                         "neurons": dup % max(N, 1)},
+                    count=int(dup.size))
+
+
+def _check_reachability(rep, item, post, A_slots, N, outputs, nu):
+    if N == 0:
+        return
+    indeg = np.bincount(post, minlength=N) if item.size else \
+        np.zeros((N,), np.int64)
+    dead = np.nonzero(indeg == 0)[0]
+    noisy = np.asarray(nu) > NOISELESS_NU      # can self-fire from noise
+    dead_quiet = dead[~noisy[dead]] if dead.size else dead
+    if dead_quiet.size:
+        rep.add("warning", "W_DEAD_NEURON", "reachability",
+                f"neuron(s) {_fmt_ids(dead_quiet)} have no incoming "
+                f"synapses and noise disabled (nu <= {NOISELESS_NU}) — "
+                f"they can never fire",
+                ids={"neurons": dead_quiet})
+    # forward BFS from all axons over the synapse columns
+    is_axon_src = item < A_slots
+    reach = np.zeros((N,), bool)
+    frontier = np.unique(post[is_axon_src]) if item.size else \
+        np.zeros((0,), np.int64)
+    src = item[~is_axon_src] - A_slots
+    dst = post[~is_axon_src]
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order], dst[order]
+    indptr = np.zeros((N + 1,), np.int64)
+    np.cumsum(np.bincount(src_s, minlength=N), out=indptr[1:])
+    while frontier.size:
+        reach[frontier] = True
+        starts, ends = indptr[frontier], indptr[frontier + 1]
+        spans = [dst_s[s:e] for s, e in zip(starts, ends) if e > s]
+        nxt = np.unique(np.concatenate(spans)) if spans else \
+            np.zeros((0,), np.int64)
+        frontier = nxt[~reach[nxt]]
+    out = np.asarray(outputs, np.int64).reshape(-1)
+    out = out[(out >= 0) & (out < N)]
+    unreachable = out[~reach[out] & ~noisy[out]]
+    if unreachable.size:
+        rep.add("warning", "W_UNREACHABLE_OUTPUT", "reachability",
+                f"output neuron(s) {_fmt_ids(unreachable)} are not "
+                f"reachable from any axon and have noise disabled — "
+                f"they will never report a spike",
+                ids={"neurons": unreachable})
+
+
+def _check_placement(rep, neuron_core, axon_core, hier, N, shards=None):
+    if hier is None:
+        return
+    core = np.asarray(neuron_core, np.int64).reshape(-1)
+    if N > hier.capacity:
+        rep.add("error", "E_HIER_CAPACITY", "placement",
+                f"network has {N} neurons > hierarchy capacity "
+                f"{hier.capacity} ({hier.n_cores} cores x "
+                f"{hier.neurons_per_core} neurons_per_core)",
+                ids={"neurons": np.asarray([N])}, count=1)
+    missing = np.nonzero(core < 0)[0]
+    if missing.size:
+        rep.add("error", "E_PLACE_MISSING", "placement",
+                f"placement missing neuron(s) {_fmt_ids(missing)} "
+                f"(no core assigned)",
+                ids={"neurons": missing})
+    oob = np.nonzero(core >= hier.n_cores)[0]
+    if oob.size:
+        rep.add("error", "E_PLACE_CORE_RANGE", "placement",
+                f"neuron(s) {_fmt_ids(oob)} placed on core(s) "
+                f"{_fmt_ids(core[oob])}, hierarchy has only "
+                f"{hier.n_cores} cores",
+                ids={"neurons": oob, "cores": core[oob]})
+    valid = core[(core >= 0) & (core < hier.n_cores)]
+    load = np.bincount(valid, minlength=hier.n_cores) if valid.size \
+        else np.zeros((hier.n_cores,), np.int64)
+    over = np.nonzero(load > hier.neurons_per_core)[0]
+    if over.size:
+        rep.add("error", "E_PLACE_OVERFULL", "placement",
+                f"core(s) {_fmt_ids(over)} hold "
+                f"{_fmt_ids(load[over])} neurons > configured limit "
+                f"neurons_per_core={hier.neurons_per_core}",
+                ids={"cores": over, "loads": load[over]})
+    if axon_core is not None:
+        ac = np.asarray(axon_core, np.int64).reshape(-1)
+        bad = np.nonzero((ac < 0) | (ac >= hier.n_cores))[0]
+        if bad.size:
+            rep.add("error", "E_PLACE_AXON_RANGE", "placement",
+                    f"axon(s) {_fmt_ids(bad)} homed on core(s) "
+                    f"{_fmt_ids(ac[bad])}, hierarchy has only "
+                    f"{hier.n_cores} cores",
+                    ids={"axons": bad, "cores": ac[bad]})
+    if shards is not None:
+        mism = np.nonzero(np.asarray(shards.core_of_neuron, np.int64)
+                          != core[:shards.core_of_neuron.shape[0]])[0]
+        if mism.size:
+            rep.add("error", "E_SHARD_MISMATCH", "placement",
+                    f"shard tables disagree with the placement for "
+                    f"neuron(s) {_fmt_ids(mism)} — stale or corrupted "
+                    f"artifact",
+                    ids={"neurons": mism})
+        # per-FPGA HBM footprint: each FPGA card (8 GB, hbm.HBM_BYTES)
+        # carries its cores' synapse entries
+        per_core = np.diff(shards.core_offsets)
+        cpf = hier.cores_per_fpga
+        n_fpga = max(-(-hier.n_cores // cpf), 1)
+        pad = n_fpga * cpf - per_core.shape[0]
+        per_fpga = np.pad(per_core, (0, pad)).reshape(n_fpga, cpf) \
+            .sum(axis=1) * SLOT_BYTES
+        hot = np.nonzero(per_fpga > HBM_BYTES)[0]
+        if hot.size:
+            rep.add("warning", "W_HBM_CAPACITY", "placement",
+                    f"FPGA(s) {_fmt_ids(hot)} carry "
+                    f"{_fmt_ids(per_fpga[hot])} synapse-table bytes > "
+                    f"HBM capacity {HBM_BYTES}",
+                    ids={"fpgas": hot, "bytes": per_fpga[hot]})
+
+
+def accumulation_bounds(item, post, weight, A_slots, N,
+                        max_events_per_source: int = 1):
+    """Per-neuron worst-case one-step synaptic accumulate (lo, hi), in
+    exact int64: hi = sum of positive fan-in weights, lo = sum of
+    negative ones, each axon-sourced weight counted
+    `max_events_per_source` times (an axon may be driven multiple times
+    per timestep; neurons fire at most once). This bounds the int32
+    segment-sum accumulate of `kernels.route` — `csr_segment_sum`'s
+    running cumsum may wrap (differences are exact mod 2^32), but a
+    per-neuron sum outside int32 wraps the delivered synaptic input
+    itself."""
+    w = np.asarray(weight, np.int64)
+    mult = np.where(np.asarray(item) < A_slots,
+                    int(max_events_per_source), 1)
+    contrib = w * mult
+    hi = np.zeros((max(N, 1),), np.int64)
+    lo = np.zeros((max(N, 1),), np.int64)
+    p = np.asarray(post)
+    sel = contrib > 0
+    np.add.at(hi, p[sel], contrib[sel])
+    np.add.at(lo, p[~sel], contrib[~sel])
+    return lo[:N], hi[:N]
+
+
+def _check_accumulation(rep, item, post, weight, A_slots, N, neuron_core,
+                        max_events_per_source):
+    if N == 0 or not len(item):
+        return
+    lo, hi = accumulation_bounds(item, post, weight, A_slots, N,
+                                 max_events_per_source)
+    bound = np.maximum(hi, -lo)
+
+    def cores_of(ids):
+        if neuron_core is None:
+            return {}
+        return {"cores": np.asarray(neuron_core, np.int64)[ids]}
+
+    over = np.nonzero((hi > ACC_MAX) | (lo < ACC_MIN))[0]
+    if over.size:
+        core_txt = ""
+        if neuron_core is not None:
+            core_txt = f" on core(s) " \
+                       f"{_fmt_ids(np.asarray(neuron_core)[over])}"
+        rep.add("error", "E_ACC_OVERFLOW", "accumulation",
+                f"neuron(s) {_fmt_ids(over)}{core_txt}: worst-case "
+                f"one-step accumulate {_fmt_ids(bound[over])} exceeds "
+                f"the int32 accumulate range [{ACC_MIN}, {ACC_MAX}] "
+                f"(fan-in x int16 weights, axons counted "
+                f"x{max_events_per_source})",
+                ids={"neurons": over, "bounds": bound[over],
+                     **cores_of(over)})
+        return
+    near = np.nonzero(bound > ACC_MAX // 2)[0]
+    if near.size:
+        rep.add("warning", "W_ACC_HEADROOM", "accumulation",
+                f"neuron(s) {_fmt_ids(near)}: worst-case one-step "
+                f"accumulate {_fmt_ids(bound[near])} uses more than "
+                f"half the int32 range [{ACC_MIN}, {ACC_MAX}] — "
+                f"repeated axon events or weight growth can overflow",
+                ids={"neurons": near, "bounds": bound[near],
+                     **cores_of(near)})
+
+
+# public pass entry points (core.compile runs them piecemeal: the
+# synapse pass before lowering — a dangling post id would crash the
+# lowering itself — and the structural placement subset always)
+synapse_findings = _check_synapses
+placement_findings = _check_placement
+
+
+# ------------------------------------------------------------ entry points
+def validate_compiled(compiled, *, max_events_per_source: int = 1
+                      ) -> AnalysisReport:
+    """Run every pass over a `CompiledNetwork` (any target). Pure
+    analysis: never raises on findings — call `.raise_if_errors()` (or
+    let `compile_spec(..., validate=True)` do it)."""
+    rep = AnalysisReport()
+    c = compiled
+    A_slots = c.item_base
+    item = np.asarray(c.syn_item, np.int64)
+    post = np.asarray(c.syn_post, np.int64)
+    w = np.asarray(c.syn_weight, np.int64)
+    _check_synapses(rep, item, post, A_slots, c.n_neurons)
+    if not rep.errors:               # downstream passes need sane ids
+        _check_reachability(rep, item, post, A_slots, c.n_neurons,
+                            c.outputs, c.nu)
+        _check_placement(rep, c.neuron_core, c.axon_core, c.hierarchy,
+                         c.n_neurons, shards=c.shards)
+        _check_accumulation(rep, item, post, w, A_slots, c.n_neurons,
+                            c.neuron_core, max_events_per_source)
+    return rep
+
+
+def validate_spec(spec, *, max_events_per_source: int = 1
+                  ) -> AnalysisReport:
+    """Pre-compile validation of a `NetworkSpec`: the synapse,
+    reachability, and accumulation passes over the raw columns
+    (placement does not exist yet — compile with a hierarchy to check
+    it). Weights are taken as stored, clipped to the int16 record range
+    like the compiler does."""
+    rep = AnalysisReport()
+    pre, post, w = spec.columns()
+    A_slots = max(spec.n_axons, 1)
+    item = np.where(pre < 0, -pre - 1, A_slots + pre)
+    post = np.asarray(post, np.int64)
+    w16 = np.clip(np.asarray(w, np.int64), W_MIN, W_MAX)
+    _, nu, _, _, _ = spec.model_tables()
+    _check_synapses(rep, item, post, A_slots, spec.n_neurons)
+    if not rep.errors:
+        _check_reachability(rep, item, post, A_slots, spec.n_neurons,
+                            spec.outputs, nu)
+        _check_accumulation(rep, item, post, w16, A_slots,
+                            spec.n_neurons, None, max_events_per_source)
+    return rep

@@ -38,6 +38,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis.validate import (AnalysisReport, placement_findings,
+                                     structural_error, synapse_findings,
+                                     validate_compiled)
 from repro.core import hbm
 from repro.core.hbm import CoreShards, FlatImage, HBMImage, Pointer
 from repro.core.partition import Hierarchy, partition_arrays
@@ -84,6 +87,10 @@ class CompiledNetwork:
     shards: Optional[CoreShards] = None
     axon_ndest: Optional[np.ndarray] = None
     neuron_ndest: Optional[np.ndarray] = None
+    # the AnalysisReport of the compile-time validation run (None when
+    # compiled with validate=False or loaded from disk — run
+    # `repro.analysis.validate_compiled` to regenerate); not persisted
+    report: Optional[AnalysisReport] = None
 
     @property
     def item_base(self) -> int:
@@ -254,6 +261,17 @@ def _rebuild_image(post, weight, outflag, a_base, a_rows, a_present,
 
 
 # ---------------------------------------------------------------- lowering
+def _finish(c: CompiledNetwork, validate: bool) -> CompiledNetwork:
+    """Post-lowering analysis: run the full validator over the artifact
+    when `validate`, attach the report, raise on errors (the message is
+    the rendered report — bit-identical to the CLI on the same
+    network)."""
+    if validate:
+        c.report = validate_compiled(c)
+        c.report.raise_if_errors()
+    return c
+
+
 def _axon_majority(raw_pre, post, is_axon, neuron_core, n_axons,
                    n_cores) -> np.ndarray:
     """Vectorized majority-target axon homing (ties to the lowest core
@@ -272,35 +290,42 @@ def _axon_majority(raw_pre, post, is_axon, neuron_core, n_axons,
 
 
 def _check_placement(core: np.ndarray, hier: Hierarchy, n: int):
-    """The legacy `HiAERNetwork._check_placement` validations, batched."""
-    if n and core.min() < 0:
-        missing = int(np.nonzero(core < 0)[0][0])
-        raise ValueError(f"placement missing neuron {missing}")
-    if n and core.max() >= hier.n_cores:
-        bad = int(np.nonzero(core >= hier.n_cores)[0][0])
-        raise ValueError(
-            f"neuron {bad} placed on core {int(core[bad])}, hierarchy "
-            f"has {hier.n_cores}")
-    load = np.bincount(core, minlength=hier.n_cores) if n \
-        else np.zeros(hier.n_cores, int)
-    if load.size and load.max() > hier.neurons_per_core:
-        raise ValueError(
-            f"core {int(load.argmax())} holds {int(load.max())} "
-            f"neurons > capacity {hier.neurons_per_core}")
+    """Structural placement validation, phrased by the analyzer's
+    placement pass so `compile_spec` and the CLI speak one diagnostic
+    format. Only the findings that break the shard build itself
+    (missing/out-of-range placements) raise here — an overfull core is
+    left to the full post-lowering validation, so a validate=False
+    compile still produces an artifact `python -m repro.analysis` can
+    diagnose with the identical report."""
+    rep = AnalysisReport()
+    placement_findings(rep, core, None, hier, n)
+    structural = ("E_PLACE_MISSING", "E_PLACE_CORE_RANGE")
+    rep.findings = [f for f in rep.findings if f.code in structural]
+    rep.raise_if_errors()
 
 
 def compile_spec(spec: NetworkSpec, target: str = "engine", *,
                  dense_pack: bool = True,
                  hierarchy: Optional[Hierarchy] = None,
                  placement: Optional[Dict[int, int]] = None,
-                 axon_placement: Optional[Dict[int, int]] = None
-                 ) -> CompiledNetwork:
+                 axon_placement: Optional[Dict[int, int]] = None,
+                 validate: bool = True) -> CompiledNetwork:
     """Lower a `NetworkSpec` to a `CompiledNetwork` for one target.
     `placement`/`axon_placement` map neuron/axon IDS to cores (the
     `CRI_network` facade translates keys). See the module docstring for
-    what each target materializes."""
+    what each target materializes.
+
+    `validate=True` (default) runs the static analyzer
+    (`repro.analysis.validate_compiled`) over the artifact: errors raise
+    `AnalysisError` (a ValueError whose message is the rendered report —
+    identical to `python -m repro.analysis <artifact>` on the same
+    network); warnings land on `compiled.report`. `validate=False`
+    skips the analyzer; only the structural checks that the lowering
+    itself cannot survive still raise."""
     if target not in TARGETS:
-        raise ValueError(f"unknown target {target!r} (one of {TARGETS})")
+        raise structural_error(
+            "compile", "E_BAD_TARGET",
+            f"unknown target {target!r} (one of {TARGETS})")
     pre, post, w = spec.columns()
     A, N = spec.n_axons, spec.n_neurons
     A_eng = max(A, 1)
@@ -311,11 +336,18 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
     mapper_item = np.where(pre < 0, -pre - 1, A + pre)
     syn_item = mapper_item if A == A_eng else \
         np.where(pre < 0, -pre - 1, A_eng + pre)
+    if validate:
+        # the synapse pass runs before lowering: a dangling post id
+        # would crash the scatter/mapper below, not report cleanly
+        rep0 = AnalysisReport()
+        synapse_findings(rep0, syn_item, np.asarray(post, np.int64),
+                         A_eng, N)
+        rep0.raise_if_errors()
 
     # every stored record is int16 (the paper's weight width): clip once
     # here so the readable column, the packed image, and the dense
     # simulator matrices can never disagree on a record's value
-    w16 = np.clip(w, -32768, 32767)
+    w16 = np.clip(w, hbm.W_MIN, hbm.W_MAX)
     c = CompiledNetwork(
         target=target, dense_pack=bool(dense_pack), n_axons=A,
         n_neurons=N, axon_keys=spec.axon_keys,
@@ -334,31 +366,38 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
         np.add.at(neuronW, (raw[~sel], post[~sel]),
                   w16[~sel].astype(np.int32))
         c.axonW, c.neuronW = axonW, neuronW
-        return c
+        return _finish(c, validate)
 
     # shared engine/hiaer/mesh lowering: the packed HBM image from columns
     ci = hbm.build_image_columnar(mapper_item, post, w, A, N, model_gid,
                                   outputs, dense_pack=dense_pack)
     c.image, c.flat, c.syn_pos = ci.image, ci.flat, ci.syn_pos
     if target == "engine":
-        return c
+        return _finish(c, validate)
 
     # hiaer/mesh: placement + axon homing + per-core shards from columns
     is_axon, raw = decode_pre(pre)
     hier = hierarchy if hierarchy is not None else \
         Hierarchy(1, 1, 1, max(N, 1))
     if N > hier.capacity:
-        raise ValueError(f"network ({N}) exceeds capacity "
-                         f"({hier.capacity})")
+        raise structural_error(
+            "placement", "E_HIER_CAPACITY",
+            f"network has {N} neurons > hierarchy capacity "
+            f"{hier.capacity} ({hier.n_cores} cores x "
+            f"{hier.neurons_per_core} neurons_per_core)", neurons=N)
     if placement is not None:
         neuron_core = np.full((N,), -1, np.int64)
         for nid, cc in placement.items():
             if not 0 <= nid < N:
-                raise ValueError(f"placement has unknown neuron id {nid}")
+                raise structural_error(
+                    "placement", "E_PLACE_UNKNOWN_ID",
+                    f"placement has unknown neuron id {nid} (network "
+                    f"has {N} neurons)", neurons=nid)
             if not 0 <= cc < hier.n_cores:
-                raise ValueError(
+                raise structural_error(
+                    "placement", "E_PLACE_CORE_RANGE",
                     f"neuron {nid} placed on core {cc}, hierarchy has "
-                    f"{hier.n_cores}")
+                    f"only {hier.n_cores} cores", neurons=nid, cores=cc)
             neuron_core[nid] = cc
         _check_placement(neuron_core, hier, N)
         neuron_core = neuron_core.astype(np.int32)
@@ -378,11 +417,15 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
     if axon_placement is not None:
         for a, cc in axon_placement.items():
             if not 0 <= a < A_eng:
-                raise ValueError(f"axon_placement has unknown axon "
-                                 f"id {a}")
+                raise structural_error(
+                    "placement", "E_PLACE_AXON_UNKNOWN",
+                    f"axon_placement has unknown axon id {a} (network "
+                    f"has {A} axons)", axons=a)
             if not 0 <= cc < hier.n_cores:
-                raise ValueError(f"axon {a} placed on core {cc}, "
-                                 f"hierarchy has {hier.n_cores}")
+                raise structural_error(
+                    "placement", "E_PLACE_AXON_RANGE",
+                    f"axon {a} placed on core {cc}, hierarchy has only "
+                    f"{hier.n_cores} cores", axons=a, cores=cc)
             axon_core[a] = cc
 
     # build-time sharding straight from the columns (plus in-range A.3
@@ -408,4 +451,4 @@ def compile_spec(spec: NetworkSpec, target: str = "engine", *,
                                  N, A_eng)
     c.axon_ndest, c.neuron_ndest = exch_k.build_dest_tables_columns(
         syn_item, post, axon_core, neuron_core, hier, A_eng, N)
-    return c
+    return _finish(c, validate)

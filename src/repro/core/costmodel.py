@@ -24,6 +24,13 @@ E_ACCESS_PJ = 744.0       # energy per HBM access (64-bit slot read)
 NS_PER_ACCESS = 2.84      # effective pipelined latency per access
 FIXED_NS = 120.0          # per-timestep control overhead (pointer setup)
 
+# the membrane-accumulate path (kernels/route.py segment sums, the
+# 16-lane Fig. 2b units) adds int16 synapse records into an int32
+# accumulator: these are the hardware bounds the static analyzer
+# (repro.analysis.validate) checks worst-case per-neuron fan-in against
+ACC_MIN = -(2 ** 31)      # int32 accumulator range
+ACC_MAX = 2 ** 31 - 1
+
 # interconnect levels of the deployment hierarchy (§3, Fig. 1b): the
 # index into AccessCounter.level_events — 0 = delivery within the source
 # item's own core, then one entry per link the event had to cross

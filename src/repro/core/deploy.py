@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import schedule as sched
 from repro.core.compile import CompiledNetwork
 from repro.core.engine import EventEngine
+from repro.core.hbm import W_MAX, W_MIN
 from repro.core.hiaer import HiAERNetwork
 from repro.core.mesh_runtime import MeshNetwork
 from repro.core.simulator import DenseSimulator
@@ -204,7 +205,7 @@ class Deployment:
         # column, the packed image, and the dense matrices agree even
         # for out-of-range requests
         cols_u = cols[keep]
-        w_u = np.clip(w[keep], -32768, 32767)
+        w_u = np.clip(w[keep], W_MIN, W_MAX)
         old = c.syn_weight[cols_u].copy()
         c.syn_weight[cols_u] = w_u.astype(np.int32)
         if c.target == "simulator":

@@ -38,6 +38,8 @@ SLOTS = 16                 # slots per segment (Fig. 2)
 ROWS_PER_SEGMENT = 2       # a segment spans two HBM rows
 HBM_BYTES = 8 << 30        # 8 GB per FPGA card
 SLOT_BYTES = 8             # one 64-bit record per slot (weight+addr+flags)
+W_MIN = -32768             # int16 synapse-record weight range (Fig. 7);
+W_MAX = 32767              # the single definition every clip/check uses
 
 
 @dataclass
@@ -517,7 +519,7 @@ class HBMMapper:
             for s, syn in enumerate(row):
                 if syn is not None:
                     post[r, s] = syn.post
-                    w[r, s] = np.int16(np.clip(syn.weight, -32768, 32767))
+                    w[r, s] = np.int16(np.clip(syn.weight, W_MIN, W_MAX))
                     flag[r, s] = syn.output_flag
         return post, w, flag
 
@@ -706,7 +708,7 @@ def build_image_columnar(pre_item: np.ndarray, post: np.ndarray,
     wf = syn_weight.reshape(-1)
     ff = syn_outflag.reshape(-1)
     pf[syn_pos] = post
-    wf[syn_pos] = np.clip(weight, -32768, 32767).astype(np.int16)
+    wf[syn_pos] = np.clip(weight, W_MIN, W_MAX).astype(np.int16)
     ff[syn_pos] = out_mask[post]
     # A.3 filler segments: 16 zero-weight records carrying the SOURCE
     # neuron's output flag (post id = slot)

@@ -30,9 +30,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.hbm import _ranges
-
-W_MAX = 32767
+from repro.core.hbm import W_MAX, _ranges
 
 
 @dataclass

@@ -211,7 +211,11 @@ class MeshNetwork:
 
         self.Vc = jax.device_put(np.zeros((C, sh.n_max), np.int32),
                                  self._shard)
-        self.key = jax.random.PRNGKey(seed)
+        # commit the key to the replicated sharding up front: the jit
+        # cache keys on input shardings, and an uncommitted fresh key
+        # vs the committed key a run returns would cost one silent
+        # retrace on the second dispatch (caught by analysis.retrace)
+        self.key = jax.device_put(jax.random.PRNGKey(seed), self._repl)
         self.counter = AccessCounter()
         self.shard_rebuilds = 0        # per-DEVICE weight-shard uploads
         self._spikes = np.zeros((n_neurons,), bool)

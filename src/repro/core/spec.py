@@ -36,6 +36,7 @@ from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.hbm import W_MAX, W_MIN
 from repro.core.neuron import ANN_neuron, LIF_neuron
 
 __all__ = ["NetworkSpec", "encode_axon", "decode_pre"]
@@ -147,6 +148,14 @@ class NetworkSpec:
                 or w.dtype == np.bool_):
             raise TypeError(f"weights must be integers, got {w.dtype}")
         w = w.astype(np.int64).reshape(-1)
+        # synapse records are int16 (Fig. 7 HBM layout): reject rather
+        # than clip, so a weight never silently changes value between
+        # the spec and the compiled artifact
+        if w.size and (w.min() < W_MIN or w.max() > W_MAX):
+            bad = w[(w < W_MIN) | (w > W_MAX)][0]
+            raise ValueError(
+                f"connect: weight {int(bad)} outside the int16 synapse "
+                f"record range [{W_MIN}, {W_MAX}]")
         pre, post, w = np.broadcast_arrays(pre, post, w)
         if pre.size == 0:
             return

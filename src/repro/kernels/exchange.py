@@ -63,7 +63,8 @@ PACK_BITS = 32                 # presence bits per packed uint32 word
 
 def packed_words(width: int) -> int:
     """Words per packed event vector of `width` presence bits."""
-    return -(-max(int(width), 0) // PACK_BITS)
+    # width is always a static shape, never a tracer
+    return -(-max(int(width), 0) // PACK_BITS)  # tracelint: allow=host-scalar
 
 
 def pack_events(bits):

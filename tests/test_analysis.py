@@ -1,0 +1,305 @@
+"""Static network analyzer (PR 6) — negative-path coverage of
+`repro.analysis.validate` and its wiring into `compile_spec`.
+
+Pins the acceptance invariants:
+  * a bad spec raises `AnalysisError` (a ValueError) from
+    `compile_spec(..., validate=True)` on EVERY backend target, with
+    the offending core/neuron ids on the structured report;
+  * `python -m repro.analysis artifact.npz` prints the IDENTICAL
+    rendered report on the same network (compiled validate=False);
+  * int16-boundary weights (+/-32767, -32768) survive the
+    spec -> compile -> save -> load round trip bit-exactly, and
+    out-of-range weights are rejected at `connect` time;
+  * the accumulation pass bounds fan-in x int16 weights against the
+    int32 accumulate range and names neuron AND core ids.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import (AnalysisError, AnalysisReport,
+                            validate_compiled, validate_spec)
+from repro.analysis.__main__ import main as analysis_cli
+from repro.analysis.validate import accumulation_bounds
+from repro.core.api import CRI_network, LIF_neuron
+from repro.core.compile import TARGETS, CompiledNetwork, compile_spec
+from repro.core.costmodel import ACC_MAX
+from repro.core.hbm import W_MAX, W_MIN
+from repro.core.partition import Hierarchy
+from repro.core.spec import NetworkSpec
+
+PLACED = ("hiaer", "mesh")          # targets with placement/hierarchy
+
+
+def lif(nu=-32):
+    return LIF_neuron(threshold=5, nu=nu, lam=60)
+
+
+def chain_spec(n_axons=2, n_neurons=6):
+    """Every axon feeds neuron 0, neurons chain 0->1->...->N-1, output
+    is the chain tail: fully reachable, no dead neurons, no warnings."""
+    spec = NetworkSpec()
+    ax = spec.add_axons(n_axons)
+    spec.add_neurons(n_neurons, lif())
+    pre = list(ax) + list(range(n_neurons - 1))
+    post = [0] * n_axons + list(range(1, n_neurons))
+    spec.connect(np.asarray(pre), np.asarray(post),
+                 np.full(len(pre), 3))
+    spec.set_outputs([n_neurons - 1])
+    return spec
+
+
+def compile_kwargs(target, n_neurons=6, **kw):
+    if target in PLACED:
+        kw.setdefault("hierarchy",
+                      Hierarchy(1, 1, 2, -(-n_neurons // 2)))
+    return kw
+
+
+# --------------------------------------------------------- clean network
+@pytest.mark.parametrize("target", TARGETS)
+def test_clean_network_compiles_with_empty_report(target):
+    spec = chain_spec()
+    c = compile_spec(spec, target, **compile_kwargs(target))
+    assert isinstance(c.report, AnalysisReport)
+    assert c.report.ok and not c.report.findings
+
+
+def test_unknown_target_is_structured():
+    with pytest.raises(AnalysisError) as ei:
+        compile_spec(chain_spec(), "gpu")
+    (f,) = ei.value.report.errors
+    assert f.code == "E_BAD_TARGET" and f.pass_name == "compile"
+
+
+# --------------------------------------------------- dangling postsynapse
+@pytest.mark.parametrize("target", TARGETS)
+def test_dangling_post_raises_on_every_target(target):
+    spec = chain_spec()
+    n = spec.n_neurons
+    # `connect` itself rejects bad ids, so corrupt the stored columns —
+    # the shape of a stale/buggy builder the analyzer must catch
+    spec._post[-1] = spec._post[-1].copy()
+    spec._post[-1][-1] = n + 3
+    spec._cols = None
+    with pytest.raises(ValueError) as ei:       # AnalysisError IS one
+        compile_spec(spec, target, **compile_kwargs(target))
+    assert isinstance(ei.value, AnalysisError)
+    (f,) = ei.value.report.by_code("E_SYN_POST_RANGE")
+    assert f.severity == "error" and f.pass_name == "synapses"
+    assert n + 3 in f.ids["neurons"]            # the dangling target id
+    assert f.ids["synapses"] == [spec.n_synapses - 1]
+    assert str(n + 3) in f.message
+
+
+# --------------------------------------------------------- overfull core
+@pytest.mark.parametrize("target", PLACED)
+def test_overfull_core_names_core_and_limit(target):
+    spec = chain_spec(n_neurons=8)
+    hier = Hierarchy(1, 1, 2, 4)                 # 2 cores x 4 neurons
+    place = {i: 0 for i in range(8)}             # all 8 on core 0
+    with pytest.raises(AnalysisError) as ei:
+        compile_spec(spec, target, hierarchy=hier, placement=place)
+    (f,) = ei.value.report.by_code("E_PLACE_OVERFULL")
+    assert f.pass_name == "placement"
+    assert f.ids["cores"] == [0] and f.ids["loads"] == [8]
+    assert "neurons_per_core=4" in f.message
+    # validate=False still compiles (overfull breaks nothing structural)
+    c = compile_spec(spec, target, hierarchy=hier, placement=place,
+                     validate=False)
+    assert c.report is None
+    assert validate_compiled(c).by_code("E_PLACE_OVERFULL")
+
+
+@pytest.mark.parametrize("target", PLACED)
+def test_structural_placement_errors(target):
+    spec = chain_spec()
+    hier = Hierarchy(1, 1, 2, 3)
+    with pytest.raises(AnalysisError) as ei:     # unknown neuron id
+        compile_spec(spec, target, hierarchy=hier,
+                     placement={99: 0}, validate=False)
+    assert ei.value.report.by_code("E_PLACE_UNKNOWN_ID")
+    with pytest.raises(AnalysisError) as ei:     # core out of range
+        compile_spec(spec, target, hierarchy=hier,
+                     placement={0: 7}, validate=False)
+    (f,) = ei.value.report.by_code("E_PLACE_CORE_RANGE")
+    assert f.ids["neurons"] == [0] and f.ids["cores"] == [7]
+
+
+@pytest.mark.parametrize("target", PLACED)
+def test_unknown_axon_placement(target):
+    spec = chain_spec(n_axons=2)
+    hier = Hierarchy(1, 1, 2, 3)
+    with pytest.raises(AnalysisError) as ei:     # id not an axon
+        compile_spec(spec, target, hierarchy=hier,
+                     axon_placement={7: 0}, validate=False)
+    (f,) = ei.value.report.by_code("E_PLACE_AXON_UNKNOWN")
+    assert f.pass_name == "placement" and f.ids["axons"] == [7]
+    with pytest.raises(AnalysisError) as ei:     # core out of range
+        compile_spec(spec, target, hierarchy=hier,
+                     axon_placement={0: 5}, validate=False)
+    (f,) = ei.value.report.by_code("E_PLACE_AXON_RANGE")
+    assert f.ids["axons"] == [0] and f.ids["cores"] == [5]
+
+
+# ------------------------------------------------- accumulation overflow
+def overflow_spec(fan_in=66000):
+    """`fan_in` distinct axons all feeding neuron 0 at W_MAX: the
+    one-step accumulate is fan_in * 32767 > INT32_MAX."""
+    spec = NetworkSpec()
+    ax = spec.add_axons(fan_in)
+    spec.add_neurons(2, lif())
+    pre = np.concatenate([np.asarray(ax), [0]])
+    post = np.concatenate([np.zeros(fan_in, np.int64), [1]])
+    w = np.concatenate([np.full(fan_in, W_MAX), [1]])
+    spec.connect(pre, post, w)
+    spec.set_outputs([1])
+    return spec
+
+
+@pytest.mark.parametrize("target", TARGETS)
+def test_accumulation_overflow_names_neuron(target):
+    spec = overflow_spec()
+    with pytest.raises(AnalysisError) as ei:
+        compile_spec(spec, target,
+                     **compile_kwargs(target, n_neurons=2))
+    (f,) = ei.value.report.by_code("E_ACC_OVERFLOW")
+    assert f.pass_name == "accumulation"
+    assert f.ids["neurons"] == [0]
+    assert f.ids["bounds"][0] == 66000 * W_MAX
+    if target in PLACED:                         # core id on the report
+        assert "cores" in f.ids and len(f.ids["cores"]) == 1
+        assert "core(s)" in f.message
+
+
+def test_accumulation_bounds_and_event_multiplicity():
+    # 40000 axon synapses at 30000: fine at 1 event/axon/step (1.2e9,
+    # but over half the range -> headroom warning), overflow at 2
+    spec = NetworkSpec()
+    ax = spec.add_axons(40000)
+    spec.add_neurons(1, lif())
+    spec.connect(np.asarray(ax), np.zeros(40000, np.int64),
+                 np.full(40000, 30000))
+    spec.set_outputs([0])
+    rep1 = validate_spec(spec)
+    assert rep1.ok
+    (w,) = rep1.by_code("W_ACC_HEADROOM")
+    assert w.ids["bounds"][0] == 40000 * 30000 > ACC_MAX // 2
+    rep2 = validate_spec(spec, max_events_per_source=2)
+    (f,) = rep2.by_code("E_ACC_OVERFLOW")
+    assert f.ids["bounds"][0] == 2 * 40000 * 30000
+    # the bound helper itself: negative weights bound the low side
+    lo, hi = accumulation_bounds(np.asarray([0, 1]), np.asarray([0, 0]),
+                                 np.asarray([-5, 7]), A_slots=2, N=1,
+                                 max_events_per_source=3)
+    assert lo[0] == -15 and hi[0] == 21
+
+
+# ------------------------------------------------ compile == CLI identity
+def test_cli_prints_the_exact_compile_diagnostic(tmp_path, capsys):
+    spec = chain_spec(n_neurons=8)
+    hier = Hierarchy(1, 1, 2, 4)
+    place = {i: 0 for i in range(8)}
+    with pytest.raises(AnalysisError) as ei:
+        compile_spec(spec, "hiaer", hierarchy=hier, placement=place)
+    raised_text = str(ei.value)
+    c = compile_spec(spec, "hiaer", hierarchy=hier, placement=place,
+                     validate=False)
+    path = tmp_path / "bad.npz"
+    c.save(path)
+    rc = analysis_cli([str(path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert out.strip() == raised_text            # bit-identical report
+    assert "E_PLACE_OVERFULL" in out and "neurons_per_core=4" in out
+
+
+def test_cli_clean_artifact_exits_zero(tmp_path, capsys):
+    c = compile_spec(chain_spec(), "engine")
+    path = tmp_path / "ok.npz"
+    c.save(path)
+    rc = analysis_cli([str(path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 error(s), 0 warning(s)" in out
+
+
+# ----------------------------------------------------- warnings (non-fatal)
+def test_dead_and_unreachable_warnings_do_not_block_compile():
+    spec = NetworkSpec()
+    ax = spec.add_axons(1)
+    spec.add_neurons(4, lif())                   # 0 fed, 1 fed by 0,
+    spec.connect(np.asarray([ax[0], 0, 2]),      # 2 dead, 3 fed by 2
+                 np.asarray([0, 1, 3]), np.asarray([3, 3, 3]))
+    spec.set_outputs([1, 3])
+    c = compile_spec(spec, "engine")             # warnings never raise
+    dead = c.report.by_code("W_DEAD_NEURON")
+    assert dead and dead[0].ids["neurons"] == [2]
+    unreach = c.report.by_code("W_UNREACHABLE_OUTPUT")
+    assert unreach and unreach[0].ids["neurons"] == [3]
+
+
+def test_noise_driven_neurons_are_exempt():
+    spec = NetworkSpec()
+    spec.add_axons(1)
+    spec.add_neurons(2, lif(nu=-10))             # noise ON: can self-fire
+    spec.set_outputs([0, 1])
+    rep = validate_spec(spec)
+    assert not rep.by_code("W_DEAD_NEURON")
+    assert not rep.by_code("W_UNREACHABLE_OUTPUT")
+
+
+def test_duplicate_synapse_warning():
+    spec = chain_spec()
+    spec.connect(np.asarray([0, 0]), np.asarray([1, 1]),
+                 np.asarray([2, 2]))             # neuron 0 -> 1 twice+chain
+    rep = validate_spec(spec)
+    assert rep.ok
+    (w,) = rep.by_code("W_SYN_DUPLICATE")
+    assert w.pass_name == "synapses"
+
+
+# ----------------------------------------------------- int16 round-trip
+@pytest.mark.parametrize("target", TARGETS)
+def test_int16_boundary_weights_roundtrip_bit_exact(tmp_path, target):
+    spec = NetworkSpec()
+    ax = spec.add_axons(2)
+    spec.add_neurons(4, lif())
+    weights = np.asarray([W_MIN, W_MAX, -1, 1])
+    spec.connect(np.asarray([ax[0], ax[1], 0, 1]),
+                 np.asarray([0, 1, 2, 3]), weights)
+    spec.set_outputs([2, 3])
+    c = compile_spec(spec, target, **compile_kwargs(target, n_neurons=4))
+    np.testing.assert_array_equal(c.syn_weight, weights)
+    if c.image is not None:                      # the packed HBM record
+        np.testing.assert_array_equal(
+            np.asarray(c.image.syn_weight).reshape(-1)[c.syn_pos],
+            weights)
+    if target == "simulator":
+        assert c.axonW[0, 0] == W_MIN and c.axonW[1, 1] == W_MAX
+    path = tmp_path / "rt.npz"
+    c.save(path)
+    c2 = CompiledNetwork.load(path)
+    np.testing.assert_array_equal(c2.syn_weight, weights)
+
+
+def test_connect_rejects_out_of_int16_range():
+    spec = NetworkSpec()
+    ax = spec.add_axons(1)
+    spec.add_neurons(1, lif())
+    for bad in (W_MAX + 1, W_MIN - 1, 10 ** 9):
+        with pytest.raises(ValueError, match="int16"):
+            spec.connect(np.asarray(ax), np.asarray([0]),
+                         np.asarray([bad]))
+    assert spec.n_synapses == 0                  # nothing half-appended
+
+
+# ------------------------------------------------- facade integration
+def test_facade_surfaces_analysis_error():
+    lifm = lif()
+    axons = {"a": [("x", 3)]}
+    neurons = {f"n{i}": ([], lifm) for i in range(7)}
+    neurons["x"] = ([], lifm)
+    with pytest.raises(ValueError, match="E_PLACE_OVERFULL"):
+        CRI_network(axons=axons, neurons=neurons, outputs=["x"],
+                    backend="hiaer", hierarchy=Hierarchy(1, 1, 2, 4),
+                    placement={k: 0 for k in neurons})

@@ -1,0 +1,110 @@
+"""Retrace detector (PR 6) — proves each backend's `run_batch` compiles
+EXACTLY ONCE per (topology, batch-shape) and replays afterwards, and
+that the detector catches the failure mode it exists for.
+
+A silent retrace (host value or varying shape in the jit signature)
+keeps results bit-exact while destroying throughput — nothing else in
+the suite would notice. `benchmarks/mesh_bench.py` wraps its timed
+regions in the same `no_retrace` gate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (RetraceDetector, RetraceError,
+                            compile_counts, no_retrace)
+from repro.core.api import CRI_network, LIF_neuron
+from repro.core.partition import Hierarchy
+
+BATCHED_BACKENDS = ("engine", "hiaer", "mesh")
+
+
+def small_net(backend):
+    lif = LIF_neuron(threshold=4, nu=-32, lam=60)
+    axons = {"a": [("x", 3), ("y", 2)], "b": [("y", 4)]}
+    neurons = {"x": ([("y", 1)], lif), "y": ([("z", 2)], lif),
+               "z": ([], lif)}
+    kw = {}
+    if backend in ("hiaer", "mesh"):
+        kw["hierarchy"] = Hierarchy(1, 1, 2, 2)
+    if backend == "mesh":
+        kw["n_devices"] = 1          # parent test process: 1 CPU device
+    return CRI_network(axons=axons, neurons=neurons,
+                       outputs=["x", "y", "z"], backend=backend,
+                       seed=0, **kw)
+
+
+def counts_batch(rng, B, T, A):
+    return rng.integers(0, 2, (B, T, A)).astype(np.int32)
+
+
+# ------------------------------------------------- the acceptance gate
+@pytest.mark.parametrize("backend", BATCHED_BACKENDS)
+def test_run_batch_compiles_exactly_once_per_shape(backend):
+    net = small_net(backend)
+    rng = np.random.default_rng(0)
+    A = len(net.axon_keys)
+    counts = counts_batch(rng, 3, 5, A)
+    net.run_batch(counts)                        # the one allowed trace
+    det = RetraceDetector.of(net._impl)
+    net.run_batch(counts)                        # same shapes: replay
+    net.run_batch(counts_batch(rng, 3, 5, A))    # same shapes, new data
+    assert det.deltas() == {}, det.deltas()
+    batch = {k: v for k, v in det.counts().items()
+             if "batch" in k[1]}
+    assert batch and set(batch.values()) == {1}  # exactly one trace
+
+    # a NEW batch shape is a legitimate second trace — and only one
+    counts2 = counts_batch(rng, 5, 5, A)
+    net.run_batch(counts2)
+    net.run_batch(counts2)
+    batch2 = {k: v for k, v in compile_counts(net._impl).items()
+              if "batch" in k[1]}
+    assert set(batch2.values()) == {2}
+
+
+@pytest.mark.parametrize("backend", BATCHED_BACKENDS)
+def test_run_and_reset_do_not_retrace(backend):
+    """reset()/counter churn between identical run() calls must not
+    perturb the jit signature (the mesh backend once lost this to an
+    uncommitted PRNG key: first run committed it, second retraced)."""
+    net = small_net(backend)
+    sched = [["a"], [], ["a", "b"], ["b"]]
+    net.run(sched)
+    with no_retrace(net._impl):
+        for _ in range(3):
+            net.reset()
+            net.run(sched)
+
+
+# --------------------------------------------------- detector mechanics
+def test_detector_counts_raw_jit_functions():
+    f = jax.jit(lambda x: x * 2 + 1)
+    f(jnp.arange(3))
+    assert list(compile_counts(f).values()) == [1]
+    f(jnp.arange(3) + 5)                         # same shape: replay
+    assert list(compile_counts(f).values()) == [1]
+    f(jnp.arange(4))                             # new shape: new entry
+    assert list(compile_counts(f).values()) == [2]
+
+
+def test_no_retrace_raises_on_shape_change():
+    f = jax.jit(lambda x: x.sum())
+    f(jnp.ones((3,)))
+    with no_retrace(f):                          # replay is fine
+        f(jnp.zeros((3,)))
+    with pytest.raises(RetraceError, match="retrace detected"):
+        with no_retrace(f):
+            f(jnp.ones((4,)))                    # retrace inside gate
+
+
+def test_detector_requires_jitted_functions():
+    with pytest.raises(ValueError, match="no jitted functions"):
+        RetraceDetector.of(object())
+
+
+def test_detector_finds_backend_jit_attrs():
+    net = small_net("engine")
+    names = {name for _, name in compile_counts(net._impl)}
+    assert {"_jit_step", "_jit_run", "_jit_run_batch"} <= names

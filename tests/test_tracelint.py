@@ -1,0 +1,144 @@
+"""Jit-hygiene lint (PR 6) — rule detection, root discovery, closure
+chasing, and the two silencing mechanisms, plus the CI-critical
+assertion that the shipped source tree is lint-clean.
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import tracelint
+from repro.analysis.tracelint import (_lint_single, lint_paths, main)
+
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+BAD = textwrap.dedent("""\
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    TABLE = {"a": 1}
+
+    @jax.jit
+    def step(x, cfg):
+        for i in range(3):
+            x = x + i
+        y = x.sum().item()
+        z = np.maximum(x, 0)
+        t = float(cfg)
+        return helper(x) + y + t + z.sum()
+
+    def helper(x):
+        for k, v in TABLE.items():
+            x = x + v
+        return x
+
+    def outer(x):
+        def body(c, t):
+            return c, c.item()
+        return jax.lax.scan(body, x, jnp.arange(3))
+
+    def not_jitted(x):
+        return np.zeros(3) + x.item()
+""")
+
+
+def write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return p
+
+
+def rules_by_qualname(findings):
+    out = {}
+    for f in findings:
+        out.setdefault(f.qualname, set()).add(f.rule)
+    return out
+
+
+# ---------------------------------------------------------- rule matrix
+def test_rules_roots_and_closure(tmp_path):
+    findings = _lint_single(write(tmp_path, "bad.py", BAD))
+    got = rules_by_qualname(findings)
+    # the decorated root: loop, two host-scalar forms, numpy call
+    assert got["step"] == {"py-loop", "host-scalar", "numpy-call"}
+    # reached transitively through step's call, not decorated itself
+    assert got["helper"] == {"py-loop", "dict-iter"}
+    # a local def handed to lax.scan is a root too
+    assert got["outer.body"] == {"host-scalar"}
+    # never fed to jit/lax: stays invisible however dirty
+    assert "not_jitted" not in got
+    # findings carry path:line rendering for editors/CI logs
+    f = findings[0]
+    assert f.render().startswith(f"{f.path}:{f.line}: [")
+
+
+def test_host_scalar_only_for_parameters(tmp_path):
+    src = textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            n = int(3.5)
+            return x * n
+    """)
+    assert _lint_single(write(tmp_path, "m.py", src)) == []
+
+
+# ---------------------------------------------------------- silencing
+def test_inline_allow_comment(tmp_path):
+    src = textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            n = x.shape[0]
+            return x.item()  # tracelint: allow=host-scalar
+    """)
+    assert _lint_single(write(tmp_path, "m.py", src)) == []
+    # the comment silences ONLY the named rule
+    src2 = src.replace("allow=host-scalar", "allow=py-loop")
+    p2 = write(tmp_path, "m2.py", src2)
+    assert [f.rule for f in _lint_single(p2)] == ["host-scalar"]
+
+
+def test_file_allowlist(tmp_path, monkeypatch):
+    src = textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            for i in range(2):
+                x = x + i
+            return x
+    """)
+    p = write(tmp_path, "homed_builder.py", src)
+    assert [f.rule for f in _lint_single(p)] == ["py-loop"]
+    monkeypatch.setitem(tracelint.ALLOWLIST, "homed_builder.py",
+                        {"py-loop"})
+    assert _lint_single(p) == []
+
+
+def test_allowlist_entries_point_at_real_files():
+    """Every ALLOWLIST suffix must still name a file in the tree —
+    stale entries would silently mask future regressions."""
+    for suffix in tracelint.ALLOWLIST:
+        assert (SRC_ROOT / suffix).is_file(), suffix
+
+
+# ------------------------------------------------------------ CLI + tree
+def test_main_exit_codes(tmp_path, capsys):
+    bad = write(tmp_path, "bad.py", BAD)
+    assert main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[py-loop]" in out and "finding(s)" in out
+    clean = write(tmp_path, "clean.py", "import jax\n")
+    assert main([str(clean)]) == 0
+    assert main([]) == 2
+
+
+def test_shipped_tree_is_lint_clean():
+    """The CI gate: src/repro has no jit-hygiene findings (modulo the
+    documented ALLOWLIST)."""
+    findings = lint_paths(SRC_ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
