@@ -1,0 +1,184 @@
+"""Serving-tier benchmark — micro-batched spike serving vs sequential
+dispatch, on a resident mesh deployment.
+
+Eight concurrent clients stream spike windows at a `SpikeServer`
+(double-buffered ingestion, deadline + max-batch admission, pow2
+batch-shape bucketing); the same request set then runs one-dispatch-
+per-request on an identical deployment. Three gates, each a serving
+claim CI must hold (violations exit nonzero):
+
+  * THROUGHPUT: micro-batched req/sec >= 2x the sequential dispatch
+    rate at 8 concurrent clients — the amortized-collective win that
+    justifies an always-on batching tier at all;
+  * BIT-EXACT: every served response (spikes AND final membranes)
+    equals the same request run alone — micro-batching must never leak
+    state or PRNG noise between clients;
+  * TRACES: the whole serving session compiles the lane path at most
+    log2(max_batch) + 1 times (the pow2 buckets), counted with
+    `repro.analysis.retrace.compile_counts` — fluctuating client
+    concurrency must not turn into unbounded XLA recompiles.
+
+Results (p50/p99 latency, req/sec both ways, batch-size distribution)
+go to BENCH_serve.json (CI artifact).
+"""
+import json
+import math
+import threading
+import time
+
+import numpy as np
+
+from repro.analysis.retrace import compile_counts
+from repro.core.api import LIF_neuron
+from repro.core.compile import compile_spec
+from repro.core.deploy import deploy
+from repro.core.partition import Hierarchy
+from repro.core.spec import NetworkSpec
+from repro.serve import SpikeServer
+
+
+def bench_spec(n_axons, n_neurons, fanout=6, seed=7) -> NetworkSpec:
+    rng = np.random.default_rng(seed)
+    spec = NetworkSpec()
+    ax = spec.add_axons(n_axons)
+    nid = spec.add_neurons(n_neurons,
+                           LIF_neuron(threshold=6, nu=-32, lam=40))
+    pre = np.concatenate([np.repeat(ax, fanout),
+                          np.repeat(nid, fanout)])
+    post = rng.integers(0, n_neurons, pre.shape[0])
+    w = rng.integers(-3, 8, pre.shape[0])
+    spec.connect(pre, post, w)
+    spec.set_outputs(list(range(min(8, n_neurons))))
+    return spec
+
+
+def _client(srv, cid, n_requests, reqs, results):
+    for r in range(n_requests):
+        res = srv.submit("bench", reqs[(cid, r)], seed=cid * 1000 + r) \
+            .result(timeout=300)
+        results[(cid, r)] = res
+
+
+def run(n_axons=24, n_neurons=96, window=8, clients=8,
+        requests_per_client=6, max_batch=8, wait_ms=8.0,
+        backend="mesh", quiet=False, out_json="BENCH_serve.json"):
+    rng = np.random.default_rng(11)
+    spec = bench_spec(n_axons, n_neurons)
+    kw = {}
+    if backend in ("hiaer", "mesh"):
+        kw["hierarchy"] = Hierarchy(1, 2, 2, -(-n_neurons // 4))
+    compiled = compile_spec(spec, target=backend, **kw)
+
+    reqs = {(c, r): rng.integers(0, 2, (window, n_axons))
+            .astype(np.int32)
+            for c in range(clients) for r in range(requests_per_client)}
+    total = clients * requests_per_client
+
+    # ---- micro-batched serving: 8 concurrent clients, one server ----
+    srv = SpikeServer(max_batch=max_batch, max_wait_ms=wait_ms)
+    srv.add_model("bench", compiled, window=window, n_sessions=0,
+                  seed=0)
+    results = {}
+    with srv:
+        # warm every pow2 bucket outside the timed window (B=1 via a
+        # lone request, then a full-width burst for the bigger buckets)
+        srv.submit("bench", np.zeros((window, n_axons), np.int32)) \
+            .result()
+        warm = [srv.submit("bench",
+                           np.zeros((window, n_axons), np.int32))
+                for _ in range(max_batch)]
+        for f in warm:
+            f.result()
+        srv.reset_stats()          # percentiles from serving, not tracing
+        t0 = time.monotonic()
+        threads = [threading.Thread(
+            target=_client,
+            args=(srv, c, requests_per_client, reqs, results))
+            for c in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall_b = time.monotonic() - t0
+        stats = srv.stats()
+    rps_b = total / wall_b
+
+    # trace gate: pow2 bucketing bounds the whole session's compiles
+    lane_traces = sum(
+        n for (_, name), n in compile_counts(
+            srv.models["bench"].dep.impl).items()
+        if "lanes" in name)
+    trace_bound = int(math.log2(max_batch)) + 1
+
+    # ---- sequential baseline: same requests, one dispatch each ----
+    dep = deploy(compiled, seed=0)
+    dep.run_lanes([-1], [np.zeros((window, n_axons), np.int32)])  # warm
+    t0 = time.monotonic()
+    serial = {}
+    for c in range(clients):
+        for r in range(requests_per_client):
+            spk, V = dep.run_lanes([-1], [reqs[(c, r)]],
+                                   seeds=[c * 1000 + r])
+            serial[(c, r)] = (spk[0], V[0])
+    wall_s = time.monotonic() - t0
+    rps_s = total / wall_s
+
+    # bit-exactness: served response == the request run alone
+    exact = all(
+        np.array_equal(results[k].spikes, serial[k][0])
+        and np.array_equal(results[k].membrane, serial[k][1])
+        for k in reqs)
+
+    out = {
+        "backend": backend,
+        "n_neurons": n_neurons, "n_axons": n_axons, "window": window,
+        "clients": clients, "requests": total, "max_batch": max_batch,
+        "max_wait_ms": wait_ms,
+        "p50_ms": stats["p50_ms"], "p99_ms": stats["p99_ms"],
+        "req_per_sec_batched": rps_b,
+        "req_per_sec_sequential": rps_s,
+        "speedup": rps_b / max(rps_s, 1e-9),
+        "mean_batch_size": stats["mean_batch_size"],
+        "batch_shapes": [list(s) for s in
+                         stats["models"]["bench"]["batch_shapes"]],
+        "buffer": stats["buffer"],
+        "lane_traces": lane_traces, "trace_bound": trace_bound,
+        "bitexact": exact,
+    }
+    if not quiet:
+        print(f"serve_bench,{backend},clients={clients},"
+              f"batched={rps_b:.1f}req/s,sequential={rps_s:.1f}req/s,"
+              f"speedup={out['speedup']:.2f}x,p50={out['p50_ms']:.2f}ms,"
+              f"p99={out['p99_ms']:.2f}ms,"
+              f"traces={lane_traces}<={trace_bound},bitexact={exact}")
+
+    failures = []
+    if out["speedup"] < 2.0:
+        failures.append(f"speedup={out['speedup']:.2f}<2.0")
+    if not exact:
+        failures.append("served-results-not-bit-exact")
+    if lane_traces > trace_bound:
+        failures.append(f"lane-traces={lane_traces}>{trace_bound}")
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(out, fh, indent=2)
+    if failures:
+        raise SystemExit(
+            f"serve bench gates failed: {failures} — micro-batching "
+            f"throughput, client isolation, or bucket regression")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    ap.add_argument("--backend", default="mesh",
+                    choices=["simulator", "engine", "hiaer", "mesh"])
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_axons=16, n_neurons=48, window=6, requests_per_client=4,
+            backend=args.backend)
+    else:
+        run()

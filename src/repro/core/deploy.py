@@ -6,6 +6,10 @@
     w = dep.read_synapses(pre, post)     # arrays, one gather
     dep.write_synapses(pre, post, w + 1) # ONE delta upload per batch
 
+    dep.alloc_lanes(8)                   # resident serving lanes
+    spk, V = dep.run_lanes([0, 3, -1], windows, seeds=[0, 0, 7])
+    dep.reset(lanes=[3])                 # one session, others untouched
+
 One `Deployment` class fronts all four backends (dense simulator, HBM
 event engine, hierarchical multi-core hiaer, and the device-mesh
 `mesh` tier running each core's shard on its own jax device) with the
@@ -33,8 +37,11 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.validate import structural_error
 from repro.core import schedule as sched
 from repro.core.compile import CompiledNetwork
 from repro.core.engine import EventEngine
@@ -103,9 +110,22 @@ class Deployment:
             raise ValueError(f"unknown target {c.target!r}")
         self.n_axon_slots = getattr(self.impl, "n_axon_slots",
                                     c.n_axons)
+        self.seed = seed
         self.weight_uploads = 0         # batches applied, not synapses
         self._ikeys: Optional[np.ndarray] = None
         self._iorder: Optional[np.ndarray] = None
+        # persistent batch-lane state (the serving tier's sessions):
+        # allocated on demand by alloc_lanes(); lane l's PRNG stream is
+        # fold_in(PRNGKey(seed), l) — identical to run_batch sample l on
+        # a fresh deployment, so a new lane's first window is
+        # bit-reproducible outside the server
+        self._lane_V: Optional[np.ndarray] = None
+        self._lane_keys: Optional[np.ndarray] = None
+        self._lane_root = jax.random.PRNGKey(seed)
+        # stateless (scratch) requests draw from a stream folded at the
+        # int32 ceiling — no real lane id can collide with it
+        self._scratch_root = jax.random.fold_in(self._lane_root,
+                                                2**31 - 1)
 
     # ------------------------------------------------------------ running
     @property
@@ -127,10 +147,133 @@ class Deployment:
             schedules, self.compiled.n_axons)))
 
     def _pad(self, counts: np.ndarray) -> np.ndarray:
+        """Zero-pad the axon axis up to the deployed slot count. A
+        schedule WIDER than the axon table raises a structured
+        `AnalysisError` (code E_SCHED_WIDTH): the extra columns used to
+        pass straight through, where the routing gathers would clip
+        their indices and silently mis-route the trailing axons."""
+        if counts.shape[-1] > self.n_axon_slots:
+            raise structural_error(
+                "schedule", "E_SCHED_WIDTH",
+                f"schedule drives {counts.shape[-1]} axon slots but "
+                f"the deployed network has {self.n_axon_slots}; the "
+                f"trailing columns would be silently dropped or "
+                f"mis-routed",
+                schedule_width=counts.shape[-1],
+                axon_slots=self.n_axon_slots)
         return sched.pad_width(counts, self.n_axon_slots)
 
-    def reset(self):
-        self.impl.reset()
+    def reset(self, lanes: Optional[Sequence[int]] = None):
+        """Reset runtime state. `lanes=None` resets everything — the
+        backend's sequential state AND every allocated lane (each lane
+        back to V = 0 with its construction-seed PRNG stream).
+        `lanes=[...]` resets ONLY those batch lanes, leaving the other
+        lanes' membranes and streams untouched — the per-client reset
+        the serving tier uses so one session's restart never perturbs
+        its batch neighbours."""
+        if lanes is None:
+            self.impl.reset()
+            if self._lane_V is not None:
+                self._lane_V[:] = 0
+                self._lane_keys[:] = self._initial_keys(
+                    np.arange(self._lane_V.shape[0]))
+            return
+        ids = self._check_lane_ids(np.asarray(lanes, np.int64))
+        self._lane_V[ids] = 0
+        self._lane_keys[ids] = self._initial_keys(ids)
+
+    # ------------------------------------------------------ batch lanes
+    @property
+    def n_lanes(self) -> int:
+        return 0 if self._lane_V is None else self._lane_V.shape[0]
+
+    def _initial_keys(self, lanes) -> np.ndarray:
+        """Construction-seed PRNG keys for the given lane ids (a
+        writable host copy — lane key storage is mutated in place)."""
+        return np.array(jax.vmap(
+            lambda i: jax.random.fold_in(self._lane_root, i))(
+            jnp.asarray(lanes, jnp.int32)))
+
+    def _check_lane_ids(self, ids: np.ndarray) -> np.ndarray:
+        if ids.size and (self._lane_V is None
+                         or ids.min() < 0
+                         or ids.max() >= self._lane_V.shape[0]):
+            raise IndexError(
+                f"lane ids {ids.tolist()} outside the "
+                f"{self.n_lanes} allocated lanes (alloc_lanes first)")
+        return ids
+
+    def alloc_lanes(self, n_lanes: int) -> None:
+        """Allocate (or grow to) `n_lanes` persistent batch lanes. A
+        lane is a resident session slot: membrane state plus a PRNG
+        stream that persist ACROSS `run_lanes` dispatches, so a client
+        can stream spike windows through the deployment and observe
+        exactly the dynamics of one uninterrupted run. Growing never
+        disturbs existing lanes."""
+        have = self.n_lanes
+        if n_lanes <= have:
+            return
+        V = self.impl.lane_state_zeros(n_lanes)
+        new = self._initial_keys(np.arange(have, n_lanes))
+        if have:
+            V[:have] = self._lane_V
+            new = np.concatenate([self._lane_keys, new])
+        self._lane_V, self._lane_keys = V, new
+
+    def run_lanes(self, lane_ids: Sequence[int], schedules,
+                  seeds: Optional[Sequence[int]] = None):
+        """Stateful micro-batched run — the serving tier's dispatch
+        primitive. Each entry b runs `schedules[b]` (all the same T) on
+        lane `lane_ids[b]`: a real lane (>= 0) continues from its
+        persistent membranes/stream and writes its final state back; a
+        SCRATCH entry (-1) runs stateless from V = 0 under the
+        deterministic stream fold_in(scratch_root, seeds[b]) and leaves
+        no trace. Entry b's results are bit-identical to running it in
+        a batch of ONE (the lane axis is elementwise on every backend),
+        so micro-batching never leaks state — or noise — between
+        clients. Returns (spikes (B, T, n) bool, membranes (B, n) int32
+        final per-lane potentials in global neuron order)."""
+        if len(schedules) == 0:
+            return (np.zeros((0, 0, self.compiled.n_neurons), bool),
+                    np.zeros((0, self.compiled.n_neurons), np.int32))
+        counts = self._pad(sched.encode_batch(schedules,
+                                              self.compiled.n_axons))
+        ids = np.asarray(list(lane_ids), np.int64)
+        B = counts.shape[0]
+        if ids.shape[0] != B:
+            raise ValueError(f"{ids.shape[0]} lane ids for {B} "
+                             f"schedules")
+        live = ids >= 0
+        live_ids = self._check_lane_ids(ids[live])
+        uniq, cnt = np.unique(live_ids, return_counts=True)
+        if uniq.size and cnt.max() > 1:
+            raise ValueError(
+                f"lane(s) {uniq[cnt > 1].tolist()} appear twice in one "
+                f"batch — a session cannot run two windows in one "
+                f"dispatch")
+        if seeds is None:
+            seeds = np.zeros((B,), np.int64)
+        seeds = np.asarray(list(seeds), np.int64)
+        keys = np.array(jax.vmap(
+            lambda s: jax.random.fold_in(self._scratch_root, s))(
+            jnp.asarray(seeds, jnp.int32)))
+        V0 = self.impl.lane_state_zeros(B)
+        if live.any():
+            keys[live] = self._lane_keys[live_ids]
+            V0[live] = self._lane_V[live_ids]
+        Vf, kf, spikes = self.impl.run_lanes(V0, jnp.asarray(keys),
+                                             counts)
+        Vf = np.asarray(Vf)
+        if live.any():
+            self._lane_V[live_ids] = Vf[live]
+            self._lane_keys[live_ids] = np.asarray(kf)[live]
+        return spikes, self.impl.lanes_membrane(Vf)
+
+    def lane_membrane(self, lane: int) -> np.ndarray:
+        """Current (n,) membrane potentials of one allocated lane, in
+        global neuron-id order."""
+        ids = self._check_lane_ids(np.asarray([lane], np.int64))
+        return self.impl.lanes_membrane(self._lane_V[ids])[0]
 
     def read_membrane(self, ids: Sequence[int]) -> List[int]:
         V = np.asarray(self.impl.V)

@@ -84,6 +84,7 @@ class EventEngine:
         self._jit_step = jax.jit(self._step_impl)
         self._jit_run = jax.jit(self._run_impl)
         self._jit_run_batch = jax.jit(self._run_batch_impl)
+        self._jit_run_lanes = jax.jit(self._run_lanes_impl)
 
     def _build_tables(self):
         # hub topologies fall back from the padded fan-in transpose to the
@@ -159,6 +160,40 @@ class EventEngine:
             self._run_impl, in_axes=(0, 0, 0, None))(V0, keys, counts,
                                                      tables)
         return spikes, prs, rrs
+
+    def _run_lanes_impl(self, V0, keys, counts, tables):
+        """The serving-tier stateful batch: B lanes, each carrying ITS
+        OWN membrane state and PRNG key through the dispatch (unlike
+        `_run_batch_impl`, which derives both). Lane b is bit-identical
+        to running its (V0[b], keys[b], counts[b]) alone — every
+        per-lane op is elementwise in the lane axis — which is what
+        makes micro-batched serving results independent of how requests
+        were batched together."""
+        return jax.vmap(self._run_impl, in_axes=(0, 0, 0, None))(
+            V0, keys, counts, tables)
+
+    def run_lanes(self, V0, keys, counts):
+        """Stateful batched run for the serving tier. V0: (B, n) int32
+        membranes, keys: (B,) PRNG keys, counts: (B, T, A) int32.
+        Returns (V_final, keys_final, spikes (B, T, n) bool); the
+        engine's own sequential state (V, key) is untouched."""
+        B, T = counts.shape[0], counts.shape[1]
+        self.counter.timesteps += B * T
+        V, keys, spikes, prs, rrs = self._jit_run_lanes(
+            jnp.asarray(V0, jnp.int32), keys, jnp.asarray(counts),
+            self.tables)
+        self.counter.tally(prs, rrs)
+        return V, keys, np.asarray(spikes, bool)
+
+    def lanes_membrane(self, V_lanes) -> np.ndarray:
+        """Per-lane membrane state -> (B, n) in global neuron-id order
+        (identity on the monolithic engine)."""
+        return np.asarray(V_lanes)
+
+    def lane_state_zeros(self, B: int) -> np.ndarray:
+        """Fresh per-lane membrane state, (B,) + the backend's state
+        shape — the V = 0 a `run_batch` sample starts from."""
+        return np.zeros((B, self.n), np.int32)
 
     # -------------------------------------------------- schedule encoding
     # the shared core.schedule helpers at the engine's axon-table width

@@ -222,6 +222,7 @@ class HiAERNetwork:
         self._jit_step = jax.jit(self._step_impl)
         self._jit_run = jax.jit(self._run_impl)
         self._jit_run_batch = jax.jit(self._run_batch_impl)
+        self._jit_run_lanes = jax.jit(self._run_lanes_impl)
 
     def _check_placement(self, placement: Dict[int, int]) -> np.ndarray:
         core = np.full((self.n,), -1, np.int64)
@@ -357,6 +358,39 @@ class HiAERNetwork:
             self._run_impl, in_axes=(0, 0, 0, None))(V0, keys, counts,
                                                      tables)
         return spikes, prs, rrs, trs
+
+    def _run_lanes_impl(self, V0, keys, counts, tables):
+        """Serving-tier stateful batch: each lane carries its own
+        (C, n_max) membrane state and PRNG key through the dispatch;
+        lane b is bit-identical to running alone (every per-lane op is
+        elementwise in the lane axis)."""
+        return jax.vmap(self._run_impl, in_axes=(0, 0, 0, None))(
+            V0, keys, counts, tables)
+
+    def run_lanes(self, V0, keys, counts):
+        """Stateful batched run for the serving tier. V0: (B, C, n_max)
+        int32 per-core membranes, keys: (B,) PRNG keys, counts:
+        (B, T, A) int32. Returns (V_final, keys_final, spikes (B, T, n)
+        bool); the engine's own sequential state is untouched."""
+        B, T = counts.shape[0], counts.shape[1]
+        self.counter.timesteps += B * T
+        Vc, keys, spikes, prs, rrs, trs = self._jit_run_lanes(
+            jnp.asarray(V0, jnp.int32), keys, jnp.asarray(counts),
+            self._tables)
+        self.counter.tally(prs, rrs, trs)
+        return Vc, keys, np.asarray(spikes, bool)
+
+    def lanes_membrane(self, V_lanes) -> np.ndarray:
+        """Per-lane (C, n_max) state -> (B, n) membranes in global
+        neuron-id order."""
+        V = np.asarray(V_lanes)
+        pos = np.asarray(self._tables.exchange.pos_of_neuron)
+        return V.reshape(V.shape[0], -1)[:, pos]
+
+    def lane_state_zeros(self, B: int) -> np.ndarray:
+        """Fresh per-lane membrane state, (B,) + the backend's state
+        shape — the V = 0 a `run_batch` sample starts from."""
+        return np.zeros((B,) + tuple(self.Vc.shape), np.int32)
 
     # ----------------------------------------------------------- stepping
     def step(self, axon_inputs: Sequence[int]) -> np.ndarray:

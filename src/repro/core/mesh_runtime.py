@@ -237,6 +237,7 @@ class MeshNetwork:
         self._jit_step = jax.jit(self._step_impl)
         self._jit_run = jax.jit(self._run_impl)
         self._jit_run_batch = jax.jit(self._run_batch_impl)
+        self._jit_run_lanes = jax.jit(self._run_lanes_impl)
 
     # ------------------------------------------------------------ helpers
     def _device_entry_rows(self, devices):
@@ -407,6 +408,23 @@ class MeshNetwork:
         B = counts.shape[0]
         keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(
             jnp.arange(B))
+        V0 = jnp.zeros((B,) + self.Vc.shape, jnp.int32)
+        _, _, spikes, prs, rrs, trs = self._run_lanes_impl(
+            V0, keys, counts, tables)
+        return spikes, prs, rrs, trs
+
+    def _run_lanes_impl(self, V0, keys, counts, tables):
+        """The stateful-lane core both batched paths share: B lanes,
+        each carrying ITS OWN (C, n_max) membrane state and PRNG key
+        through the dispatch; the lane axis is FOLDED into the
+        device-local state inside shard_map exactly like
+        `_run_batch_impl` (one collective per level per step for all B
+        lanes). Lane b is bit-identical to running its
+        (V0[b], keys[b], counts[b]) alone — every per-lane op is
+        elementwise in the lane axis — the invariant micro-batched
+        serving rests on. Returns (V_final, keys_final, spikes, prs,
+        rrs, traffic)."""
+        B = counts.shape[0]
 
         def body(carry, c):                # c: (B, A) — step for all B
             Vc, keys = carry
@@ -426,12 +444,38 @@ class MeshNetwork:
             return (Vc, keys_next), (neuron_counts.astype(bool), pr,
                                      rr, traffic)
 
-        V0 = jnp.zeros((B,) + self.Vc.shape, jnp.int32)
-        _, (spikes, prs, rrs, trs) = jax.lax.scan(
+        (Vc, keys), (spikes, prs, rrs, trs) = jax.lax.scan(
             body, (V0, keys), jnp.swapaxes(counts, 0, 1))
         # scan stacks per-timestep leading axes: (T, B, ...) -> (B, T, ...)
-        return (jnp.swapaxes(spikes, 0, 1), prs, rrs,
+        return (Vc, keys, jnp.swapaxes(spikes, 0, 1), prs, rrs,
                 jnp.swapaxes(trs, 0, 1))
+
+    def run_lanes(self, V0, keys, counts):
+        """Stateful batched run for the serving tier. V0: (B, C, n_max)
+        int32 per-core membranes, keys: (B,) PRNG keys, counts:
+        (B, T, A) int32. All B lanes share one collective per hierarchy
+        level per timestep (the lane axis rides inside shard_map).
+        Returns (V_final, keys_final, spikes (B, T, n) bool); the
+        engine's own sequential state is untouched."""
+        B, T = counts.shape[0], counts.shape[1]
+        self.counter.timesteps += B * T
+        Vc, keys, spikes, prs, rrs, trs = self._jit_run_lanes(
+            jnp.asarray(V0, jnp.int32), keys, jnp.asarray(counts),
+            self._tables)
+        self.counter.tally(prs, rrs, trs)
+        return Vc, keys, np.asarray(spikes, bool)
+
+    def lanes_membrane(self, V_lanes) -> np.ndarray:
+        """Per-lane (C, n_max) state -> (B, n) membranes in global
+        neuron-id order."""
+        V = np.asarray(V_lanes)
+        pos = np.asarray(self._tables.pos_of_neuron)
+        return V.reshape(V.shape[0], -1)[:, pos]
+
+    def lane_state_zeros(self, B: int) -> np.ndarray:
+        """Fresh per-lane membrane state, (B,) + the backend's state
+        shape — the V = 0 a `run_batch` sample starts from."""
+        return np.zeros((B,) + tuple(self.Vc.shape), np.int32)
 
     # ----------------------------------------------------------- stepping
     def step(self, axon_inputs: Sequence[int]) -> np.ndarray:

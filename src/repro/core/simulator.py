@@ -35,6 +35,7 @@ class DenseSimulator:
         self._step = jax.jit(self._step_impl)
         self._scan = jax.jit(self._scan_impl)
         self._scan_batch = jax.jit(self._scan_batch_impl)
+        self._scan_lanes = jax.jit(self._scan_lanes_impl)
 
     def reset(self):
         self.V = jnp.zeros((self.n_neurons,), jnp.int32)
@@ -89,6 +90,30 @@ class DenseSimulator:
             self._scan_impl, in_axes=(0, 0, 0, None, None))(
             V0, keys, counts, axonW, neuronW)
         return spikes
+
+    def _scan_lanes_impl(self, V0, keys, counts, axonW, neuronW):
+        """Serving-tier stateful batch: each lane carries its own
+        membranes and PRNG key; lane b is bit-identical to running
+        alone (elementwise in the lane axis)."""
+        return jax.vmap(self._scan_impl, in_axes=(0, 0, 0, None, None))(
+            V0, keys, counts, axonW, neuronW)
+
+    def run_lanes(self, V0, keys, counts):
+        """Stateful batched run. V0: (B, N) int32, keys: (B,) PRNG
+        keys, counts: (B, T, A) int32. Returns (V_final, keys_final,
+        spikes (B, T, N) bool); the simulator's own state is
+        untouched."""
+        V, keys, spikes = self._scan_lanes(
+            jnp.asarray(V0, jnp.int32), keys, jnp.asarray(counts),
+            self.axonW, self.neuronW)
+        return V, keys, np.asarray(spikes, bool)
+
+    def lanes_membrane(self, V_lanes):
+        """Per-lane membranes are already in global neuron-id order."""
+        return np.asarray(V_lanes)
+
+    def lane_state_zeros(self, B: int):
+        return np.zeros((B, self.n_neurons), np.int32)
 
     def run(self, schedule):
         """T timesteps in one dispatch. schedule: (T, A) int32 counts or a

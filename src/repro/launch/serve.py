@@ -23,6 +23,7 @@ from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step
 from repro.models import lm
 from repro.models.lm import _attn_layout
+from repro.serve.queue import SlotPool
 
 
 class Server:
@@ -34,15 +35,27 @@ class Server:
         self.params = lm.init_params(cfg, jax.random.PRNGKey(seed), dtype)
         self.cache = lm.init_cache(cfg, slots, max_len, dtype)
         self.pos = np.zeros((slots,), np.int32)
-        self.active = np.zeros((slots,), bool)
+        # decode slots come from the same SlotPool primitive the spike
+        # server uses for session lanes (repro.serve.queue); its mask
+        # is the `active` vector the batched tick indexes
+        self.pool = SlotPool(slots)
         self.tokens = np.zeros((slots,), np.int32)
         self.outputs = [[] for _ in range(slots)]
         self._decode = jax.jit(make_decode_step(cfg))
 
-    def admit(self, slot, prompt):
-        """Prefill a slot token-by-token through the shared decode step
-        (slot-local prefill keeps every shape static)."""
-        self.active[slot] = True
+    @property
+    def active(self) -> np.ndarray:
+        return self.pool.mask
+
+    def admit(self, prompt):
+        """Claim a free decode slot and run the prompt token-by-token
+        through the shared decode step (slot-local prefill keeps every
+        shape static). Returns the slot id; raises if the pool is
+        full — callers wanting back-pressure pass a timeout to
+        `pool.acquire` themselves."""
+        slot = self.pool.acquire()
+        if slot is None:
+            raise RuntimeError(f"all {self.slots} decode slots are busy")
         self.outputs[slot] = []
         for t in prompt:
             lg, self.cache = self._decode(
@@ -51,6 +64,7 @@ class Server:
             self.pos[slot] += 1
         self.tokens[slot] = int(np.argmax(np.asarray(lg)[slot,
                                           :self.cfg.vocab_size]))
+        return slot
 
     def _tok_batch(self, slot, tok):
         b = np.zeros((self.slots, 1), np.int32)
@@ -58,7 +72,9 @@ class Server:
         return jnp.asarray(b)
 
     def tick(self):
-        """One decode step for all active slots (continuous batching)."""
+        """One decode step for all active slots (continuous batching).
+        Slots whose stream hits max_len are released back to the pool,
+        ready for the next admit."""
         if not self.active.any():
             return
         pos = int(self.pos[self.active][0])
@@ -72,7 +88,7 @@ class Server:
                 self.tokens[s] = nxt[s]
                 self.pos[s] += 1
                 if self.pos[s] >= self.max_len - 1:
-                    self.active[s] = False
+                    self.pool.release(s)
 
 
 def main(argv=None):
@@ -90,10 +106,10 @@ def main(argv=None):
         srv = Server(cfg, max_len=args.prompt_len + args.max_new + 2,
                      slots=args.requests)
         t0 = time.time()
-        for s in range(args.requests):
+        for _ in range(args.requests):
             prompt = rng.integers(1, cfg.vocab_size,
                                   args.prompt_len).tolist()
-            srv.admit(s, prompt)
+            srv.admit(prompt)
         for _ in range(args.max_new):
             srv.tick()
         dt = time.time() - t0

@@ -1,0 +1,27 @@
+"""Always-on serving tier: micro-batched spike-stream serving over
+resident `Deployment`s.
+
+    from repro.serve import SpikeServer
+
+    srv = SpikeServer(max_batch=8, max_wait_ms=2.0)
+    srv.add_model("snn", compiled, window=16, n_sessions=8)
+    with srv:
+        res = srv.submit("snn", counts).result()      # ServeResult
+
+Requests from many clients enter a double-buffered queue (the
+present/future BRAM scheme of the hardware's external-events
+processor), are micro-batched under a deadline + max-batch policy into
+single `Deployment.run_lanes` dispatches, and come back per-client:
+bit-identical to running each request alone. `python -m repro.serve`
+runs a self-contained demo server against a synthetic network.
+"""
+from repro.serve.queue import DoubleBuffer, SlotPool
+from repro.serve.server import ResidentModel, SpikeServer, next_pow2
+from repro.serve.session import (Reconfigure, Request, ServeResult,
+                                 Session, SessionStore)
+
+__all__ = [
+    "SpikeServer", "ResidentModel", "next_pow2",
+    "DoubleBuffer", "SlotPool",
+    "Request", "Reconfigure", "ServeResult", "Session", "SessionStore",
+]

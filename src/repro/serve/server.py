@@ -1,0 +1,349 @@
+"""`SpikeServer` — the always-on serving tier over resident
+`Deployment`s.
+
+The paper exposes HiAER-Spike to the community over a web portal; this
+is the layer that makes one process serve many concurrent clients:
+
+  * requests enter a double-buffered queue (`serve.queue.DoubleBuffer`
+    — the present/future BRAM scheme of the hardware's external-events
+    processor: clients append to the FUTURE buffer while the PRESENT
+    batch executes, and the swap happens only at a batch boundary);
+  * the dispatcher micro-batches them under a deadline + max-batch
+    policy into ONE `Deployment.run_lanes` dispatch — the mesh tier's
+    amortized collectives (one per hierarchy level per step for the
+    whole batch) are what make this an almost-free multiplexing;
+  * batch shapes are BUCKETED to powers of two, so a serving session
+    compiles each model's lane path at most log2(max_batch) + 1 times
+    no matter how client concurrency fluctuates (pinned by the
+    `repro.analysis.retrace` gate in tests/test_retrace.py);
+  * every client lane is state-isolated: a stateless request runs from
+    V = 0 under its own deterministic PRNG stream, a session request
+    runs on its private resident lane — either way the result is
+    bit-identical to running the request alone, regardless of which
+    neighbours shared its micro-batch;
+  * `write_synapses` reconfigurations ride the same ordered queue as
+    requests but act as BARRIERS: they are applied strictly between
+    batches (never mid-flight), so the weight history every request
+    observes equals the serial execution of the submission order;
+  * multiple resident models share the process; requests route by
+    model id and batches never mix models.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.compile import CompiledNetwork
+from repro.core.deploy import Deployment, deploy
+from repro.serve.queue import DoubleBuffer
+from repro.serve.session import (Reconfigure, Request, ServeResult,
+                                 Session, SessionStore)
+
+__all__ = ["SpikeServer", "ResidentModel", "next_pow2"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclass
+class ResidentModel:
+    """One deployed network held resident by the server: its runtime
+    handle, the fixed serving window (every dispatch runs exactly
+    `window` timesteps — the frame tick of the event processor), and
+    its session lanes."""
+    name: str
+    dep: Deployment
+    window: int
+    sessions: SessionStore
+    requests: int = 0
+    batches: int = 0
+    lane_steps: int = 0
+    trace_shapes: set = field(default_factory=set)
+
+
+class SpikeServer:
+    """Micro-batching spike-stream server over resident deployments.
+
+        srv = SpikeServer(max_batch=8, max_wait_ms=2.0)
+        srv.add_model("snn", compiled, window=16, n_sessions=8)
+        with srv:
+            fut = srv.submit("snn", counts)          # stateless
+            sid = srv.open_session("snn")            # resident lane
+            fut2 = srv.submit("snn", counts, session=sid)
+            res = fut.result()          # ServeResult: spikes, membrane
+
+    Responses are `ServeResult`s carrying the client's own lane sliced
+    out of whatever micro-batch it rode in — bit-identical to running
+    the request alone.
+    """
+
+    def __init__(self, *, max_batch: int = 8, max_wait_ms: float = 2.0,
+                 bucket_batch: bool = True):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) * 1e-3
+        self.bucket_batch = bool(bucket_batch)
+        self.models: Dict[str, ResidentModel] = {}
+        self._buf = DoubleBuffer()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._stats_lock = threading.Lock()
+        self.latencies_ms: List[float] = []
+        self.batch_sizes: List[int] = []
+
+    # ------------------------------------------------------------ models
+    def add_model(self, name: str,
+                  compiled: Optional[CompiledNetwork] = None, *,
+                  deployment: Optional[Deployment] = None,
+                  window: int, n_sessions: int = 8, seed: int = 0,
+                  **deploy_kw) -> ResidentModel:
+        """Make a network resident under `name`. Pass a compiled
+        artifact (deployed here with `seed`/`deploy_kw`) or an existing
+        `Deployment`. `window` fixes the per-dispatch timestep count —
+        stateless requests shorter than the window are zero-padded and
+        their responses sliced back; session requests must fill it.
+        `n_sessions` lanes are allocated for resident client state."""
+        if name in self.models:
+            raise ValueError(f"model {name!r} already resident")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if deployment is None:
+            if compiled is None:
+                raise TypeError("add_model needs compiled= or "
+                                "deployment=")
+            deployment = deploy(compiled, seed=seed, **deploy_kw)
+        deployment.alloc_lanes(n_sessions)
+        m = ResidentModel(name=name, dep=deployment, window=int(window),
+                          sessions=SessionStore(n_sessions))
+        self.models[name] = m
+        return m
+
+    def _model(self, name: str) -> ResidentModel:
+        m = self.models.get(name)
+        if m is None:
+            raise KeyError(f"no resident model {name!r} "
+                           f"(have {sorted(self.models)})")
+        return m
+
+    # ---------------------------------------------------------- sessions
+    def open_session(self, model: str) -> int:
+        """Claim a resident lane for a streaming client; returns the
+        session id. The lane's membranes and PRNG stream persist
+        between this client's windows."""
+        return self._model(model).sessions.open(model).id
+
+    def close_session(self, model: str, session_id: int) -> None:
+        """Release the session's lane (per-lane reset first, so the
+        next occupant starts clean)."""
+        m = self._model(model)
+        s = m.sessions.close(session_id)
+        m.dep.reset(lanes=[s.lane])
+
+    def reset_session(self, model: str, session_id: int) -> None:
+        """Reset ONE client's lane to V = 0 and its construction-seed
+        stream; every other lane is untouched."""
+        m = self._model(model)
+        m.dep.reset(lanes=[m.sessions.get(session_id).lane])
+
+    def session_membrane(self, model: str, session_id: int) -> np.ndarray:
+        """Current (n,) membranes of a session's lane."""
+        m = self._model(model)
+        return m.dep.lane_membrane(m.sessions.get(session_id).lane)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, model: str, schedule, *,
+               session: Optional[int] = None, seed: int = 0) -> Future:
+        """Enqueue one spike window; returns a Future[ServeResult].
+        `schedule` is a (T, A) int32 count array or a length-T sequence
+        of axon-id lists, T <= the model's window (== for session
+        requests — a resident lane always advances exactly one window
+        per request, the frame-tick contract that keeps every serving
+        batch one compiled shape)."""
+        m = self._model(model)
+        counts = sched.encode_schedule(schedule,
+                                       m.dep.compiled.n_axons)
+        T = counts.shape[0]
+        if T > m.window:
+            raise ValueError(
+                f"request has {T} steps, model {model!r} serves "
+                f"windows of {m.window} — split it across windows")
+        if session is not None:
+            m.sessions.get(session)          # raises on unknown ids
+            if T != m.window:
+                raise ValueError(
+                    f"session requests must fill the {m.window}-step "
+                    f"window exactly, got {T} (a resident lane always "
+                    f"advances one full window per request)")
+        if T < m.window:
+            counts = np.concatenate(
+                [counts, np.zeros((m.window - T, counts.shape[1]),
+                                  np.int32)])
+        req = Request(model=model, counts=counts, steps=T,
+                      session=session, seed=int(seed),
+                      t_submit=time.monotonic())
+        self._buf.put(req)
+        return req.future
+
+    def reconfigure(self, model: str, pre, post, weight) -> Future:
+        """Enqueue a batched `write_synapses` edit. It is applied
+        strictly BETWEEN batches, in submission order: requests
+        submitted before it observe the old weights, requests after it
+        the new ones — exactly the serial execution order."""
+        self._model(model)
+        rc = Reconfigure(model=model, pre=np.asarray(pre),
+                         post=np.asarray(post),
+                         weight=np.asarray(weight))
+        self._buf.put(rc)
+        return rc.future
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "SpikeServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._dispatch_loop,
+                                        name="spike-server-dispatch",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the dispatcher. `drain=True` (default) serves every
+        already-queued item first; pending futures are never dropped
+        silently — with drain=False they fail with RuntimeError."""
+        if self._thread is None:
+            return
+        self._drain = drain
+        self._stop.set()
+        self._buf.close()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "SpikeServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---------------------------------------------------------- dispatch
+    def _coalesce(self, batch: List, nxt) -> bool:
+        """May `nxt` join the open micro-batch? Reconfiguration items
+        are barriers (always alone); batches never mix models; a
+        session can run at most one window per dispatch (its lane is a
+        single carry)."""
+        head = batch[0]
+        if isinstance(head, Reconfigure) or isinstance(nxt, Reconfigure):
+            return False
+        if nxt.model != head.model:
+            return False
+        if nxt.session is not None and any(
+                r.session == nxt.session for r in batch):
+            return False
+        return True
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            items = self._buf.take(self.max_batch, self.max_wait_s,
+                                   coalesce=self._coalesce)
+            if not items:
+                if self._stop.is_set():
+                    break
+                continue
+            if self._stop.is_set() and not getattr(self, "_drain", True):
+                for it in items:
+                    it.future.set_exception(
+                        RuntimeError("server stopped before dispatch"))
+                continue
+            try:
+                if isinstance(items[0], Reconfigure):
+                    self._apply_reconfigure(items[0])
+                else:
+                    self._run_batch(items)
+            except BaseException as e:          # noqa: BLE001 — futures
+                for it in items:                # carry the error out
+                    if not it.future.done():
+                        it.future.set_exception(e)
+
+    def _apply_reconfigure(self, rc: Reconfigure) -> None:
+        m = self._model(rc.model)
+        m.dep.write_synapses(rc.pre, rc.post, rc.weight)
+        rc.future.set_result(m.dep.weight_uploads)
+
+    def _run_batch(self, reqs: List[Request]) -> None:
+        """ONE `run_lanes` dispatch for the whole micro-batch: stack
+        the (window, A) counts, bucket B up to a power of two with
+        scratch rows (lane -1, zero events), execute, slice each
+        client's own lane back out."""
+        m = self._model(reqs[0].model)
+        B = len(reqs)
+        Bp = min(next_pow2(B), self.max_batch) if self.bucket_batch \
+            else B
+        counts = np.stack([r.counts for r in reqs]
+                          + [np.zeros_like(reqs[0].counts)] * (Bp - B))
+        lanes = [(-1 if r.session is None
+                  else m.sessions.get(r.session).lane)
+                 for r in reqs] + [-1] * (Bp - B)
+        seeds = [r.seed for r in reqs] + [0] * (Bp - B)
+        spikes, membranes = m.dep.run_lanes(lanes, counts, seeds=seeds)
+        m.trace_shapes.add((Bp, m.window))
+        done = time.monotonic()
+        m.requests += B
+        m.batches += 1
+        m.lane_steps += B * m.window
+        lats = []
+        for i, r in enumerate(reqs):
+            lat = (done - r.t_submit) * 1e3
+            lats.append(lat)
+            if r.session is not None:
+                s = m.sessions.get(r.session)
+                s.requests += 1
+                s.steps += m.window
+            r.future.set_result(ServeResult(
+                spikes=spikes[i, :r.steps], membrane=membranes[i],
+                latency_ms=lat, batch_size=B, model=r.model,
+                session=r.session))
+        with self._stats_lock:
+            self.latencies_ms.extend(lats)
+            self.batch_sizes.append(B)
+
+    # ------------------------------------------------------------- stats
+    def reset_stats(self) -> None:
+        """Drop accumulated latency/batch samples (e.g. after warmup,
+        so percentiles reflect serving, not tracing)."""
+        with self._stats_lock:
+            self.latencies_ms.clear()
+            self.batch_sizes.clear()
+
+    def stats(self) -> dict:
+        """Serving statistics: latency percentiles, occupancy, and the
+        ingestion buffer's swap accounting."""
+        with self._stats_lock:
+            lats = np.asarray(self.latencies_ms, float)
+            sizes = list(self.batch_sizes)
+        out = {
+            "requests": int(lats.size),
+            "batches": len(sizes),
+            "mean_batch_size": float(np.mean(sizes)) if sizes else 0.0,
+            "p50_ms": float(np.percentile(lats, 50)) if lats.size
+            else 0.0,
+            "p99_ms": float(np.percentile(lats, 99)) if lats.size
+            else 0.0,
+            "buffer": self._buf.stats(),
+            "models": {name: {"requests": mm.requests,
+                              "batches": mm.batches,
+                              "lane_steps": mm.lane_steps,
+                              "open_sessions": mm.sessions.n_open,
+                              "batch_shapes":
+                                  sorted(mm.trace_shapes)}
+                       for name, mm in self.models.items()},
+        }
+        return out

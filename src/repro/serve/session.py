@@ -1,0 +1,117 @@
+"""Serving-tier data model: requests, results, sessions.
+
+A `Request` is one client window of spike input for one resident
+model; a `Session` pins a client to a persistent deployment lane
+(membranes + PRNG stream survive between windows, so a streaming
+client observes exactly the dynamics of one uninterrupted run). A
+`Reconfigure` item is a batched `write_synapses` edit that rides the
+same ordered queue as requests but acts as a BARRIER: it is never
+applied while a batch is in flight, and every request submitted before
+it runs under the old weights, every request after under the new ones
+— the serial-equivalence contract tests/test_serve.py pins.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serve.queue import SlotPool
+
+__all__ = ["Request", "Reconfigure", "ServeResult", "Session",
+           "SessionStore"]
+
+
+@dataclass
+class Request:
+    """One client window: (T, A) int32 axon event counts for `model`.
+    `session` is a lane-backed session id (None = stateless scratch
+    run under the deterministic stream derived from `seed`); `steps`
+    is the client's un-padded T, used to slice the response."""
+    model: str
+    counts: np.ndarray
+    steps: int
+    session: Optional[int] = None
+    seed: int = 0
+    future: Future = field(default_factory=Future)
+    t_submit: float = 0.0
+
+
+@dataclass
+class Reconfigure:
+    """A batched synapse-weight edit queued as a batch barrier."""
+    model: str
+    pre: np.ndarray
+    post: np.ndarray
+    weight: np.ndarray
+    future: Future = field(default_factory=Future)
+
+
+@dataclass
+class ServeResult:
+    """Per-request response: the client's own lane sliced out of the
+    micro-batch. `spikes` is (steps, n) bool, `membrane` the (n,) int32
+    final potentials of the lane (global neuron-id order)."""
+    spikes: np.ndarray
+    membrane: np.ndarray
+    latency_ms: float
+    batch_size: int
+    model: str
+    session: Optional[int] = None
+
+
+@dataclass
+class Session:
+    """A client's resident state handle: deployment lane `lane` of
+    model `model`."""
+    id: int
+    model: str
+    lane: int
+    requests: int = 0
+    steps: int = 0
+
+
+class SessionStore:
+    """Lane-backed session registry for one resident model. Lanes come
+    from a `SlotPool` over the deployment's allocated lanes; closing a
+    session releases its lane for the next client (after a per-lane
+    reset, so no state leaks between successive occupants)."""
+
+    def __init__(self, n_lanes: int):
+        self.pool = SlotPool(n_lanes)
+        self._sessions: Dict[int, Session] = {}
+        self._lock = threading.Lock()
+
+    def open(self, model: str) -> Session:
+        lane = self.pool.acquire()
+        if lane is None:
+            raise RuntimeError(
+                f"model {model!r} has no free session lanes "
+                f"({self.pool.n_slots} allocated)")
+        s = Session(id=lane, model=model, lane=lane)
+        with self._lock:
+            self._sessions[s.id] = s
+        return s
+
+    def get(self, session_id: int) -> Session:
+        with self._lock:
+            s = self._sessions.get(session_id)
+        if s is None:
+            raise KeyError(f"unknown session {session_id}")
+        return s
+
+    def close(self, session_id: int) -> Session:
+        with self._lock:
+            s = self._sessions.pop(session_id, None)
+        if s is None:
+            raise KeyError(f"unknown session {session_id}")
+        self.pool.release(s.lane)
+        return s
+
+    @property
+    def n_open(self) -> int:
+        with self._lock:
+            return len(self._sessions)

@@ -108,3 +108,41 @@ def test_detector_finds_backend_jit_attrs():
     net = small_net("engine")
     names = {name for _, name in compile_counts(net._impl)}
     assert {"_jit_step", "_jit_run", "_jit_run_batch"} <= names
+
+
+# ------------------------------------------------- the serving session
+def test_serving_session_compiles_at_most_log2_bmax_plus_one():
+    """A serving session with FLUCTUATING client concurrency stays
+    within log2(B_max) + 1 lane-path traces: the server buckets every
+    micro-batch to a power of two at a fixed window, so wildly varying
+    burst sizes reuse at most {1, 2, 4, 8}-lane executables. Then a
+    replay pass over the same shapes must not add a single trace."""
+    import math
+
+    from repro.serve import SpikeServer
+    max_batch = 8
+    srv = SpikeServer(max_batch=max_batch, max_wait_ms=3.0)
+    net = small_net("engine")
+    srv.add_model("m", deployment=net._dep, window=3, n_sessions=2)
+    rng = np.random.default_rng(0)
+    A = len(net.axon_keys)
+
+    def burst(n):
+        futs = [srv.submit("m", rng.integers(0, 2, (3, A))
+                           .astype(np.int32), seed=i)
+                for i in range(n)]
+        for f in futs:
+            f.result(timeout=120)
+
+    impl = srv.models["m"].dep.impl
+    with srv:
+        for n in (1, 5, 3, 8, 2, 7, 4, 6):       # fluctuating load
+            burst(n)
+        lane = {k: v for k, v in compile_counts(impl).items()
+                if "lanes" in k[1]}
+        bound = int(math.log2(max_batch)) + 1
+        assert lane and sum(lane.values()) <= bound, lane
+        det = RetraceDetector.of(impl)
+        for n in (8, 1, 6, 3):                   # warm shapes: replay
+            burst(n)
+        det.assert_no_retrace()

@@ -1,0 +1,339 @@
+"""Serving tier (PR 7) — micro-batched spike serving over resident
+deployments.
+
+Pins the acceptance invariants:
+  * `Deployment.run_lanes` entry b is bit-identical to running it in a
+    batch of ONE on every backend (state/noise isolation between
+    micro-batch neighbours), two consecutive windows on a lane equal
+    one uninterrupted run, and a fresh lane reproduces `run_batch`;
+  * `reset(lanes=[...])` resets ONLY those lanes;
+  * a served request (8 concurrent client threads, deadline+max-batch
+    admission, pow2 bucketing) returns exactly what the same request
+    produces run alone, serially;
+  * `write_synapses` reconfiguration interleaved with in-flight
+    requests lands BETWEEN batches: everything submitted before it
+    sees the old weights, everything after the new ones — and engine
+    == mesh on the whole interleaved history;
+  * the double buffer preserves FIFO across promotions and a refused
+    coalesce item stays at the head; SlotPool never double-allocates;
+  * an over-wide schedule raises the structured E_SCHED_WIDTH report.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisError
+from repro.core.api import LIF_neuron
+from repro.core.compile import compile_spec
+from repro.core.deploy import deploy
+from repro.core.partition import Hierarchy
+from repro.core.spec import NetworkSpec
+from repro.serve import (DoubleBuffer, Reconfigure, SlotPool,
+                         SpikeServer, next_pow2)
+
+BACKENDS = ("simulator", "engine", "hiaer", "mesh")
+
+
+def small_compiled(backend, n_axons=5, n_neurons=12, seed=3):
+    rng = np.random.default_rng(seed)
+    spec = NetworkSpec()
+    ax = spec.add_axons(n_axons)
+    nid = spec.add_neurons(n_neurons,
+                           LIF_neuron(threshold=5, nu=-32, lam=50))
+    pre = np.concatenate([np.repeat(ax, 4), np.repeat(nid, 3)])
+    post = rng.integers(0, n_neurons, pre.shape[0])
+    w = rng.integers(-3, 7, pre.shape[0])
+    spec.connect(pre, post, w)
+    spec.set_outputs(list(range(4)))
+    kw = {}
+    if backend in ("hiaer", "mesh"):
+        kw["hierarchy"] = Hierarchy(1, 1, 3, -(-n_neurons // 3))
+    return compile_spec(spec, target=backend, **kw)
+
+
+def windows(rng, B, T, A):
+    return rng.integers(0, 2, (B, T, A)).astype(np.int32)
+
+
+# ---------------------------------------------------------- lane runtime
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_run_lanes_isolated_and_persistent(backend):
+    """Batched lanes == each lane alone; two windows == one double-
+    length run; per-lane reset touches only its lane."""
+    c = small_compiled(backend)
+    rng = np.random.default_rng(0)
+    A, T, B = c.n_axons, 4, 3
+    w1, w2 = windows(rng, B, T, A), windows(rng, B, T, A)
+
+    dep = deploy(c, seed=1)
+    dep.alloc_lanes(B)
+    s1, V1 = dep.run_lanes(range(B), w1)
+    s2, V2 = dep.run_lanes(range(B), w2)
+
+    # each lane alone (batch of one), same construction seed
+    solo = deploy(c, seed=1)
+    solo.alloc_lanes(B)
+    for b in range(B):
+        sa, Va = solo.run_lanes([b], w1[b:b + 1])
+        sb, Vb = solo.run_lanes([b], w2[b:b + 1])
+        np.testing.assert_array_equal(sa[0], s1[b])
+        np.testing.assert_array_equal(Va[0], V1[b])
+        np.testing.assert_array_equal(sb[0], s2[b])
+        np.testing.assert_array_equal(Vb[0], V2[b])
+
+    # two consecutive T-windows == one uninterrupted 2T window
+    long = deploy(c, seed=1)
+    long.alloc_lanes(B)
+    sl, Vl = long.run_lanes(range(B),
+                            np.concatenate([w1, w2], axis=1))
+    np.testing.assert_array_equal(sl[:, :T], s1)
+    np.testing.assert_array_equal(sl[:, T:], s2)
+    np.testing.assert_array_equal(Vl, V2)
+
+    # reset lane 1 only: lane 1 replays its first window, lane 0 and 2
+    # continue from where they were
+    dep.reset(lanes=[1])
+    np.testing.assert_array_equal(dep.lane_membrane(0), V2[0])
+    assert np.array_equal(dep.lane_membrane(1),
+                          np.zeros_like(V2[1]))
+    s3, _ = dep.run_lanes([1], w1[1:2])
+    np.testing.assert_array_equal(s3[0], s1[1])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fresh_lanes_match_run_batch_and_scratch_is_stateless(backend):
+    """Fresh lane l's first window == run_batch sample l on a fresh
+    deployment (same fold_in stream); scratch (-1) entries are
+    deterministic in their seed and leave no trace on lane state."""
+    c = small_compiled(backend)
+    rng = np.random.default_rng(4)
+    B, T = 3, 4
+    w = windows(rng, B, T, c.n_axons)
+
+    dep = deploy(c, seed=2)
+    dep.alloc_lanes(B)
+    lanes_spk, _ = dep.run_lanes(range(B), w)
+    ref = deploy(c, seed=2).run_batch(w)
+    np.testing.assert_array_equal(lanes_spk, ref)
+
+    s1, V1 = dep.run_lanes([-1], w[:1], seeds=[9])
+    before = dep.lane_membrane(0).copy()
+    s2, V2 = dep.run_lanes([-1, -1], w[:2], seeds=[9, 7])
+    np.testing.assert_array_equal(s2[0], s1[0])     # seed-deterministic
+    np.testing.assert_array_equal(V2[0], V1[0])     # in ANY batch
+    np.testing.assert_array_equal(dep.lane_membrane(0), before)
+
+
+def test_run_lanes_rejects_bad_ids_and_duplicates():
+    dep = deploy(small_compiled("engine"), seed=0)
+    dep.alloc_lanes(2)
+    w = windows(np.random.default_rng(0), 2, 3, dep.compiled.n_axons)
+    with pytest.raises(ValueError, match="appear twice"):
+        dep.run_lanes([1, 1], w)
+    with pytest.raises(IndexError, match="allocated lanes"):
+        dep.run_lanes([0, 5], w)
+    with pytest.raises(ValueError, match="lane ids"):
+        dep.run_lanes([0], w)
+
+
+def test_pad_overwide_schedule_is_structured_error():
+    dep = deploy(small_compiled("engine"), seed=0)
+    wide = np.zeros((3, dep.n_axon_slots + 4), np.int32)
+    with pytest.raises(AnalysisError) as ei:
+        dep._pad(wide)
+    assert "E_SCHED_WIDTH" in str(ei.value)
+    assert ei.value.report.findings[0].code == "E_SCHED_WIDTH"
+
+
+# ------------------------------------------------------ queue primitives
+def test_double_buffer_fifo_and_coalesce_barrier():
+    buf = DoubleBuffer()
+    for i in range(5):
+        buf.put(i)
+    assert buf.take(3) == [0, 1, 2]            # max-batch cut, FIFO
+    buf.put(5)
+    # refuse the 5-join: 3,4 dispatch, 5 stays at the head for the
+    # next take (barrier semantics without reordering)
+    assert buf.take(8, coalesce=lambda b, n: n != 5) == [3, 4]
+    assert buf.take(8) == [5]
+    assert buf.take(8, idle_wait_s=0.01) == []
+    st = buf.stats()
+    assert st["pending"] == 0 and st["swaps"] >= 2
+    buf.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        buf.put(99)
+
+
+def test_double_buffer_deadline_admits_late_items():
+    buf = DoubleBuffer()
+    buf.put("a")
+    t = threading.Timer(0.02, lambda: buf.put("b"))
+    t.start()
+    try:
+        assert buf.take(4, max_wait_s=0.5) == ["a", "b"]
+    finally:
+        t.cancel()
+
+
+def test_slot_pool_allocates_each_slot_once():
+    pool = SlotPool(3)
+    got = {pool.acquire() for _ in range(3)}
+    assert got == {0, 1, 2} and pool.acquire() is None
+    assert pool.n_active == 3 and pool.mask.all()
+    pool.release(1)
+    assert pool.acquire() == 1
+    with pytest.raises(ValueError, match="not held"):
+        pool.release(2) or pool.release(2)
+    with pytest.raises(IndexError):
+        pool.release(7)
+
+
+def test_next_pow2():
+    assert [next_pow2(i) for i in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+# --------------------------------------------------------- the server
+def test_served_results_bit_exact_vs_serial_under_concurrency():
+    """8 client threads (stateless + sessions) against one server; every
+    response equals the same request run alone, serially."""
+    c = small_compiled("engine")
+    rng = np.random.default_rng(7)
+    T, n_req = 4, 3
+    srv = SpikeServer(max_batch=8, max_wait_ms=4.0)
+    srv.add_model("m", c, window=T, n_sessions=4, seed=0)
+    reqs = {(cl, r): windows(rng, 1, T, c.n_axons)[0]
+            for cl in range(8) for r in range(n_req)}
+    results = {}
+
+    def client(cl):
+        sid = srv.open_session("m") if cl < 4 else None
+        for r in range(n_req):
+            results[(cl, r)] = srv.submit(
+                "m", reqs[(cl, r)], session=sid,
+                seed=cl * 100 + r).result(timeout=120)
+        if sid is not None:
+            results[("lane", cl)] = sid
+            srv.close_session("m", sid)
+
+    with srv:
+        ts = [threading.Thread(target=client, args=(cl,))
+              for cl in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert srv.stats()["requests"] == 8 * n_req
+
+    # serial reference: sessions replay on their actual lane, stateless
+    # requests replay as scratch entries with their seed
+    ref = deploy(c, seed=0)
+    ref.alloc_lanes(4)
+    for cl in range(8):
+        lane = results.get(("lane", cl), -1)
+        for r in range(n_req):
+            seeds = [cl * 100 + r] if lane < 0 else None
+            spk, V = ref.run_lanes([lane], reqs[(cl, r)][None],
+                                   seeds=seeds)
+            got = results[(cl, r)]
+            np.testing.assert_array_equal(got.spikes, spk[0])
+            np.testing.assert_array_equal(got.membrane, V[0])
+            assert got.batch_size >= 1 and got.model == "m"
+
+
+def _reconfigure_history(backend):
+    """Serve 4 requests, reconfigure, serve 4 more (all in flight
+    together); assert the history equals serial execution and return
+    the served (spikes, membrane) pairs."""
+    c = small_compiled(backend)
+    rng = np.random.default_rng(11)
+    T = 4
+    pre, post = [-1], [int(c.syn_post[0])]
+    w_old = int(c.syn_weight[0])
+    reqs = windows(rng, 8, T, c.n_axons)
+
+    srv = SpikeServer(max_batch=4, max_wait_ms=3.0)
+    srv.add_model("m", c, window=T, n_sessions=0, seed=0)
+    with srv:
+        before = [srv.submit("m", reqs[i], seed=i) for i in range(4)]
+        fut_rc = srv.reconfigure("m", pre, post, [w_old + 2])
+        after = [srv.submit("m", reqs[i], seed=i) for i in range(4, 8)]
+        got = [f.result(timeout=120) for f in before + after]
+        assert fut_rc.result(timeout=120) >= 1      # applied, counted
+
+    # serial reference on a FRESH compile (the served artifact's weight
+    # tables were mutated in place by the reconfiguration)
+    ref = deploy(small_compiled(backend), seed=0)
+    exp = []
+    for i in range(8):
+        if i == 4:
+            ref.write_synapses(pre, post, [w_old + 2])
+        spk, V = ref.run_lanes([-1], reqs[i][None], seeds=[i])
+        exp.append((spk[0], V[0]))
+    for g, (espk, eV) in zip(got, exp):
+        np.testing.assert_array_equal(g.spikes, espk)
+        np.testing.assert_array_equal(g.membrane, eV)
+    return [(g.spikes, g.membrane) for g in got]
+
+
+def test_reconfigure_while_serving_engine_matches_mesh():
+    """Interleaved reconfiguration is serial-equivalent on both
+    backends, and the two backends agree bit for bit."""
+    eng = _reconfigure_history("engine")
+    mesh = _reconfigure_history("mesh")
+    for (se, ve), (sm, vm) in zip(eng, mesh):
+        np.testing.assert_array_equal(se, sm)
+        np.testing.assert_array_equal(ve, vm)
+
+
+def test_session_lifecycle_and_window_contract():
+    c = small_compiled("simulator")
+    srv = SpikeServer(max_batch=4, max_wait_ms=1.0)
+    srv.add_model("m", c, window=4, n_sessions=2, seed=0)
+    rng = np.random.default_rng(2)
+    w = windows(rng, 1, 4, c.n_axons)[0]
+    with srv:
+        sid = srv.open_session("m")
+        srv.submit("m", w, session=sid).result(timeout=60)
+        V = srv.session_membrane("m", sid)
+        srv.reset_session("m", sid)                  # back to V = 0
+        assert not srv.session_membrane("m", sid).any()
+        r2 = srv.submit("m", w, session=sid).result(timeout=60)
+        np.testing.assert_array_equal(r2.membrane, V)   # same stream
+        with pytest.raises(ValueError, match="fill the 4-step"):
+            srv.submit("m", w[:2], session=sid)
+        with pytest.raises(ValueError, match="split it across"):
+            srv.submit("m", np.zeros((9, c.n_axons), np.int32))
+        # short STATELESS requests are padded and sliced
+        short = srv.submit("m", w[:2]).result(timeout=60)
+        assert short.spikes.shape[0] == 2
+        srv.close_session("m", sid)
+        with pytest.raises(KeyError, match="unknown session"):
+            srv.submit("m", w, session=sid)
+        srv.open_session("m"), srv.open_session("m")
+        with pytest.raises(RuntimeError, match="no free session"):
+            srv.open_session("m")
+        with pytest.raises(KeyError, match="no resident model"):
+            srv.submit("nope", w)
+
+
+def test_server_batches_only_within_model():
+    """Two resident models: batches never mix them, and both serve."""
+    ce = small_compiled("engine")
+    cs = small_compiled("simulator", n_axons=3, n_neurons=6)
+    srv = SpikeServer(max_batch=8, max_wait_ms=3.0)
+    srv.add_model("e", ce, window=3, n_sessions=0)
+    srv.add_model("s", cs, window=3, n_sessions=0)
+    rng = np.random.default_rng(5)
+    with srv:
+        fe = [srv.submit("e", windows(rng, 1, 3, ce.n_axons)[0],
+                         seed=i) for i in range(3)]
+        fs = [srv.submit("s", windows(rng, 1, 3, cs.n_axons)[0],
+                         seed=i) for i in range(3)]
+        re_, rs = [f.result(timeout=60) for f in fe], \
+            [f.result(timeout=60) for f in fs]
+    assert all(r.spikes.shape[1] == ce.n_neurons for r in re_)
+    assert all(r.spikes.shape[1] == cs.n_neurons for r in rs)
+    shapes = srv.stats()["models"]
+    assert shapes["e"]["requests"] == 3 and shapes["s"]["requests"] == 3
