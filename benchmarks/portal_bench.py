@@ -1,0 +1,217 @@
+"""Portal benchmark — HTTP transport tax over in-process serving.
+
+Eight concurrent clients stream spike windows at one resident engine
+deployment three ways: directly at the `SpikeServer` (in-process
+baseline), over HTTP through ONE portal front end, and over HTTP
+through FOUR bridged front-end worker processes sharing the port via
+SO_REUSEPORT. Three gates, each a web-portal claim CI must hold
+(violations exit nonzero):
+
+  * TRANSPORT TAX: HTTP req/sec (best of 1 vs 4 workers) >= 0.5x the
+    in-process rate at 8 concurrent clients — JSON + sockets + the
+    unix-domain bridge must cost less than the serving itself;
+  * BIT-EXACT: every HTTP response digest equals the same request
+    submitted in-process (`result_digest` over spikes AND membranes) —
+    the transport must never touch the numbers;
+  * TRACES: the whole HTTP session compiles NOTHING beyond the warmed
+    pow2 buckets (`compile_counts` unchanged) — the portal is a
+    transport, not a new trace shape.
+
+Results (client-side p50/p99 per mode, req/sec, worker counts) go to
+BENCH_portal.json (CI artifact).
+"""
+import asyncio
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.analysis.retrace import compile_counts
+from repro.core.compile import compile_spec
+from repro.portal import Portal
+from repro.portal.gateway import result_digest
+from repro.serve import SpikeServer
+
+from serve_bench import bench_spec
+
+
+def _encode_post(model, counts, seed) -> bytes:
+    body = json.dumps({"counts": counts.tolist(),
+                       "seed": seed}).encode("utf-8")
+    return (f"POST /v1/{model}/run HTTP/1.1\r\nHost: bench\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n"
+            ).encode("latin-1") + body
+
+
+async def _one_request(reader, writer, wire: bytes) -> dict:
+    writer.write(wire)
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    clen = 0
+    for ln in head.split(b"\r\n"):
+        if ln.lower().startswith(b"content-length:"):
+            clen = int(ln.split(b":", 1)[1])
+    body = json.loads((await reader.readexactly(clen)).decode("utf-8"))
+    if status != 200:
+        raise SystemExit(f"portal bench: HTTP {status}: {body}")
+    return body
+
+
+def _http_clients(port, reqs, clients, per_client):
+    """8 concurrent keep-alive clients on one event loop (the standard
+    single-threaded load-generator shape — client threads would bench
+    the generator's GIL, not the portal); returns (wall_s, digests,
+    client-side latencies ms)."""
+    wires = {k: _encode_post("bench", w, k[0] * 1000 + k[1])
+             for k, w in reqs.items()}
+    digests, lats = {}, []
+
+    async def client(cid):
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       port)
+        for r in range(per_client):
+            t0 = time.monotonic()
+            body = await _one_request(reader, writer, wires[(cid, r)])
+            lats.append((time.monotonic() - t0) * 1e3)
+            digests[(cid, r)] = body["digest"]
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+    async def drive():
+        # warm the accept + dispatch path outside the timed window
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       port)
+        await _one_request(reader, writer, wires[(0, 0)])
+        writer.close()
+        t0 = time.monotonic()
+        await asyncio.gather(*[client(c) for c in range(clients)])
+        return time.monotonic() - t0
+
+    wall = asyncio.run(drive())
+    return wall, digests, np.asarray(lats, float)
+
+
+def run(n_axons=24, n_neurons=96, window=8, clients=8,
+        requests_per_client=6, max_batch=8, wait_ms=8.0,
+        backend="engine", quiet=False, out_json="BENCH_portal.json"):
+    rng = np.random.default_rng(23)
+    compiled = compile_spec(bench_spec(n_axons, n_neurons),
+                            target=backend)
+    reqs = {(c, r): rng.integers(0, 2, (window, n_axons))
+            .astype(np.int32)
+            for c in range(clients) for r in range(requests_per_client)}
+    total = clients * requests_per_client
+
+    srv = SpikeServer(max_batch=max_batch, max_wait_ms=wait_ms)
+    m = srv.add_model("bench", compiled, window=window, n_sessions=0,
+                      seed=0)
+    with srv:
+        # warm every pow2 bucket outside every timed window (direct
+        # lane dispatches: deterministic, unlike concurrent submits)
+        zero = np.zeros((window, n_axons), np.int32)
+        B = 1
+        while B <= max_batch:
+            m.dep.run_lanes([-1] * B, np.stack([zero] * B))
+            B *= 2
+        traces_before = compile_counts(m.dep.impl)
+
+        # ---- in-process baseline: 8 threads at srv.submit ----
+        ref = {}
+
+        def direct(cid):
+            for r in range(requests_per_client):
+                ref[(cid, r)] = srv.submit(
+                    "bench", reqs[(cid, r)],
+                    seed=cid * 1000 + r).result(timeout=300)
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=direct, args=(c,))
+                   for c in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall_direct = time.monotonic() - t0
+        rps_direct = total / wall_direct
+        want = {k: result_digest(v.spikes, v.membrane)
+                for k, v in ref.items()}
+
+        # ---- HTTP, one in-process front end ----
+        with Portal(srv, port=0) as portal:
+            wall_1, dig_1, lats_1 = _http_clients(
+                portal.port, reqs, clients, requests_per_client)
+        rps_1 = total / wall_1
+
+        # ---- HTTP, four bridged worker processes ----
+        with Portal(srv, port=0, workers=4) as portal:
+            wall_4, dig_4, lats_4 = _http_clients(
+                portal.port, reqs, clients, requests_per_client)
+        rps_4 = total / wall_4
+
+        traces_after = compile_counts(m.dep.impl)
+
+    exact = all(dig_1[k] == want[k] and dig_4[k] == want[k]
+                for k in reqs)
+    extra = {k: traces_after[k] - traces_before.get(k, 0)
+             for k in traces_after
+             if traces_after[k] != traces_before.get(k, 0)}
+    rps_http = max(rps_1, rps_4)
+    ratio = rps_http / max(rps_direct, 1e-9)
+
+    out = {
+        "backend": backend,
+        "n_neurons": n_neurons, "n_axons": n_axons, "window": window,
+        "clients": clients, "requests": total, "max_batch": max_batch,
+        "req_per_sec_inprocess": rps_direct,
+        "req_per_sec_http_1worker": rps_1,
+        "req_per_sec_http_4workers": rps_4,
+        "http_over_inprocess": ratio,
+        "p50_ms_http_1worker": float(np.percentile(lats_1, 50)),
+        "p99_ms_http_1worker": float(np.percentile(lats_1, 99)),
+        "p50_ms_http_4workers": float(np.percentile(lats_4, 50)),
+        "p99_ms_http_4workers": float(np.percentile(lats_4, 99)),
+        "bitexact": exact,
+        "extra_traces": {f"{o}.{f}": n for (o, f), n in extra.items()},
+    }
+    if not quiet:
+        print(f"portal_bench,{backend},clients={clients},"
+              f"inproc={rps_direct:.1f}req/s,http1={rps_1:.1f}req/s,"
+              f"http4={rps_4:.1f}req/s,ratio={ratio:.2f}x,"
+              f"p50_http={out['p50_ms_http_1worker']:.2f}ms,"
+              f"bitexact={exact},extra_traces={len(extra)}")
+
+    failures = []
+    if ratio < 0.5:
+        failures.append(f"http/inprocess={ratio:.2f}<0.5")
+    if not exact:
+        failures.append("http-results-not-bit-exact")
+    if extra:
+        failures.append(f"portal-added-traces={out['extra_traces']}")
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(out, fh, indent=2)
+    if failures:
+        raise SystemExit(
+            f"portal bench gates failed: {failures} — transport tax, "
+            f"transport-touched numbers, or a new trace shape")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    ap.add_argument("--backend", default="engine",
+                    choices=["simulator", "engine", "hiaer", "mesh"])
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_axons=16, n_neurons=48, window=6, requests_per_client=12,
+            wait_ms=2.0, backend=args.backend)
+    else:
+        run()

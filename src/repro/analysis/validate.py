@@ -64,6 +64,13 @@ class Finding:
         return f"[{self.severity}] {self.code} ({self.pass_name}): " \
                f"{self.message}"
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (the portal's structured error
+        bodies)."""
+        return {"severity": self.severity, "code": self.code,
+                "pass": self.pass_name, "message": self.message,
+                "ids": self.ids, "count": self.count}
+
 
 class AnalysisError(ValueError):
     """Raised when an `AnalysisReport` contains errors. Subclasses
@@ -115,6 +122,14 @@ class AnalysisReport:
 
     def by_code(self, code: str) -> List[Finding]:
         return [f for f in self.findings if f.code == code]
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form: the portal ships this under the
+        `findings` key of a 400 body, next to a `message` that is
+        exactly `render()`."""
+        return {"errors": len(self.errors),
+                "warnings": len(self.warnings),
+                "findings": [f.to_dict() for f in self.findings]}
 
 
 def structural_error(pass_name: str, code: str, message: str,

@@ -23,7 +23,7 @@ from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step
 from repro.models import lm
 from repro.models.lm import _attn_layout
-from repro.serve.queue import SlotPool
+from repro.serve.queue import BufferFull, SlotPool
 
 
 class Server:
@@ -55,7 +55,10 @@ class Server:
         `pool.acquire` themselves."""
         slot = self.pool.acquire()
         if slot is None:
-            raise RuntimeError(f"all {self.slots} decode slots are busy")
+            # same structured backpressure signal the spike server's
+            # ingestion queue raises — the portal maps it to 503
+            raise BufferFull(self.slots, self.slots,
+                             what="decode slot pool")
         self.outputs[slot] = []
         for t in prompt:
             lg, self.cache = self._decode(

@@ -1,0 +1,140 @@
+"""`python -m repro.portal` — serve a resident model over localhost.
+
+Builds the same random recurrent SNN as `python -m repro.serve`, makes
+it resident in a `SpikeServer`, and opens the web portal on top:
+
+    PYTHONPATH=src python -m repro.portal --port 8787 --workers 4 \
+        --token s3cret:50:16:8
+
+    curl -s localhost:8787/healthz
+    curl -s -X POST localhost:8787/v1/demo/run \
+        -H 'Authorization: Bearer s3cret' \
+        -d '{"events": [[0, 1], [2], []]}'
+
+Runs until SIGINT/SIGTERM, then drains: the signal handler calls
+`SpikeServer.shutdown(drain=True)`, so every queued request is
+answered before the process exits.
+
+The hidden `--worker` mode is the entry point of spawned bridge
+front-end processes (see `repro.portal.bridge`); it imports no
+numpy/jax.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import threading
+
+
+def _worker_mode(argv) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.portal --worker")
+    ap.add_argument("--host", required=True)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--uds", required=True)
+    ap.add_argument("--auth-spec", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.portal.bridge import run_worker
+
+    run_worker(args.host, args.port, args.uds, args.auth_spec)
+    return 0
+
+
+def _parse_token(spec: str):
+    """`secret[:rate[:burst[:max_inflight]]]` -> (secret, TokenQuota)."""
+    from repro.portal.auth import TokenQuota
+
+    parts = spec.split(":")
+    secret = parts[0]
+    if not secret:
+        raise SystemExit(f"empty token in --token {spec!r}")
+    rate = float(parts[1]) if len(parts) > 1 else 50.0
+    burst = int(parts[2]) if len(parts) > 2 else max(int(rate), 1)
+    inflight = int(parts[3]) if len(parts) > 3 else 8
+    return secret, TokenQuota(rate=rate, burst=burst,
+                              max_inflight=inflight)
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "--worker":
+        return _worker_mode(argv[1:])
+
+    ap = argparse.ArgumentParser(prog="python -m repro.portal")
+    ap.add_argument("--backend", default="engine",
+                    choices=["simulator", "engine", "hiaer", "mesh"])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8787)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = serve in-process; N = spawn N bridged "
+                         "front-end worker processes")
+    ap.add_argument("--model", default="demo",
+                    help="resident model name (the {model} in /v1/"
+                         "{model}/run)")
+    ap.add_argument("--axons", type=int, default=16)
+    ap.add_argument("--neurons", type=int, default=64)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--wait-ms", type=float, default=5.0)
+    ap.add_argument("--max-pending", type=int, default=256,
+                    help="ingestion-queue bound; beyond it requests "
+                         "shed with 503 + Retry-After")
+    ap.add_argument("--token", action="append", default=[],
+                    metavar="SECRET[:RATE[:BURST[:INFLIGHT]]]",
+                    help="add a bearer token (repeatable); no --token "
+                         "= open portal")
+    args = ap.parse_args(argv)
+
+    from repro.portal.gateway import Portal
+    from repro.serve import SpikeServer
+    from repro.serve.__main__ import demo_spec
+    from repro.core.compile import compile_spec
+
+    compiled = compile_spec(demo_spec(args.axons, args.neurons),
+                            target=args.backend)
+    srv = SpikeServer(max_batch=args.max_batch,
+                      max_wait_ms=args.wait_ms,
+                      max_pending=args.max_pending)
+    srv.add_model(args.model, compiled, window=args.window,
+                  n_sessions=args.sessions, seed=0)
+    tokens = dict(_parse_token(t) for t in args.token) or None
+
+    stop = threading.Event()
+
+    def _signal(signum, frame):
+        print(f"\nsignal {signum}: draining and shutting down ...",
+              flush=True)
+        stop.set()
+
+    signal.signal(signal.SIGINT, _signal)
+    signal.signal(signal.SIGTERM, _signal)
+
+    srv.start()
+    portal = Portal(srv, host=args.host, port=args.port,
+                    workers=args.workers, tokens=tokens)
+    portal.start()
+    mode = (f"{args.workers} bridged workers" if args.workers
+            else "in-process")
+    print(f"portal serving model {args.model!r} "
+          f"({args.backend}, {args.axons} axons, {args.neurons} "
+          f"neurons, window {args.window}) at {portal.url}  [{mode}]")
+    print(f"  curl -s {portal.url}/healthz")
+    auth = f" -H 'Authorization: Bearer {args.token[0].split(':')[0]}'"\
+        if args.token else ""
+    print(f"  curl -s -X POST {portal.url}/v1/{args.model}/run{auth} "
+          f"-d '{{\"events\": [[0, 1], [2]]}}'")
+    try:
+        stop.wait()
+    finally:
+        portal.stop()
+        # drain: every queued request is resolved before exit — no
+        # client hangs on a dead socket
+        srv.shutdown(drain=True)
+        print("portal stopped; dispatcher drained.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,246 @@
+"""Multi-worker bridge: N front-end processes, ONE resident mesh.
+
+The dispatcher process owns the jax runtime — the resident
+`Deployment`s, the compiled lane executables, the micro-batching
+thread. Accepting sockets, parsing HTTP, checking tokens, and JSON
+(de)serialization are pure-Python work that the GIL serializes against
+nothing useful, so the portal splits them out: `--workers N` spawns N
+front-end processes that each run the full `PortalApp` (http + ws +
+auth) against a `BridgeClient` gateway, forwarding every admitted
+request over a unix-domain socket to the `BridgeServer` beside the
+dispatcher. All workers listen on the SAME TCP port via SO_REUSEPORT
+(the kernel load-balances accepts), so the front end scales with
+cores while the model stays resident exactly once.
+
+The wire format is deliberately dumb: 4-byte big-endian length +
+UTF-8 JSON, requests tagged with a connection-local `id` so one UDS
+connection multiplexes every in-flight request of its worker.
+Responses are `{"id": n, "result": ...}` or `{"id": n, "error":
+<PortalError.to_body()>}` — errors cross the process boundary with
+status/code/Retry-After/findings intact.
+
+Worker processes are spawned as `python -m repro.portal --worker ...`
+and import ONLY stdlib modules (this file, http.py, ws.py, auth.py,
+errors.py) — never numpy or jax — so they start in tens of
+milliseconds and add no accelerator state to fork.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+import struct
+from typing import Dict, Optional
+
+from repro.portal.auth import Authenticator
+from repro.portal.errors import PortalError
+
+__all__ = ["BridgeServer", "BridgeClient", "run_worker",
+           "GATEWAY_OPS"]
+
+# every gateway method a worker may invoke remotely — op names double
+# as the method names on both gateway implementations
+GATEWAY_OPS = ("run", "reconfigure", "open_session", "close_session",
+               "reset_session", "session_info", "stats", "healthz")
+
+_MAX_MSG = 256 * 1024 * 1024
+
+
+def _frame(obj: dict) -> bytes:
+    payload = json.dumps(obj).encode("utf-8")
+    return struct.pack(">I", len(payload)) + payload
+
+
+async def _read_msg(reader: asyncio.StreamReader) -> Optional[dict]:
+    try:
+        head = await reader.readexactly(4)
+    except (asyncio.IncompleteReadError, ConnectionError):
+        return None
+    n, = struct.unpack(">I", head)
+    if n > _MAX_MSG:
+        raise PortalError(413, "E_BODY_TOO_LARGE",
+                          f"bridge message of {n} bytes exceeds "
+                          f"{_MAX_MSG}")
+    payload = await reader.readexactly(n)
+    return json.loads(payload.decode("utf-8"))
+
+
+class BridgeServer:
+    """Dispatcher-side end of the bridge: serves gateway ops over a
+    unix-domain socket. Each incoming message becomes its own task, so
+    a slow micro-batch never head-of-line-blocks the connection — the
+    `id` tags let responses return out of order while each worker's
+    HTTP answers stay correctly paired."""
+
+    def __init__(self, gateway, path: str):
+        self.gateway = gateway
+        self.path = path
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._conns = set()
+
+    async def start(self) -> "BridgeServer":
+        self._server = await asyncio.start_unix_server(self._conn,
+                                                       path=self.path)
+        return self
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        # settle per-connection handlers (workers are already dead by
+        # now) so loop teardown never reaps a pending task
+        for t in list(self._conns):
+            t.cancel()
+        if self._conns:
+            await asyncio.gather(*self._conns, return_exceptions=True)
+        self._conns.clear()
+
+    async def _conn(self, reader: asyncio.StreamReader,
+                    writer: asyncio.StreamWriter) -> None:
+        me = asyncio.current_task()
+        self._conns.add(me)
+        me.add_done_callback(self._conns.discard)
+        lock = asyncio.Lock()          # frame writes stay atomic
+        tasks = set()
+
+        async def answer(msg: dict) -> None:
+            out = {"id": msg.get("id")}
+            try:
+                op = msg.get("op")
+                if op not in GATEWAY_OPS:
+                    raise PortalError(400, "E_BAD_REQUEST",
+                                      f"unknown bridge op {op!r}")
+                fn = getattr(self.gateway, op)
+                out["result"] = await fn(*msg.get("args", []))
+            except PortalError as e:
+                out["error"] = e.to_body()["error"]
+            except Exception as e:     # noqa: BLE001 — process boundary
+                out["error"] = PortalError(
+                    500, "E_INTERNAL",
+                    f"{type(e).__name__}: {e}").to_body()["error"]
+            async with lock:
+                writer.write(_frame(out))
+                await writer.drain()
+
+        try:
+            while True:
+                msg = await _read_msg(reader)
+                if msg is None:
+                    break
+                t = asyncio.ensure_future(answer(msg))
+                tasks.add(t)
+                t.add_done_callback(tasks.discard)
+        finally:
+            for t in tasks:
+                t.cancel()
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+
+class _BridgeMethod:
+    def __init__(self, client: "BridgeClient", op: str):
+        self._client, self._op = client, op
+
+    async def __call__(self, *args):
+        return await self._client.call(self._op, *args)
+
+
+class BridgeClient:
+    """Worker-side gateway: the same duck-typed surface as
+    `LocalGateway`, but every call is a length-prefixed JSON message
+    over the unix socket. In-flight calls multiplex on one connection;
+    message ids pair responses back to their awaiting coroutine."""
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter):
+        self._reader, self._writer = reader, writer
+        self._ids = itertools.count()
+        self._waiting: Dict[int, asyncio.Future] = {}
+        self._pump = asyncio.ensure_future(self._read_loop())
+        for op in GATEWAY_OPS:
+            setattr(self, op, _BridgeMethod(self, op))
+
+    @classmethod
+    async def open(cls, path: str) -> "BridgeClient":
+        reader, writer = await asyncio.open_unix_connection(path)
+        return cls(reader, writer)
+
+    async def _read_loop(self) -> None:
+        while True:
+            try:
+                msg = await _read_msg(self._reader)
+            except Exception:          # noqa: BLE001 — fail all waiters
+                msg = None
+            if msg is None:
+                err = PortalError(503, "E_BRIDGE_DOWN",
+                                  "dispatcher connection lost")
+                for fut in self._waiting.values():
+                    if not fut.done():
+                        fut.set_exception(err)
+                self._waiting.clear()
+                return
+            fut = self._waiting.pop(msg.get("id"), None)
+            if fut is None or fut.done():
+                continue
+            if "error" in msg:
+                fut.set_exception(
+                    PortalError.from_body({"error": msg["error"]}))
+            else:
+                fut.set_result(msg.get("result"))
+
+    async def call(self, op: str, *args):
+        mid = next(self._ids)
+        fut = asyncio.get_running_loop().create_future()
+        self._waiting[mid] = fut
+        # write-before-await keeps bridge submission order == the
+        # order callers issued calls in (ws streaming relies on it)
+        self._writer.write(_frame({"id": mid, "op": op,
+                                   "args": list(args)}))
+        await self._writer.drain()
+        return await fut
+
+    async def close(self) -> None:
+        self._pump.cancel()
+        self._writer.close()
+        try:
+            await self._writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+# ------------------------------------------------------------- workers
+def _reuseport_socket(host: str, port: int):
+    import socket
+
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEPORT, 1)
+    s.bind((host, port))
+    return s
+
+
+async def _worker_async(host: str, port: int, uds_path: str,
+                        auth_spec: Optional[dict]) -> None:
+    from repro.portal.http import PortalApp
+
+    gateway = await BridgeClient.open(uds_path)
+    app = PortalApp(gateway, Authenticator.from_spec(auth_spec))
+    sock = _reuseport_socket(host, port)
+    server = await asyncio.start_server(app.handle_conn, sock=sock)
+    async with server:
+        await server.serve_forever()
+
+
+def run_worker(host: str, port: int, uds_path: str,
+               auth_spec_json: Optional[str] = None) -> None:
+    """Entry point of `python -m repro.portal --worker` — one
+    front-end process. Blocks until killed by the parent portal."""
+    spec = json.loads(auth_spec_json) if auth_spec_json else None
+    try:
+        asyncio.run(_worker_async(host, port, uds_path, spec))
+    except (KeyboardInterrupt, asyncio.CancelledError):
+        pass

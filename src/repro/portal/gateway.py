@@ -1,0 +1,398 @@
+"""The portal's dispatcher-side half: `LocalGateway` + `Portal`.
+
+`LocalGateway` adapts a `SpikeServer` to the async gateway surface the
+transport layers consume (`repro.portal.http`, `.ws`, `.bridge`):
+JSON-shaped payloads in, JSON-shaped results out, and every exception
+the serving stack can raise mapped onto ONE structured `PortalError`
+vocabulary —
+
+    AnalysisError   -> 400, the analyzer's own E_* code, a message
+                       that is exactly `report.render()`, and the
+                       structured findings
+    KeyError        -> 404 E_NO_MODEL / E_NO_SESSION
+    BufferFull      -> 503 E_BACKPRESSURE + Retry-After (full
+                       DoubleBuffer sheds instead of queueing)
+    BufferClosed    -> 503 E_SHUTDOWN
+    DeadlineError   -> 504 E_DEADLINE (queue-expired submit timeout)
+    ValueError      -> 400 E_BAD_REQUEST
+
+`Portal` is the lifecycle wrapper: `workers=0` serves in-process (one
+asyncio thread next to the dispatcher), `workers=N` reserves the TCP
+port, starts the unix-socket `BridgeServer`, and spawns N jax-free
+front-end worker processes that share the port via SO_REUSEPORT.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.analysis import AnalysisError
+from repro.portal.auth import Authenticator, TokenQuota
+from repro.portal.bridge import BridgeServer, _reuseport_socket
+from repro.portal.errors import PortalError
+from repro.portal.http import PortalApp
+from repro.serve import (BufferClosed, BufferFull, DeadlineError,
+                         SpikeServer)
+
+__all__ = ["LocalGateway", "Portal", "map_exception", "result_digest"]
+
+
+def result_digest(spikes, membrane) -> str:
+    """Canonical digest of one served window — sha256 over the bool
+    spike raster and the int32 final membranes. The same bytes hash on
+    both sides of the wire, so bit-exactness checks (tests, the bench
+    gate) compare 64 hex chars instead of shipping arrays around."""
+    s = np.ascontiguousarray(np.asarray(spikes), dtype=np.uint8)
+    v = np.ascontiguousarray(np.asarray(membrane), dtype="<i4")
+    h = hashlib.sha256()
+    h.update(np.asarray(s.shape, "<i8").tobytes())
+    h.update(s.tobytes())
+    h.update(v.tobytes())
+    return h.hexdigest()
+
+
+def map_exception(e: BaseException) -> PortalError:
+    """Serving-stack exception -> wire-visible `PortalError`."""
+    if isinstance(e, PortalError):
+        return e
+    if isinstance(e, AnalysisError):
+        errs = e.report.errors
+        return PortalError(400, errs[0].code if errs else "E_ANALYSIS",
+                           str(e), findings=e.report.to_dict())
+    if isinstance(e, DeadlineError):
+        return PortalError(504, "E_DEADLINE", str(e))
+    if isinstance(e, BufferFull):
+        return PortalError(503, "E_BACKPRESSURE", str(e),
+                           retry_after=e.retry_after_s or 0.05)
+    if isinstance(e, BufferClosed):
+        return PortalError(503, "E_SHUTDOWN",
+                           "the server is shutting down")
+    if isinstance(e, KeyError):
+        msg = e.args[0] if e.args else str(e)
+        code = "E_NO_SESSION" if "session" in str(msg) else "E_NO_MODEL"
+        return PortalError(404, code, str(msg))
+    if isinstance(e, RuntimeError) and "session lanes" in str(e):
+        return PortalError(503, "E_NO_LANES", str(e), retry_after=0.1)
+    if isinstance(e, asyncio.TimeoutError):
+        return PortalError(504, "E_TIMEOUT",
+                           "the dispatcher did not answer in time")
+    if isinstance(e, (ValueError, TypeError)):
+        return PortalError(400, "E_BAD_REQUEST", str(e))
+    return PortalError(500, "E_INTERNAL", f"{type(e).__name__}: {e}")
+
+
+class LocalGateway:
+    """In-process gateway over one `SpikeServer`. Async methods match
+    `bridge.GATEWAY_OPS` one for one; the bridge server exposes this
+    exact object to remote workers."""
+
+    def __init__(self, server: SpikeServer, *,
+                 default_timeout: float = 120.0):
+        self.server = server
+        self.default_timeout = float(default_timeout)
+
+    # ------------------------------------------------------------ run
+    def _schedule(self, payload: dict):
+        counts = payload.get("counts")
+        events = payload.get("events")
+        if (counts is None) == (events is None):
+            raise PortalError(
+                400, "E_BAD_REQUEST",
+                "send exactly one of 'counts' (a T x n_axons count "
+                "matrix) or 'events' (a length-T list of axon-id "
+                "lists)")
+        if counts is not None:
+            try:
+                arr = np.asarray(counts, dtype=np.int64)
+            except (ValueError, TypeError):
+                raise PortalError(400, "E_BAD_REQUEST",
+                                  "'counts' must be a rectangular "
+                                  "array of integers")
+            if arr.ndim != 2:
+                raise PortalError(400, "E_BAD_REQUEST",
+                                  f"'counts' must be 2-D (T, n_axons),"
+                                  f" got shape {arr.shape}")
+            return arr.astype(np.int32)
+        if not isinstance(events, list) \
+                or not all(isinstance(s, list) for s in events):
+            raise PortalError(400, "E_BAD_REQUEST",
+                              "'events' must be a list of per-step "
+                              "axon-id lists")
+        return events
+
+    async def run(self, model: str, payload: dict) -> dict:
+        schedule = self._schedule(payload)
+        session = payload.get("session")
+        seed = int(payload.get("seed", 0))
+        timeout = float(payload.get("timeout",
+                                    self.default_timeout))
+        try:
+            # submit before the first await: frame order == queue order
+            fut = self.server.submit(
+                model, schedule,
+                session=None if session is None else int(session),
+                seed=seed, timeout=timeout)
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        try:
+            res = await asyncio.wait_for(asyncio.wrap_future(fut),
+                                         timeout + 30.0)
+        except asyncio.CancelledError:
+            if fut.cancelled():        # dispatcher shut down under us
+                raise map_exception(BufferClosed())
+            raise
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        spikes = np.asarray(res.spikes, dtype=np.uint8)
+        membrane = np.asarray(res.membrane)
+        return {
+            "model": res.model, "session": res.session,
+            "steps": int(spikes.shape[0]),
+            "spikes": spikes.tolist(),
+            "membrane": membrane.tolist(),
+            "digest": result_digest(res.spikes, res.membrane),
+            "latency_ms": round(float(res.latency_ms), 3),
+            "batch_size": int(res.batch_size),
+        }
+
+    async def reconfigure(self, model: str, payload: dict) -> dict:
+        for k in ("pre", "post", "weight"):
+            if k not in payload:
+                raise PortalError(400, "E_BAD_REQUEST",
+                                  f"reconfigure needs 'pre', 'post' "
+                                  f"and 'weight' lists (missing {k!r})")
+        try:
+            fut = self.server.reconfigure(model, payload["pre"],
+                                          payload["post"],
+                                          payload["weight"])
+            uploads = await asyncio.wait_for(
+                asyncio.wrap_future(fut), self.default_timeout)
+        except asyncio.CancelledError:
+            raise map_exception(BufferClosed())
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        return {"model": model, "uploads": int(uploads)}
+
+    # ------------------------------------------------------- sessions
+    async def open_session(self, model: str) -> dict:
+        try:
+            sid = self.server.open_session(model)
+            window = self.server.models[model].window
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        return {"session": int(sid), "model": model,
+                "window": int(window)}
+
+    async def close_session(self, model: str, session: int) -> dict:
+        try:
+            self.server.close_session(model, int(session))
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        return {"model": model, "closed": int(session)}
+
+    async def reset_session(self, model: str, session: int) -> dict:
+        try:
+            self.server.reset_session(model, int(session))
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        return {"model": model, "reset": int(session)}
+
+    async def session_info(self, model: str, session: int) -> dict:
+        try:
+            m = self.server._model(model)
+            s = m.sessions.get(int(session))
+            V = self.server.session_membrane(model, int(session))
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            raise map_exception(e)
+        return {"model": model, "session": int(session),
+                "lane": int(s.lane), "requests": int(s.requests),
+                "steps": int(s.steps),
+                "membrane": np.asarray(V).tolist()}
+
+    # ------------------------------------------------------ telemetry
+    async def stats(self) -> dict:
+        out = self.server.stats()
+        for m in out["models"].values():
+            m["batch_shapes"] = [list(s) for s in m["batch_shapes"]]
+        return out
+
+    async def healthz(self) -> dict:
+        return {"ok": True, "pid": os.getpid(),
+                "models": {
+                    name: {"window": m.window,
+                           "n_axons": int(m.dep.compiled.n_axons),
+                           "n_neurons": int(m.dep.compiled.n_neurons),
+                           "open_sessions": m.sessions.n_open}
+                    for name, m in self.server.models.items()}}
+
+
+class Portal:
+    """Network front end over one `SpikeServer`.
+
+        srv = SpikeServer(...); srv.add_model("demo", compiled, ...)
+        with srv, Portal(srv, port=0, workers=4) as portal:
+            print(portal.url)          # http://127.0.0.1:<port>
+
+    `workers=0` (default) serves from an asyncio thread in this
+    process; `workers=N` spawns N jax-free front-end processes
+    bridged over a unix socket (see `repro.portal.bridge`)."""
+
+    def __init__(self, server: SpikeServer, host: str = "127.0.0.1",
+                 port: int = 0, *,
+                 tokens: Optional[Dict[str, TokenQuota]] = None,
+                 workers: int = 0, default_timeout: float = 120.0):
+        self.server = server
+        self.host, self.port = host, int(port)
+        self.workers = int(workers)
+        self.auth = Authenticator(tokens)
+        self.gateway = LocalGateway(server,
+                                    default_timeout=default_timeout)
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._http_server = None
+        self._bridge: Optional[BridgeServer] = None
+        self._procs: List[subprocess.Popen] = []
+        self._reserve = None
+        self._tmpdir: Optional[str] = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # ------------------------------------------------------ lifecycle
+    def start(self) -> "Portal":
+        if self._loop is not None:
+            raise RuntimeError("portal already started")
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(target=self._loop.run_forever,
+                                        name="portal-loop", daemon=True)
+        self._thread.start()
+        try:
+            if self.workers <= 0:
+                self._call(self._start_inproc())
+            else:
+                self._start_bridge_mode()
+        except BaseException:
+            self.stop()
+            raise
+        return self
+
+    def stop(self) -> None:
+        for p in self._procs:
+            p.terminate()
+        for p in self._procs:
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(timeout=10)
+        self._procs = []
+        if self._loop is not None:
+            if self._http_server is not None:
+                self._call(self._stop_server(self._http_server))
+                self._http_server = None
+            if self._bridge is not None:
+                self._call(self._bridge.stop())
+                self._bridge = None
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(timeout=10)
+            self._loop.close()
+            self._loop = self._thread = None
+        if self._reserve is not None:
+            self._reserve.close()
+            self._reserve = None
+        if self._tmpdir is not None:
+            shutil.rmtree(self._tmpdir, ignore_errors=True)
+            self._tmpdir = None
+
+    def __enter__(self) -> "Portal":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------- internal
+    def _call(self, coro, timeout: float = 60.0):
+        return asyncio.run_coroutine_threadsafe(
+            coro, self._loop).result(timeout=timeout)
+
+    @staticmethod
+    async def _stop_server(server) -> None:
+        server.close()
+        await server.wait_closed()
+
+    async def _start_inproc(self) -> None:
+        app = PortalApp(self.gateway, self.auth)
+        self._http_server = await asyncio.start_server(
+            app.handle_conn, self.host, self.port)
+        self.port = self._http_server.sockets[0].getsockname()[1]
+
+    def _start_bridge_mode(self) -> None:
+        # reserve the port: bound (not listening) with SO_REUSEPORT,
+        # so every worker can bind the same number and the kernel
+        # balances accepts across THEIR listening sockets only
+        self._reserve = _reuseport_socket(self.host, self.port)
+        self.port = self._reserve.getsockname()[1]
+        self._tmpdir = tempfile.mkdtemp(prefix="repro-portal-")
+        uds = os.path.join(self._tmpdir, "bridge.sock")
+        self._bridge = BridgeServer(self.gateway, uds)
+        self._call(self._bridge.start())
+
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + (
+            os.pathsep + env["PYTHONPATH"]
+            if env.get("PYTHONPATH") else "")
+        spec = self.auth.spec()
+        cmd = [sys.executable, "-m", "repro.portal", "--worker",
+               "--host", self.host, "--port", str(self.port),
+               "--uds", uds]
+        if spec is not None:
+            cmd += ["--auth-spec", json.dumps(spec)]
+        self._procs = [subprocess.Popen(cmd, env=env)
+                       for _ in range(self.workers)]
+        self._wait_ready()
+
+    def _wait_ready(self, timeout: float = 60.0) -> None:
+        """Poll /healthz until every worker has answered at least once
+        (healthz carries the answering worker's pid)."""
+        import http.client
+
+        deadline = time.monotonic() + timeout
+        seen = set()
+        last_err = None
+        while time.monotonic() < deadline:
+            if any(p.poll() is not None for p in self._procs):
+                raise RuntimeError(
+                    "portal worker exited during startup: "
+                    + ", ".join(str(p.poll()) for p in self._procs))
+            try:
+                conn = http.client.HTTPConnection(self.host, self.port,
+                                                  timeout=5)
+                conn.request("GET", "/healthz")
+                resp = conn.getresponse()
+                body = json.loads(resp.read().decode("utf-8"))
+                conn.close()
+                if resp.status == 200:
+                    seen.add(body.get("worker_pid"))
+                    if len(seen) >= len(self._procs):
+                        return
+            except (OSError, ValueError) as e:
+                last_err = e
+            time.sleep(0.05)
+        raise RuntimeError(
+            f"portal workers not ready after {timeout}s "
+            f"({len(seen)}/{len(self._procs)} answered; last error: "
+            f"{last_err})")

@@ -1,0 +1,289 @@
+"""Minimal HTTP/1.1 front end on `asyncio` streams — stdlib only.
+
+The transport half of the paper's web portal: a deliberately small
+HTTP server (no framework, no threads — one coroutine per connection,
+keep-alive, Content-Length bodies) that exposes the serving tier over
+the network. Every handler goes through the same three steps —
+authenticate, charge quota, forward to the gateway — and every failure
+is a structured `PortalError` JSON body.
+
+Routes (all bodies JSON):
+
+  GET  /healthz                         liveness + resident models
+  GET  /metrics                         server stats + per-token counters
+  POST /v1/{model}/run                  one spike window -> spikes/digest
+  POST /v1/{model}/reconfigure          write_synapses barrier
+  POST /v1/{model}/session              open a resident-lane session
+  GET  /v1/{model}/session/{id}         session membrane digest
+  POST /v1/{model}/session/{id}/reset   lane back to V=0
+  DELETE /v1/{model}/session/{id}       release the lane
+  GET  /v1/{model}/stream               RFC 6455 websocket upgrade
+                                        (streaming session; repro.portal.ws)
+
+The `gateway` is duck-typed (`LocalGateway` in-process over a
+`SpikeServer`, `BridgeClient` in a front-end worker forwarding over
+the unix-socket bridge), which is what lets accept/parse/auth scale
+across processes independently of the single dispatcher.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.portal import ws as _ws
+from repro.portal.auth import Authenticator
+from repro.portal.errors import PortalError
+
+__all__ = ["HTTPRequest", "PortalApp", "read_request", "http_response"]
+
+MAX_HEADER_BYTES = 64 * 1024
+MAX_BODY_BYTES = 64 * 1024 * 1024
+
+_REASONS = {200: "OK", 101: "Switching Protocols", 400: "Bad Request",
+            401: "Unauthorized", 404: "Not Found",
+            405: "Method Not Allowed", 408: "Request Timeout",
+            413: "Payload Too Large", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable",
+            504: "Gateway Timeout"}
+
+
+@dataclass
+class HTTPRequest:
+    method: str
+    target: str
+    version: str
+    headers: Dict[str, str] = field(default_factory=dict)
+    body: bytes = b""
+
+    @property
+    def path(self) -> str:
+        return self.target.split("?", 1)[0]
+
+    def json(self) -> dict:
+        if not self.body:
+            return {}
+        try:
+            obj = json.loads(self.body.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError) as e:
+            raise PortalError(400, "E_BAD_JSON",
+                              f"request body is not valid JSON: {e}")
+        if not isinstance(obj, dict):
+            raise PortalError(400, "E_BAD_JSON",
+                              "request body must be a JSON object")
+        return obj
+
+    @property
+    def keep_alive(self) -> bool:
+        conn = self.headers.get("connection", "").lower()
+        if self.version == "HTTP/1.0":
+            return conn == "keep-alive"
+        return "close" not in conn
+
+    def wants_websocket(self) -> bool:
+        return ("websocket" in self.headers.get("upgrade", "").lower()
+                and "upgrade" in self.headers.get("connection",
+                                                  "").lower())
+
+
+async def read_request(reader: asyncio.StreamReader) \
+        -> Optional[HTTPRequest]:
+    """Parse one request off the stream; None on clean EOF. Raises
+    `PortalError` on malformed or oversized input."""
+    try:
+        head = await reader.readuntil(b"\r\n\r\n")
+    except asyncio.IncompleteReadError as e:
+        if not e.partial:
+            return None
+        raise PortalError(400, "E_BAD_REQUEST",
+                          "connection closed mid-request")
+    except asyncio.LimitOverrunError:
+        raise PortalError(413, "E_HEADERS_TOO_LARGE",
+                          f"request head exceeds {MAX_HEADER_BYTES} "
+                          f"bytes")
+    if len(head) > MAX_HEADER_BYTES:
+        raise PortalError(413, "E_HEADERS_TOO_LARGE",
+                          f"request head exceeds {MAX_HEADER_BYTES} "
+                          f"bytes")
+    lines = head.decode("latin-1").split("\r\n")
+    parts = lines[0].split()
+    if len(parts) != 3 or not parts[2].startswith("HTTP/"):
+        raise PortalError(400, "E_BAD_REQUEST",
+                          f"malformed request line: {lines[0]!r}")
+    req = HTTPRequest(method=parts[0].upper(), target=parts[1],
+                      version=parts[2])
+    for ln in lines[1:]:
+        if not ln:
+            continue
+        name, sep, value = ln.partition(":")
+        if not sep:
+            raise PortalError(400, "E_BAD_REQUEST",
+                              f"malformed header line: {ln!r}")
+        req.headers[name.strip().lower()] = value.strip()
+    length = req.headers.get("content-length", "0")
+    try:
+        n = int(length)
+    except ValueError:
+        raise PortalError(400, "E_BAD_REQUEST",
+                          f"bad Content-Length: {length!r}")
+    if n > MAX_BODY_BYTES:
+        raise PortalError(413, "E_BODY_TOO_LARGE",
+                          f"body of {n} bytes exceeds the "
+                          f"{MAX_BODY_BYTES}-byte limit")
+    if n:
+        req.body = await reader.readexactly(n)
+    return req
+
+
+def http_response(status: int, body: dict, *,
+                  headers: Optional[Dict[str, str]] = None,
+                  keep_alive: bool = True) -> bytes:
+    payload = json.dumps(body).encode("utf-8")
+    lines = [f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}",
+             "Content-Type: application/json",
+             f"Content-Length: {len(payload)}",
+             f"Connection: {'keep-alive' if keep_alive else 'close'}"]
+    for k, v in (headers or {}).items():
+        lines.append(f"{k}: {v}")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode("latin-1") + payload
+
+
+class PortalApp:
+    """Route table + per-connection loop. One instance serves every
+    connection of one worker (or of the in-process portal thread)."""
+
+    def __init__(self, gateway, auth: Optional[Authenticator] = None):
+        self.gateway = gateway
+        self.auth = auth or Authenticator(None)
+
+    # ------------------------------------------------------ connection
+    async def handle_conn(self, reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                try:
+                    req = await read_request(reader)
+                except PortalError as e:
+                    writer.write(http_response(
+                        e.status, e.to_body(), headers=e.headers(),
+                        keep_alive=False))
+                    await writer.drain()
+                    break
+                if req is None:
+                    break
+                if req.wants_websocket():
+                    await self._websocket(req, reader, writer)
+                    break
+                status, body, headers = await self.dispatch(req)
+                writer.write(http_response(status, body,
+                                           headers=headers,
+                                           keep_alive=req.keep_alive))
+                await writer.drain()
+                if not req.keep_alive:
+                    break
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    # ------------------------------------------------------- dispatch
+    async def dispatch(self, req: HTTPRequest) \
+            -> Tuple[int, dict, Dict[str, str]]:
+        try:
+            return 200, await self._route(req), {}
+        except PortalError as e:
+            return e.status, e.to_body(), e.headers()
+        except Exception as e:     # noqa: BLE001 — wire boundary
+            err = PortalError(500, "E_INTERNAL",
+                              f"{type(e).__name__}: {e}")
+            return err.status, err.to_body(), err.headers()
+
+    async def _route(self, req: HTTPRequest) -> dict:
+        path, method = req.path, req.method
+        if path == "/healthz":
+            self._need(method, "GET")
+            out = await self.gateway.healthz()
+            # which front-end process answered (the dispatcher's own
+            # pid rides in `pid`) — Portal._wait_ready polls this to
+            # confirm every SO_REUSEPORT worker is accepting
+            out["worker_pid"] = os.getpid()
+            return out
+        if path == "/metrics":
+            self._need(method, "GET")
+            stats = await self.gateway.stats()
+            return {"server": stats, "clients": self.auth.metrics()}
+        seg = [s for s in path.split("/") if s]
+        if len(seg) >= 3 and seg[0] == "v1":
+            return await self._v1(req, seg[1], seg[2:])
+        raise PortalError(404, "E_NO_ROUTE",
+                          f"no route for {method} {path}")
+
+    async def _v1(self, req: HTTPRequest, model: str, rest) -> dict:
+        state = self.auth.authenticate(req.headers)
+        method = req.method
+        if rest == ["run"]:
+            self._need(method, "POST")
+            with self.auth.admit(state):
+                return await self.gateway.run(model, req.json())
+        if rest == ["reconfigure"]:
+            self._need(method, "POST")
+            with self.auth.admit(state):
+                return await self.gateway.reconfigure(model,
+                                                      req.json())
+        if rest == ["session"]:
+            self._need(method, "POST")
+            return await self.gateway.open_session(model)
+        if len(rest) >= 2 and rest[0] == "session":
+            sid = self._int(rest[1])
+            if len(rest) == 2 and method == "GET":
+                return await self.gateway.session_info(model, sid)
+            if len(rest) == 2 and method == "DELETE":
+                return await self.gateway.close_session(model, sid)
+            if rest[2:] == ["reset"]:
+                self._need(method, "POST")
+                return await self.gateway.reset_session(model, sid)
+        raise PortalError(404, "E_NO_ROUTE",
+                          f"no route for {method} {req.path}")
+
+    async def _websocket(self, req: HTTPRequest,
+                         reader: asyncio.StreamReader,
+                         writer: asyncio.StreamWriter) -> None:
+        """GET /v1/{model}/stream — auth happens BEFORE the 101, so a
+        bad token is an ordinary HTTP 401, not a broken socket."""
+        seg = [s for s in req.path.split("/") if s]
+        try:
+            if len(seg) != 3 or seg[0] != "v1" or seg[2] != "stream":
+                raise PortalError(404, "E_NO_ROUTE",
+                                  f"no websocket route for {req.path}")
+            state = self.auth.authenticate(req.headers)
+        except PortalError as e:
+            writer.write(http_response(e.status, e.to_body(),
+                                       headers=e.headers(),
+                                       keep_alive=False))
+            await writer.drain()
+            return
+        await _ws.handle_stream(self, req, reader, writer, seg[1],
+                                state)
+
+    # ------------------------------------------------------- helpers
+    @staticmethod
+    def _need(method: str, expected: str) -> None:
+        if method != expected:
+            raise PortalError(405, "E_METHOD",
+                              f"use {expected} for this route, not "
+                              f"{method}")
+
+    @staticmethod
+    def _int(s: str) -> int:
+        try:
+            return int(s)
+        except ValueError:
+            raise PortalError(400, "E_BAD_REQUEST",
+                              f"session id must be an integer, got "
+                              f"{s!r}")

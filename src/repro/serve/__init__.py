@@ -15,13 +15,15 @@ single `Deployment.run_lanes` dispatches, and come back per-client:
 bit-identical to running each request alone. `python -m repro.serve`
 runs a self-contained demo server against a synthetic network.
 """
-from repro.serve.queue import DoubleBuffer, SlotPool
+from repro.serve.queue import (BufferClosed, BufferFull, DoubleBuffer,
+                               SlotPool)
 from repro.serve.server import ResidentModel, SpikeServer, next_pow2
-from repro.serve.session import (Reconfigure, Request, ServeResult,
-                                 Session, SessionStore)
+from repro.serve.session import (DeadlineError, Reconfigure, Request,
+                                 ServeResult, Session, SessionStore)
 
 __all__ = [
     "SpikeServer", "ResidentModel", "next_pow2",
-    "DoubleBuffer", "SlotPool",
+    "DoubleBuffer", "SlotPool", "BufferFull", "BufferClosed",
     "Request", "Reconfigure", "ServeResult", "Session", "SessionStore",
+    "DeadlineError",
 ]

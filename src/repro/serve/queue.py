@@ -23,7 +23,33 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-__all__ = ["DoubleBuffer", "SlotPool"]
+__all__ = ["DoubleBuffer", "SlotPool", "BufferFull", "BufferClosed"]
+
+
+class BufferFull(RuntimeError):
+    """Raised when a bounded serving resource is at capacity — the
+    `DoubleBuffer` ingestion queue, or the LM server's decode
+    `SlotPool`. Backpressure is the caller's contract: the portal maps
+    this to HTTP 503 + Retry-After instead of queueing without bound.
+    Carries `pending` and `capacity`; dispatch layers may attach
+    `retry_after_s` before re-raising."""
+
+    def __init__(self, pending: int, capacity: int,
+                 what: str = "ingestion buffer"):
+        super().__init__(
+            f"{what} full: {pending} pending >= capacity "
+            f"{capacity} — retry after the present batch drains")
+        self.pending = int(pending)
+        self.capacity = int(capacity)
+        self.retry_after_s: Optional[float] = None
+
+
+class BufferClosed(RuntimeError):
+    """Raised by `put` after `close()` — the server is shutting down
+    (portal maps it to 503)."""
+
+    def __init__(self):
+        super().__init__("buffer is closed")
 
 
 class DoubleBuffer:
@@ -31,9 +57,12 @@ class DoubleBuffer:
     never blocks on an executing batch); `take` promotes accumulated
     items to the present side at batch boundaries and applies the
     deadline + max-batch admission policy. FIFO order is preserved
-    across promotions."""
+    across promotions. `capacity` bounds the TOTAL pending count
+    (present + future): a put beyond it raises `BufferFull` — loaded
+    callers shed instead of queueing unboundedly."""
 
-    def __init__(self):
+    def __init__(self, capacity: Optional[int] = None):
+        self.capacity = None if capacity is None else int(capacity)
         self._future: List = []
         self._present: deque = deque()
         self._cond = threading.Condition()
@@ -41,14 +70,20 @@ class DoubleBuffer:
         # ingestion statistics (read under the lock via `stats`)
         self.swaps = 0
         self.max_future_depth = 0
+        self.rejected = 0
 
     # ------------------------------------------------------- producers
     def put(self, item) -> None:
         """Enqueue into the FUTURE buffer. Never blocks on the present
-        batch — this is the double-buffering contract."""
+        batch — this is the double-buffering contract. Raises
+        `BufferFull` at capacity, `BufferClosed` after `close()`."""
         with self._cond:
             if self._closed:
-                raise RuntimeError("buffer is closed")
+                raise BufferClosed()
+            if self.capacity is not None \
+                    and self._pending_locked() >= self.capacity:
+                self.rejected += 1
+                raise BufferFull(self._pending_locked(), self.capacity)
             self._future.append(item)
             self.max_future_depth = max(self.max_future_depth,
                                         len(self._future))
@@ -114,11 +149,23 @@ class DoubleBuffer:
                     break
         return out
 
+    def drain(self) -> List:
+        """Remove and return everything still pending (both sides), in
+        FIFO order. Used by `SpikeServer.shutdown` to resolve or cancel
+        leftover futures so no client ever hangs on process exit."""
+        with self._cond:
+            self._promote_locked()
+            out = list(self._present)
+            self._present.clear()
+            return out
+
     def stats(self) -> dict:
         with self._cond:
             return {"pending": self._pending_locked(),
                     "swaps": self.swaps,
-                    "max_future_depth": self.max_future_depth}
+                    "max_future_depth": self.max_future_depth,
+                    "capacity": self.capacity,
+                    "rejected": self.rejected}
 
 
 class SlotPool:

@@ -38,19 +38,24 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis.validate import structural_error
 from repro.core import schedule as sched
 from repro.core.compile import CompiledNetwork
 from repro.core.deploy import Deployment, deploy
-from repro.serve.queue import DoubleBuffer
-from repro.serve.session import (Reconfigure, Request, ServeResult,
-                                 Session, SessionStore)
+from repro.serve.queue import BufferFull, DoubleBuffer
+from repro.serve.session import (DeadlineError, Reconfigure, Request,
+                                 ServeResult, Session, SessionStore)
 
 __all__ = ["SpikeServer", "ResidentModel", "next_pow2"]
 
 
 def next_pow2(n: int) -> int:
-    """Smallest power of two >= n (n >= 1)."""
-    return 1 << max(int(n) - 1, 0).bit_length()
+    """Smallest power of two >= n."""
+    n = int(n)
+    if n <= 0:
+        raise ValueError(
+            f"next_pow2 needs a positive batch size, got {n}")
+    return 1 << (n - 1).bit_length()
 
 
 @dataclass
@@ -86,14 +91,18 @@ class SpikeServer:
     """
 
     def __init__(self, *, max_batch: int = 8, max_wait_ms: float = 2.0,
-                 bucket_batch: bool = True):
+                 bucket_batch: bool = True,
+                 max_pending: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) * 1e-3
         self.bucket_batch = bool(bucket_batch)
         self.models: Dict[str, ResidentModel] = {}
-        self._buf = DoubleBuffer()
+        # max_pending bounds the ingestion queue: a submit beyond it
+        # raises BufferFull (the portal's 503 + Retry-After) instead of
+        # queueing without bound
+        self._buf = DoubleBuffer(capacity=max_pending)
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._stats_lock = threading.Lock()
@@ -161,16 +170,30 @@ class SpikeServer:
 
     # ------------------------------------------------------------ submit
     def submit(self, model: str, schedule, *,
-               session: Optional[int] = None, seed: int = 0) -> Future:
+               session: Optional[int] = None, seed: int = 0,
+               timeout: Optional[float] = None) -> Future:
         """Enqueue one spike window; returns a Future[ServeResult].
         `schedule` is a (T, A) int32 count array or a length-T sequence
         of axon-id lists, T <= the model's window (== for session
         requests — a resident lane always advances exactly one window
         per request, the frame-tick contract that keeps every serving
-        batch one compiled shape)."""
+        batch one compiled shape). `timeout` (seconds) bounds the QUEUE
+        wait: a request no batch admits in time resolves its Future
+        with a structured `DeadlineError` instead of hanging."""
         m = self._model(model)
-        counts = sched.encode_schedule(schedule,
-                                       m.dep.compiled.n_axons)
+        n_axons = m.dep.compiled.n_axons
+        if getattr(schedule, "ndim", 0) >= 2 \
+                and schedule.shape[-1] > n_axons:
+            # same structured report Deployment._pad raises for
+            # over-wide padded schedules — a client driving more axons
+            # than the model has must fail loudly, not silently clip
+            raise structural_error(
+                "schedule", "E_SCHED_WIDTH",
+                f"schedule drives {schedule.shape[-1]} axon slots but "
+                f"model {model!r} has {n_axons} axons; the trailing "
+                f"columns would be silently dropped or mis-routed",
+                schedule_width=schedule.shape[-1], axon_slots=n_axons)
+        counts = sched.encode_schedule(schedule, n_axons)
         T = counts.shape[0]
         if T > m.window:
             raise ValueError(
@@ -187,11 +210,22 @@ class SpikeServer:
             counts = np.concatenate(
                 [counts, np.zeros((m.window - T, counts.shape[1]),
                                   np.int32)])
+        now = time.monotonic()
         req = Request(model=model, counts=counts, steps=T,
-                      session=session, seed=int(seed),
-                      t_submit=time.monotonic())
-        self._buf.put(req)
+                      session=session, seed=int(seed), t_submit=now,
+                      deadline=None if timeout is None
+                      else now + float(timeout))
+        self._put(req)
         return req.future
+
+    def _put(self, item) -> None:
+        try:
+            self._buf.put(item)
+        except BufferFull as e:
+            # hint: the present batch drains within one admission
+            # deadline — tell shedding clients when to come back
+            e.retry_after_s = max(2 * self.max_wait_s, 0.05)
+            raise
 
     def reconfigure(self, model: str, pre, post, weight) -> Future:
         """Enqueue a batched `write_synapses` edit. It is applied
@@ -202,7 +236,7 @@ class SpikeServer:
         rc = Reconfigure(model=model, pre=np.asarray(pre),
                          post=np.asarray(post),
                          weight=np.asarray(weight))
-        self._buf.put(rc)
+        self._put(rc)
         return rc.future
 
     # ---------------------------------------------------------- lifecycle
@@ -216,23 +250,34 @@ class SpikeServer:
         self._thread.start()
         return self
 
-    def stop(self, drain: bool = True) -> None:
-        """Stop the dispatcher. `drain=True` (default) serves every
-        already-queued item first; pending futures are never dropped
-        silently — with drain=False they fail with RuntimeError."""
-        if self._thread is None:
-            return
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop the dispatcher cleanly: every pending Future is
+        RESOLVED or CANCELLED before this returns, so no client ever
+        hangs on process exit. `drain=True` (default) serves every
+        already-queued item first; `drain=False` cancels them. Safe to
+        call more than once, from any thread (the portal calls it from
+        its signal handler), and with the dispatcher never started —
+        queued items are then cancelled (there is nothing to drain
+        with)."""
         self._drain = drain
         self._stop.set()
-        self._buf.close()
-        self._thread.join()
-        self._thread = None
+        self._buf.close()          # wakes the dispatcher, put now raises
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        for it in self._buf.drain():    # leftovers (never-started case)
+            if not it.future.done() and not it.future.cancel():
+                it.future.set_exception(
+                    RuntimeError("server stopped before dispatch"))
+
+    # the historical name — same contract
+    stop = shutdown
 
     def __enter__(self) -> "SpikeServer":
         return self.start()
 
     def __exit__(self, *exc) -> None:
-        self.stop()
+        self.shutdown()
 
     # ---------------------------------------------------------- dispatch
     def _coalesce(self, batch: List, nxt) -> bool:
@@ -260,8 +305,13 @@ class SpikeServer:
                 continue
             if self._stop.is_set() and not getattr(self, "_drain", True):
                 for it in items:
-                    it.future.set_exception(
-                        RuntimeError("server stopped before dispatch"))
+                    if not it.future.cancel():
+                        it.future.set_exception(
+                            RuntimeError("server stopped before "
+                                         "dispatch"))
+                continue
+            items = self._expire(items)
+            if not items:
                 continue
             try:
                 if isinstance(items[0], Reconfigure):
@@ -272,6 +322,23 @@ class SpikeServer:
                 for it in items:                # carry the error out
                     if not it.future.done():
                         it.future.set_exception(e)
+
+    def _expire(self, items: List) -> List:
+        """Resolve queue-expired requests with a structured
+        `DeadlineError` (submit(..., timeout=)) and drop them from the
+        batch. Reconfigure barriers never expire — they gate weight
+        history, and skipping one would change what later requests
+        observe."""
+        now = time.monotonic()
+        live = []
+        for it in items:
+            dl = getattr(it, "deadline", None)
+            if dl is not None and now > dl:
+                it.future.set_exception(DeadlineError(
+                    it.model, dl - it.t_submit, now - it.t_submit))
+            else:
+                live.append(it)
+        return live
 
     def _apply_reconfigure(self, rc: Reconfigure) -> None:
         m = self._model(rc.model)

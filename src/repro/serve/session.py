@@ -22,7 +22,23 @@ import numpy as np
 from repro.serve.queue import SlotPool
 
 __all__ = ["Request", "Reconfigure", "ServeResult", "Session",
-           "SessionStore"]
+           "SessionStore", "DeadlineError"]
+
+
+class DeadlineError(TimeoutError):
+    """A request expired in the ingestion queue before its batch was
+    dispatched (`SpikeServer.submit(..., timeout=)`). Structured: the
+    portal maps it to HTTP 504 with these fields in the JSON body."""
+
+    def __init__(self, model: str, timeout_s: float, waited_s: float):
+        super().__init__(
+            f"request for model {model!r} expired after waiting "
+            f"{waited_s * 1e3:.1f} ms in the queue "
+            f"(timeout {timeout_s * 1e3:.1f} ms) — the dispatcher "
+            f"never admitted it to a batch")
+        self.model = model
+        self.timeout_s = float(timeout_s)
+        self.waited_s = float(waited_s)
 
 
 @dataclass
@@ -30,7 +46,9 @@ class Request:
     """One client window: (T, A) int32 axon event counts for `model`.
     `session` is a lane-backed session id (None = stateless scratch
     run under the deterministic stream derived from `seed`); `steps`
-    is the client's un-padded T, used to slice the response."""
+    is the client's un-padded T, used to slice the response;
+    `deadline` (monotonic seconds, None = wait forever) expires the
+    request with a `DeadlineError` if no batch admits it in time."""
     model: str
     counts: np.ndarray
     steps: int
@@ -38,6 +56,7 @@ class Request:
     seed: int = 0
     future: Future = field(default_factory=Future)
     t_submit: float = 0.0
+    deadline: Optional[float] = None
 
 
 @dataclass
