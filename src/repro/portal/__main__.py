@@ -68,7 +68,10 @@ def main(argv=None) -> int:
     ap.add_argument("--port", type=int, default=8787)
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = serve in-process; N = spawn N bridged "
-                         "front-end worker processes")
+                         "front-end worker processes (token quotas "
+                         "are then enforced per worker — up to N x "
+                         "the configured limits — and /metrics "
+                         "client counters are worker-local)")
     ap.add_argument("--model", default="demo",
                     help="resident model name (the {model} in /v1/"
                          "{model}/run)")

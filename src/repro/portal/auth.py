@@ -17,6 +17,17 @@ BEFORE anything touches the dispatcher:
 Per-token counters (admitted / rejected / in flight) surface under
 `clients` in `GET /metrics`. Stdlib-only, so bridge workers import it
 without numpy/jax.
+
+Multi-worker scope: with `--workers N` each SO_REUSEPORT worker
+process builds its OWN Authenticator from `spec()`, so quotas are
+enforced PER WORKER — a client whose connections the kernel spreads
+across workers can reach up to N x the configured rate/burst/
+max_inflight, and the `clients` block of `GET /metrics` reports only
+the counters of whichever worker answered that request. Size quotas
+for the worker count (e.g. rate / N for a hard global rate), or run
+`--workers 0` when exact global enforcement matters; the ingestion
+backpressure (503 E_BACKPRESSURE) is always global because the
+DoubleBuffer lives in the single dispatcher process.
 """
 from __future__ import annotations
 

@@ -54,14 +54,15 @@ def _frame(obj: dict) -> bytes:
 async def _read_msg(reader: asyncio.StreamReader) -> Optional[dict]:
     try:
         head = await reader.readexactly(4)
+        n, = struct.unpack(">I", head)
+        if n > _MAX_MSG:
+            raise PortalError(413, "E_BODY_TOO_LARGE",
+                              f"bridge message of {n} bytes exceeds "
+                              f"{_MAX_MSG}")
+        payload = await reader.readexactly(n)
     except (asyncio.IncompleteReadError, ConnectionError):
+        # a peer dying mid-frame is the same as a clean EOF here
         return None
-    n, = struct.unpack(">I", head)
-    if n > _MAX_MSG:
-        raise PortalError(413, "E_BODY_TOO_LARGE",
-                          f"bridge message of {n} bytes exceeds "
-                          f"{_MAX_MSG}")
-    payload = await reader.readexactly(n)
     return json.loads(payload.decode("utf-8"))
 
 

@@ -37,10 +37,27 @@ from typing import Optional, Tuple
 from repro.portal.errors import PortalError
 
 __all__ = ["accept_key", "encode_frame", "read_message",
-           "handle_stream", "WSClient"]
+           "handle_stream", "WSClient", "FrameTooBig",
+           "MAX_FRAME_BYTES"]
 
 _GUID = "258EAFA5-E914-47DA-95CA-C5AB0DC85B11"
 OP_TEXT, OP_BINARY, OP_CLOSE, OP_PING, OP_PONG = 0x1, 0x2, 0x8, 0x9, 0xA
+
+# same cap as http.MAX_BODY_BYTES (ws.py cannot import http.py — the
+# import runs the other way): a frame header may claim a 64-bit
+# length, and readexactly() would happily buffer it all, so unbounded
+# claims are rejected with close status 1009 before any payload read.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+CLOSE_TOO_BIG = 1009            # RFC 6455 7.4.1 "Message Too Big"
+
+
+class FrameTooBig(Exception):
+    """Incoming frame declares a payload over MAX_FRAME_BYTES."""
+
+    def __init__(self, size: int):
+        super().__init__(f"websocket frame of {size} bytes exceeds "
+                         f"the {MAX_FRAME_BYTES}-byte limit")
+        self.size = size
 
 
 def accept_key(key: str) -> str:
@@ -73,19 +90,23 @@ def encode_frame(payload: bytes, opcode: int = OP_TEXT,
 
 async def _read_frame(reader: asyncio.StreamReader) \
         -> Optional[Tuple[int, bool, bytes]]:
-    """(opcode, fin, payload) or None on EOF."""
+    """(opcode, fin, payload), None on EOF or mid-frame disconnect
+    (abrupt client exits are routine, not errors), or `FrameTooBig`
+    for a length claim over MAX_FRAME_BYTES."""
     try:
         b1, b2 = await reader.readexactly(2)
+        fin, opcode = bool(b1 & 0x80), b1 & 0x0F
+        masked, n = bool(b2 & 0x80), b2 & 0x7F
+        if n == 126:
+            n, = struct.unpack(">H", await reader.readexactly(2))
+        elif n == 127:
+            n, = struct.unpack(">Q", await reader.readexactly(8))
+        if n > MAX_FRAME_BYTES:
+            raise FrameTooBig(n)
+        key = await reader.readexactly(4) if masked else None
+        payload = await reader.readexactly(n) if n else b""
     except (asyncio.IncompleteReadError, ConnectionError):
         return None
-    fin, opcode = bool(b1 & 0x80), b1 & 0x0F
-    masked, n = bool(b2 & 0x80), b2 & 0x7F
-    if n == 126:
-        n, = struct.unpack(">H", await reader.readexactly(2))
-    elif n == 127:
-        n, = struct.unpack(">Q", await reader.readexactly(8))
-    key = await reader.readexactly(4) if masked else None
-    payload = await reader.readexactly(n) if n else b""
     if key:
         payload = bytes(b ^ key[i % 4]
                         for i, b in enumerate(payload))
@@ -96,7 +117,8 @@ async def read_message(reader: asyncio.StreamReader,
                        writer: asyncio.StreamWriter) \
         -> Optional[Tuple[int, bytes]]:
     """Next complete data/close message, reassembling fragments and
-    answering pings inline. None on EOF."""
+    answering pings inline. None on EOF; raises `FrameTooBig` when a
+    frame claims more than MAX_FRAME_BYTES (caller closes with 1009)."""
     opcode, buf = None, bytearray()
     while True:
         frame = await _read_frame(reader)
@@ -167,30 +189,48 @@ async def handle_stream(app, req, reader: asyncio.StreamReader,
             payload["session"] = sid
             return await app.gateway.run(model, payload)
 
+    close_payload = b""
+
     async def produce() -> None:
+        # the try/finally guarantees the None sentinel even if a read
+        # raises: a producer that dies silently would leave the
+        # consumer blocked on pending.get() forever, and the finally
+        # below (lane release) would never run — the lane would leak.
+        nonlocal close_payload
         idx = 0
-        while True:
-            msg = await read_message(reader, writer)
-            if msg is None or msg[0] == OP_CLOSE:
-                break
-            try:
-                payload = json.loads(msg[1].decode("utf-8"))
-                if not isinstance(payload, dict):
-                    raise ValueError("window message must be a JSON "
-                                     "object")
-            except (ValueError, UnicodeDecodeError) as e:
-                err = PortalError(400, "E_BAD_JSON",
-                                  f"bad window message: {e}")
-                fut = asyncio.get_running_loop().create_future()
-                fut.set_exception(err)
-                await pending.put((idx, None, fut))
-            else:
-                tag = payload.pop("tag", None)
-                # the task starts now — submission order IS frame order
-                task = asyncio.ensure_future(window_task(payload))
-                await pending.put((idx, tag, task))
-            idx += 1
-        await pending.put(None)
+        try:
+            while True:
+                try:
+                    msg = await read_message(reader, writer)
+                except FrameTooBig as e:
+                    # answered by the consumer's close frame, AFTER
+                    # every already-pipelined window — no data frame
+                    # ever follows the close
+                    close_payload = (struct.pack(">H", CLOSE_TOO_BIG)
+                                     + str(e).encode("utf-8")[:100])
+                    break
+                if msg is None or msg[0] == OP_CLOSE:
+                    break
+                try:
+                    payload = json.loads(msg[1].decode("utf-8"))
+                    if not isinstance(payload, dict):
+                        raise ValueError("window message must be a "
+                                         "JSON object")
+                except (ValueError, UnicodeDecodeError) as e:
+                    err = PortalError(400, "E_BAD_JSON",
+                                      f"bad window message: {e}")
+                    fut = asyncio.get_running_loop().create_future()
+                    fut.set_exception(err)
+                    await pending.put((idx, None, fut))
+                else:
+                    tag = payload.pop("tag", None)
+                    # the task starts now — submission order IS frame
+                    # order
+                    task = asyncio.ensure_future(window_task(payload))
+                    await pending.put((idx, tag, task))
+                idx += 1
+        finally:
+            pending.put_nowait(None)
 
     producer = asyncio.ensure_future(produce())
     try:
@@ -212,7 +252,7 @@ async def handle_stream(app, req, reader: asyncio.StreamReader,
                     f"{type(e).__name__}: {e}").to_body()["error"]
             writer.write(encode_frame(json.dumps(out).encode("utf-8")))
             await writer.drain()
-        writer.write(encode_frame(b"", OP_CLOSE))
+        writer.write(encode_frame(close_payload, OP_CLOSE))
         await writer.drain()
     except (ConnectionError, OSError):
         pass

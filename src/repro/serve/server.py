@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -47,6 +47,30 @@ from repro.serve.session import (DeadlineError, Reconfigure, Request,
                                  ServeResult, Session, SessionStore)
 
 __all__ = ["SpikeServer", "ResidentModel", "next_pow2"]
+
+
+def _resolve(fut: Future, value) -> None:
+    """Race-safe `set_result`. A client may cancel its Future at any
+    moment (the portal's `wait_for` cancels on timeout, and a bridge
+    worker dropping cancels every answer it was waiting on); settling
+    a cancelled future raises InvalidStateError, which must neither
+    kill the dispatcher thread nor poison the other requests of the
+    micro-batch. The done() check cannot close the race — cancellation
+    comes from another thread — so the set is also guarded."""
+    if not fut.done():
+        try:
+            fut.set_result(value)
+        except InvalidStateError:
+            pass
+
+
+def _reject(fut: Future, exc: BaseException) -> None:
+    """Race-safe `set_exception` (see `_resolve`)."""
+    if not fut.done():
+        try:
+            fut.set_exception(exc)
+        except InvalidStateError:
+            pass
 
 
 def next_pow2(n: int) -> int:
@@ -266,9 +290,9 @@ class SpikeServer:
         if t is not None:
             t.join()
         for it in self._buf.drain():    # leftovers (never-started case)
-            if not it.future.done() and not it.future.cancel():
-                it.future.set_exception(
-                    RuntimeError("server stopped before dispatch"))
+            if not it.future.cancel():
+                _reject(it.future,
+                        RuntimeError("server stopped before dispatch"))
 
     # the historical name — same contract
     stop = shutdown
@@ -306,9 +330,9 @@ class SpikeServer:
             if self._stop.is_set() and not getattr(self, "_drain", True):
                 for it in items:
                     if not it.future.cancel():
-                        it.future.set_exception(
-                            RuntimeError("server stopped before "
-                                         "dispatch"))
+                        _reject(it.future,
+                                RuntimeError("server stopped before "
+                                             "dispatch"))
                 continue
             items = self._expire(items)
             if not items:
@@ -320,8 +344,7 @@ class SpikeServer:
                     self._run_batch(items)
             except BaseException as e:          # noqa: BLE001 — futures
                 for it in items:                # carry the error out
-                    if not it.future.done():
-                        it.future.set_exception(e)
+                    _reject(it.future, e)
 
     def _expire(self, items: List) -> List:
         """Resolve queue-expired requests with a structured
@@ -334,7 +357,7 @@ class SpikeServer:
         for it in items:
             dl = getattr(it, "deadline", None)
             if dl is not None and now > dl:
-                it.future.set_exception(DeadlineError(
+                _reject(it.future, DeadlineError(
                     it.model, dl - it.t_submit, now - it.t_submit))
             else:
                 live.append(it)
@@ -343,7 +366,7 @@ class SpikeServer:
     def _apply_reconfigure(self, rc: Reconfigure) -> None:
         m = self._model(rc.model)
         m.dep.write_synapses(rc.pre, rc.post, rc.weight)
-        rc.future.set_result(m.dep.weight_uploads)
+        _resolve(rc.future, m.dep.weight_uploads)
 
     def _run_batch(self, reqs: List[Request]) -> None:
         """ONE `run_lanes` dispatch for the whole micro-batch: stack
@@ -374,7 +397,7 @@ class SpikeServer:
                 s = m.sessions.get(r.session)
                 s.requests += 1
                 s.steps += m.window
-            r.future.set_result(ServeResult(
+            _resolve(r.future, ServeResult(
                 spikes=spikes[i, :r.steps], membrane=membranes[i],
                 latency_ms=lat, batch_size=B, model=r.model,
                 session=r.session))

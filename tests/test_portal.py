@@ -21,6 +21,7 @@ Pins the acceptance invariants:
 """
 import http.client
 import json
+import struct
 import subprocess
 import sys
 import threading
@@ -163,6 +164,31 @@ def test_shutdown_drains_or_cancels_every_pending_future():
     with pytest.raises(BufferClosed):
         srv2.submit("m", w)
     srv2.shutdown()                           # idempotent
+
+
+def test_cancelled_future_never_kills_dispatcher_or_peers():
+    """A client cancelling its Future (the portal does on timeout /
+    disconnect) must not raise InvalidStateError inside the dispatch
+    loop: the cancelled request's batch peers still get results, an
+    expired-and-cancelled request is dropped silently, and the
+    dispatcher thread survives to serve later submissions."""
+    c = small_compiled("engine")
+    srv = SpikeServer(max_batch=8, max_wait_ms=1.0)
+    srv.add_model("m", c, window=3, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(2), 1, 3, c.n_axons)[0]
+    # queue a batch while the dispatcher is down, then cancel members:
+    # one rides _run_batch cancelled, one hits _expire cancelled
+    gone = srv.submit("m", w, seed=1)
+    gone_expired = srv.submit("m", w, seed=2, timeout=0.005)
+    ok = srv.submit("m", w, seed=3)
+    assert gone.cancel() and gone_expired.cancel()
+    time.sleep(0.02)                          # let the deadline lapse
+    with srv:
+        res = ok.result(timeout=60)
+        assert res.spikes.shape == (3, c.n_neurons)
+        # the dispatcher thread is still alive and serving
+        again = srv.submit("m", w, seed=4).result(timeout=60)
+        assert again.spikes.shape == (3, c.n_neurons)
 
 
 # ------------------------------------------------------- HTTP transport
@@ -337,6 +363,55 @@ def test_ws_lane_exhaustion_is_http_503(engine_portal):
     finally:
         for ws in clients:
             ws.close()
+
+
+def _wait_lanes_free(srv, model, deadline_s=30.0):
+    t0 = time.monotonic()
+    while srv.models[model].sessions.n_open != 0:
+        if time.monotonic() - t0 > deadline_s:
+            raise AssertionError(
+                f"{srv.models[model].sessions.n_open} lane(s) still "
+                "open — leaked by a dead connection")
+        time.sleep(0.02)
+
+
+def test_ws_abrupt_disconnect_releases_lane(engine_portal):
+    """A client vanishing mid-frame (routine for network servers) must
+    not strand the stream handler: the producer's sentinel still fires,
+    handle_stream returns, and the resident lane is released — repeated
+    abrupt disconnects must not exhaust the SlotPool."""
+    srv, portal, c = engine_portal
+    for _ in range(6):                        # > the 4 session slots
+        ws = WSClient("127.0.0.1", portal.port, "m")
+        ws.sock.sendall(b"\x81")              # half a frame header...
+        ws.sock.close()                       # ...then vanish
+    _wait_lanes_free(srv, "m")
+    # every slot is usable again: open the full complement at once
+    clients = [WSClient("127.0.0.1", portal.port, "m")
+               for _ in range(4)]
+    for ws in clients:
+        ws.close()
+    _wait_lanes_free(srv, "m")
+
+
+def test_ws_oversized_frame_rejected_with_close_1009(engine_portal):
+    """A frame header claiming more than MAX_FRAME_BYTES is refused
+    BEFORE any payload is buffered: the server answers a close frame
+    with status 1009 (Message Too Big) and releases the lane."""
+    from repro.portal.ws import MAX_FRAME_BYTES, OP_CLOSE
+
+    srv, portal, c = engine_portal
+    ws = WSClient("127.0.0.1", portal.port, "m")
+    claim = 2 * MAX_FRAME_BYTES
+    ws.sock.sendall(bytes([0x81, 0x80 | 127])
+                    + struct.pack(">Q", claim))
+    while True:                               # pongs etc. skipped
+        opcode, payload = ws._read_frame()
+        if opcode == OP_CLOSE:
+            break
+    assert struct.unpack(">H", payload[:2])[0] == 1009
+    ws.sock.close()
+    _wait_lanes_free(srv, "m")
 
 
 # ------------------------------------------------ auth + quotas + 503s
