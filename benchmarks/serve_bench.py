@@ -16,11 +16,17 @@ claim CI must hold (violations exit nonzero):
   * TRACES: the whole serving session compiles the lane path at most
     log2(max_batch) + 1 times (the pow2 buckets), counted with
     `repro.analysis.retrace.compile_counts` — fluctuating client
-    concurrency must not turn into unbounded XLA recompiles.
+    concurrency must not turn into unbounded XLA recompiles;
+  * OBS OVERHEAD: the telemetry subsystem (spans + metrics), toggled
+    at runtime on the SAME warmed server, costs <= 5% of req/sec
+    (best of two noise-robust estimators over alternating on/off
+    rounds), stays bit-exact, and adds ZERO compiles — observability
+    must be cheap enough to leave on.
 
-Results (p50/p99 latency, req/sec both ways, batch-size distribution)
-go to BENCH_serve.json (CI artifact).
+Results (p50/p99 latency, req/sec both ways, batch-size distribution,
+obs-on vs obs-off req/sec) go to BENCH_serve.json (CI artifact).
 """
+import gc
 import json
 import math
 import threading
@@ -59,6 +65,23 @@ def _client(srv, cid, n_requests, reqs, results):
         results[(cid, r)] = res
 
 
+def _timed_pass(srv, clients, requests_per_client, reqs, repeat=1):
+    """One full concurrent-client pass (`repeat` sweeps of the request
+    set per client); returns (wall_s for ALL sweeps, last results)."""
+    results = {}
+    t0 = time.monotonic()
+    for _ in range(repeat):
+        threads = [threading.Thread(
+            target=_client,
+            args=(srv, c, requests_per_client, reqs, results))
+            for c in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    return time.monotonic() - t0, results
+
+
 def run(n_axons=24, n_neurons=96, window=8, clients=8,
         requests_per_client=6, max_batch=8, wait_ms=8.0,
         backend="mesh", quiet=False, out_json="BENCH_serve.json"):
@@ -89,19 +112,63 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
                 for _ in range(max_batch)]
         for f in warm:
             f.result()
+        # freeze the warmed heap (jax modules, compiled executables):
+        # steady-state collections then scan only per-request garbage,
+        # so the obs A/B below measures telemetry compute instead of
+        # GC sweeps over a large static heap (and every timed arm gets
+        # less jitter)
+        gc.collect()
+        gc.freeze()
         srv.reset_stats()          # percentiles from serving, not tracing
-        t0 = time.monotonic()
-        threads = [threading.Thread(
-            target=_client,
-            args=(srv, c, requests_per_client, reqs, results))
-            for c in range(clients)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        wall_b = time.monotonic() - t0
+        wall_b, results = _timed_pass(srv, clients,
+                                      requests_per_client, reqs)
         stats = srv.stats()
-    rps_b = total / wall_b
+        rps_b = total / wall_b
+
+        # ---- obs A/B on the SAME warmed server (the runtime toggle
+        # means zero recompiles) ----
+        traces_pre_obs = compile_counts(srv.models["bench"].dep.impl)
+        obs_results = {}
+        best = {False: 0.0, True: 0.0}
+        ratios = []
+        # alternating on/off rounds; the gate takes the BETTER of two
+        # noise-robust estimators of the same intrinsic cost: the
+        # ratio of best rates (ambient load only slows rounds down, so
+        # each arm's best round approximates its unloaded rate) and
+        # the median per-round paired ratio (load drift cancels inside
+        # a round, the median discards spike-poisoned rounds). The two
+        # fail under DIFFERENT noise shapes, so a false gate failure
+        # needs both depressed at once; passes are long (>= ~512
+        # requests) so scheduler jitter cannot fake 5%, and extra
+        # rounds (up to 15) hunt for a quiet window when sustained
+        # load poisons the first seven
+        repeat = max(1, -(-512 // total))
+
+        def _obs_estimate():
+            med = sorted(ratios)[len(ratios) // 2]
+            return max(best[True] / best[False], med)
+
+        for rnd in range(15):
+            if rnd >= 7 and _obs_estimate() >= 0.95:
+                break
+            order = (False, True) if rnd % 2 == 0 else (True, False)
+            rps = {}
+            for on in order:
+                srv.tel.on = on
+                wall, res = _timed_pass(srv, clients,
+                                        requests_per_client, reqs,
+                                        repeat=repeat)
+                rps[on] = repeat * total / wall
+                best[on] = max(best[on], rps[on])
+                obs_results[on] = res
+            ratios.append(rps[True] / rps[False])
+        srv.tel.on = True
+        rps_obs_off, rps_obs_on = best[False], best[True]
+        obs_ratio = _obs_estimate()
+        obs_extra = {
+            k: n for k, n in
+            compile_counts(srv.models["bench"].dep.impl).items()
+            if n != traces_pre_obs.get(k, 0)}
 
     # trace gate: pow2 bucketing bounds the whole session's compiles
     lane_traces = sum(
@@ -123,10 +190,12 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
     wall_s = time.monotonic() - t0
     rps_s = total / wall_s
 
-    # bit-exactness: served response == the request run alone
+    # bit-exactness: served response == the request run alone, in the
+    # main pass AND in both obs arms (telemetry never touches numbers)
     exact = all(
-        np.array_equal(results[k].spikes, serial[k][0])
-        and np.array_equal(results[k].membrane, serial[k][1])
+        np.array_equal(res[k].spikes, serial[k][0])
+        and np.array_equal(res[k].membrane, serial[k][1])
+        for res in (results, obs_results[True], obs_results[False])
         for k in reqs)
 
     out = {
@@ -144,13 +213,20 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         "buffer": stats["buffer"],
         "lane_traces": lane_traces, "trace_bound": trace_bound,
         "bitexact": exact,
+        "req_per_sec_obs_on": rps_obs_on,
+        "req_per_sec_obs_off": rps_obs_off,
+        "obs_overhead_ratio": obs_ratio,
+        "obs_round_ratios": ratios,
+        "obs_extra_traces": {f"{o}.{f}": n
+                             for (o, f), n in obs_extra.items()},
     }
     if not quiet:
         print(f"serve_bench,{backend},clients={clients},"
               f"batched={rps_b:.1f}req/s,sequential={rps_s:.1f}req/s,"
               f"speedup={out['speedup']:.2f}x,p50={out['p50_ms']:.2f}ms,"
               f"p99={out['p99_ms']:.2f}ms,"
-              f"traces={lane_traces}<={trace_bound},bitexact={exact}")
+              f"traces={lane_traces}<={trace_bound},bitexact={exact},"
+              f"obs={out['obs_overhead_ratio']:.3f}x")
 
     failures = []
     if out["speedup"] < 2.0:
@@ -159,6 +235,11 @@ def run(n_axons=24, n_neurons=96, window=8, clients=8,
         failures.append("served-results-not-bit-exact")
     if lane_traces > trace_bound:
         failures.append(f"lane-traces={lane_traces}>{trace_bound}")
+    if out["obs_overhead_ratio"] < 0.95:
+        failures.append(
+            f"obs-overhead={out['obs_overhead_ratio']:.3f}<0.95")
+    if obs_extra:
+        failures.append(f"obs-added-traces={out['obs_extra_traces']}")
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(out, fh, indent=2)

@@ -33,11 +33,13 @@ def _worker_mode(argv) -> int:
     ap.add_argument("--port", type=int, required=True)
     ap.add_argument("--uds", required=True)
     ap.add_argument("--auth-spec", default=None)
+    ap.add_argument("--log-json", default=None)
     args = ap.parse_args(argv)
 
     from repro.portal.bridge import run_worker
 
-    run_worker(args.host, args.port, args.uds, args.auth_spec)
+    run_worker(args.host, args.port, args.uds, args.auth_spec,
+               args.log_json)
     return 0
 
 
@@ -70,8 +72,9 @@ def main(argv=None) -> int:
                     help="0 = serve in-process; N = spawn N bridged "
                          "front-end worker processes (token quotas "
                          "are then enforced per worker — up to N x "
-                         "the configured limits — and /metrics "
-                         "client counters are worker-local)")
+                         "the configured limits; /metrics totals are "
+                         "bridge-aggregated across workers, with "
+                         "per-worker breakdown under *_by_worker)")
     ap.add_argument("--model", default="demo",
                     help="resident model name (the {model} in /v1/"
                          "{model}/run)")
@@ -88,8 +91,15 @@ def main(argv=None) -> int:
                     metavar="SECRET[:RATE[:BURST[:INFLIGHT]]]",
                     help="add a bearer token (repeatable); no --token "
                          "= open portal")
+    ap.add_argument("--log-json", default=None, metavar="PATH|-",
+                    help="write one JSON line per request to PATH "
+                         "('-' = stdout); off by default")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable span recording and metric updates "
+                         "(tracing/metrics are on by default)")
     args = ap.parse_args(argv)
 
+    from repro.obs import Telemetry
     from repro.portal.gateway import Portal
     from repro.serve import SpikeServer
     from repro.serve.__main__ import demo_spec
@@ -97,9 +107,11 @@ def main(argv=None) -> int:
 
     compiled = compile_spec(demo_spec(args.axons, args.neurons),
                             target=args.backend)
+    tel = Telemetry(on=not args.no_telemetry, log_json=args.log_json)
     srv = SpikeServer(max_batch=args.max_batch,
                       max_wait_ms=args.wait_ms,
-                      max_pending=args.max_pending)
+                      max_pending=args.max_pending,
+                      telemetry=tel)
     srv.add_model(args.model, compiled, window=args.window,
                   n_sessions=args.sessions, seed=0)
     tokens = dict(_parse_token(t) for t in args.token) or None

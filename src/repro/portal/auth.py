@@ -14,17 +14,22 @@ BEFORE anything touches the dispatcher:
     (429 `E_QUOTA_INFLIGHT`): one client cannot occupy every lane of
     the micro-batch by pipelining.
 
-Per-token counters (admitted / rejected / in flight) surface under
-`clients` in `GET /metrics`. Stdlib-only, so bridge workers import it
-without numpy/jax.
+Per-token counters (admitted / rejected / in flight) surface as
+`repro_token_*` series in the Prometheus `GET /metrics` exposition
+(and under `clients` in the legacy `GET /metrics?format=json` view).
+Stdlib-only, so bridge workers import it without numpy/jax.
 
 Multi-worker scope: with `--workers N` each SO_REUSEPORT worker
-process builds its OWN Authenticator from `spec()`, so quotas are
-enforced PER WORKER — a client whose connections the kernel spreads
-across workers can reach up to N x the configured rate/burst/
-max_inflight, and the `clients` block of `GET /metrics` reports only
-the counters of whichever worker answered that request. Size quotas
-for the worker count (e.g. rate / N for a hard global rate), or run
+process builds its OWN Authenticator from `spec()`, so quota
+ENFORCEMENT is per worker — a client whose connections the kernel
+spreads across workers can reach up to N x the configured rate/burst/
+max_inflight. REPORTING, however, is global: every worker forwards its
+metrics snapshot over the bridge, so `repro_token_admitted_total` /
+`repro_token_rejected_total` on `/metrics` are bridge-aggregated
+totals from any worker you ask, with the per-worker split preserved
+under `repro_token_*_by_worker{worker="<pid>"}`. (Only the legacy
+`?format=json` `clients` block remains worker-local.) Size quotas for
+the worker count (e.g. rate / N for a hard global rate), or run
 `--workers 0` when exact global enforcement matters; the ingestion
 backpressure (503 E_BACKPRESSURE) is always global because the
 DoubleBuffer lives in the single dispatcher process.

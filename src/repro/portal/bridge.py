@@ -19,6 +19,15 @@ Responses are `{"id": n, "result": ...}` or `{"id": n, "error":
 <PortalError.to_body()>}` — errors cross the process boundary with
 status/code/Retry-After/findings intact.
 
+Telemetry rides the same frames: an optional `trace` field carries the
+request's span-propagation context (`Span.ctx()`) dispatcher-ward, so
+one trace id follows a request across the process boundary; `spans`
+piggybacks the worker's finished spans (drained from its ring) and
+`m` its metrics snapshot, which the `BridgeServer` ingests into the
+dispatcher-side telemetry — that is how `/metrics` answers with
+AGGREGATED multi-worker totals and `/trace` shows whole cross-process
+traces.
+
 Worker processes are spawned as `python -m repro.portal --worker ...`
 and import ONLY stdlib modules (this file, http.py, ws.py, auth.py,
 errors.py) — never numpy or jax — so they start in tens of
@@ -29,9 +38,12 @@ from __future__ import annotations
 import asyncio
 import itertools
 import json
+import os
 import struct
-from typing import Dict, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
+from repro.obs import Telemetry
 from repro.portal.auth import Authenticator
 from repro.portal.errors import PortalError
 
@@ -41,7 +53,12 @@ __all__ = ["BridgeServer", "BridgeClient", "run_worker",
 # every gateway method a worker may invoke remotely — op names double
 # as the method names on both gateway implementations
 GATEWAY_OPS = ("run", "reconfigure", "open_session", "close_session",
-               "reset_session", "session_info", "stats", "healthz")
+               "reset_session", "session_info", "stats", "healthz",
+               "metrics", "trace_export")
+
+# worker metric snapshots are piggybacked at most this often on
+# ordinary frames (scrape ops always carry a fresh one)
+_M_FLUSH_S = 0.5
 
 _MAX_MSG = 256 * 1024 * 1024
 
@@ -73,11 +90,20 @@ class BridgeServer:
     `id` tags let responses return out of order while each worker's
     HTTP answers stay correctly paired."""
 
-    def __init__(self, gateway, path: str):
+    def __init__(self, gateway, path: str,
+                 telemetry: Optional[Telemetry] = None):
         self.gateway = gateway
         self.path = path
+        self.telemetry = telemetry
+        # latest metrics snapshot per worker pid (see worker_snapshots)
+        self._worker_snaps: Dict[int, dict] = {}
         self._server: Optional[asyncio.AbstractServer] = None
         self._conns = set()
+
+    def worker_snapshots(self) -> List[Tuple[int, dict]]:
+        """(pid, metrics snapshot) of every worker that has flushed —
+        the extra exposition sources `/metrics` aggregates over."""
+        return sorted(self._worker_snaps.items())
 
     async def start(self) -> "BridgeServer":
         self._server = await asyncio.start_unix_server(self._conn,
@@ -106,6 +132,16 @@ class BridgeServer:
         tasks = set()
 
         async def answer(msg: dict) -> None:
+            # ingest piggybacked worker telemetry BEFORE running the
+            # op, so a metrics/trace scrape sees the flushing worker's
+            # own up-to-the-frame state
+            if self.telemetry is not None:
+                spans = msg.get("spans")
+                if spans:
+                    self.telemetry.tracer.record(spans)
+            m = msg.get("m")
+            if isinstance(m, dict) and "pid" in m:
+                self._worker_snaps[int(m["pid"])] = m.get("snap", {})
             out = {"id": msg.get("id")}
             try:
                 op = msg.get("op")
@@ -113,7 +149,8 @@ class BridgeServer:
                     raise PortalError(400, "E_BAD_REQUEST",
                                       f"unknown bridge op {op!r}")
                 fn = getattr(self.gateway, op)
-                out["result"] = await fn(*msg.get("args", []))
+                kw = {"trace": msg["trace"]} if "trace" in msg else {}
+                out["result"] = await fn(*msg.get("args", []), **kw)
             except PortalError as e:
                 out["error"] = e.to_body()["error"]
             except Exception as e:     # noqa: BLE001 — process boundary
@@ -146,8 +183,8 @@ class _BridgeMethod:
     def __init__(self, client: "BridgeClient", op: str):
         self._client, self._op = client, op
 
-    async def __call__(self, *args):
-        return await self._client.call(self._op, *args)
+    async def __call__(self, *args, trace: Optional[dict] = None):
+        return await self._client.call(self._op, *args, trace=trace)
 
 
 class BridgeClient:
@@ -157,8 +194,11 @@ class BridgeClient:
     message ids pair responses back to their awaiting coroutine."""
 
     def __init__(self, reader: asyncio.StreamReader,
-                 writer: asyncio.StreamWriter):
+                 writer: asyncio.StreamWriter,
+                 telemetry: Optional[Telemetry] = None):
         self._reader, self._writer = reader, writer
+        self.telemetry = telemetry
+        self._m_flushed = 0.0
         self._ids = itertools.count()
         self._waiting: Dict[int, asyncio.Future] = {}
         self._pump = asyncio.ensure_future(self._read_loop())
@@ -166,9 +206,11 @@ class BridgeClient:
             setattr(self, op, _BridgeMethod(self, op))
 
     @classmethod
-    async def open(cls, path: str) -> "BridgeClient":
+    async def open(cls, path: str,
+                   telemetry: Optional[Telemetry] = None) \
+            -> "BridgeClient":
         reader, writer = await asyncio.open_unix_connection(path)
-        return cls(reader, writer)
+        return cls(reader, writer, telemetry)
 
     async def _read_loop(self) -> None:
         while True:
@@ -193,16 +235,46 @@ class BridgeClient:
             else:
                 fut.set_result(msg.get("result"))
 
-    async def call(self, op: str, *args):
+    async def call(self, op: str, *args,
+                   trace: Optional[dict] = None):
         mid = next(self._ids)
         fut = asyncio.get_running_loop().create_future()
         self._waiting[mid] = fut
+        msg = {"id": mid, "op": op, "args": list(args)}
+        tel = self.telemetry
+        span = None
+        if tel is not None and tel.tracer.on:
+            # the bridge hop is its own span; the dispatcher-side
+            # gateway_call nests under it via the forwarded ctx
+            span = tel.tracer.span("bridge", ctx=trace, op=op)
+            msg["trace"] = span.ctx()
+        elif trace is not None:
+            msg["trace"] = trace
+        if tel is not None:
+            # flush finished spans (recorded since the last call) and,
+            # throttled — or always for scrape ops — the metrics
+            # snapshot; the dispatcher ingests both, which is what
+            # makes /metrics aggregated and /trace cross-process
+            done = [s.to_dict() for s in tel.tracer.spans()
+                    if s.end is not None]
+            if done:
+                tel.tracer.clear()
+                msg["spans"] = done
+            now = time.monotonic()
+            if op in ("metrics", "healthz", "trace_export") \
+                    or now - self._m_flushed > _M_FLUSH_S:
+                msg["m"] = {"pid": os.getpid(),
+                            "snap": tel.metrics.collect()}
+                self._m_flushed = now
         # write-before-await keeps bridge submission order == the
         # order callers issued calls in (ws streaming relies on it)
-        self._writer.write(_frame({"id": mid, "op": op,
-                                   "args": list(args)}))
+        self._writer.write(_frame(msg))
         await self._writer.drain()
-        return await fut
+        try:
+            return await fut
+        finally:
+            if span is not None:
+                span.finish()
 
     async def close(self) -> None:
         self._pump.cancel()
@@ -225,11 +297,14 @@ def _reuseport_socket(host: str, port: int):
 
 
 async def _worker_async(host: str, port: int, uds_path: str,
-                        auth_spec: Optional[dict]) -> None:
+                        auth_spec: Optional[dict],
+                        log_json: Optional[str] = None) -> None:
     from repro.portal.http import PortalApp
 
-    gateway = await BridgeClient.open(uds_path)
-    app = PortalApp(gateway, Authenticator.from_spec(auth_spec))
+    telemetry = Telemetry(log_json=log_json)
+    gateway = await BridgeClient.open(uds_path, telemetry)
+    app = PortalApp(gateway, Authenticator.from_spec(auth_spec),
+                    telemetry=telemetry)
     sock = _reuseport_socket(host, port)
     server = await asyncio.start_server(app.handle_conn, sock=sock)
     async with server:
@@ -237,11 +312,13 @@ async def _worker_async(host: str, port: int, uds_path: str,
 
 
 def run_worker(host: str, port: int, uds_path: str,
-               auth_spec_json: Optional[str] = None) -> None:
+               auth_spec_json: Optional[str] = None,
+               log_json: Optional[str] = None) -> None:
     """Entry point of `python -m repro.portal --worker` — one
     front-end process. Blocks until killed by the parent portal."""
     spec = json.loads(auth_spec_json) if auth_spec_json else None
     try:
-        asyncio.run(_worker_async(host, port, uds_path, spec))
+        asyncio.run(_worker_async(host, port, uds_path, spec,
+                                  log_json))
     except (KeyboardInterrupt, asyncio.CancelledError):
         pass

@@ -38,6 +38,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.analysis import AnalysisError
+from repro.obs import (chrome_trace, merge_snapshots, render_snapshot,
+                       snapshot_by_worker)
 from repro.portal.auth import Authenticator, TokenQuota
 from repro.portal.bridge import BridgeServer, _reuseport_socket
 from repro.portal.errors import PortalError
@@ -101,6 +103,11 @@ class LocalGateway:
                  default_timeout: float = 120.0):
         self.server = server
         self.default_timeout = float(default_timeout)
+        # extra (pid, metrics-snapshot) sources merged into /metrics —
+        # Portal points this at BridgeServer.worker_snapshots in
+        # multi-worker mode so any worker's scrape reports aggregated
+        # totals
+        self.extra_snapshots = lambda: []
 
     # ------------------------------------------------------------ run
     def _schedule(self, payload: dict):
@@ -131,29 +138,38 @@ class LocalGateway:
                               "axon-id lists")
         return events
 
-    async def run(self, model: str, payload: dict) -> dict:
+    async def run(self, model: str, payload: dict,
+                  trace: Optional[dict] = None) -> dict:
         schedule = self._schedule(payload)
         session = payload.get("session")
         seed = int(payload.get("seed", 0))
         timeout = float(payload.get("timeout",
                                     self.default_timeout))
+        span = self.server.tel.tracer.span("gateway_call", ctx=trace,
+                                           op="run", model=model)
         try:
-            # submit before the first await: frame order == queue order
-            fut = self.server.submit(
-                model, schedule,
-                session=None if session is None else int(session),
-                seed=seed, timeout=timeout)
-        except Exception as e:         # noqa: BLE001 — wire boundary
-            raise map_exception(e)
-        try:
-            res = await asyncio.wait_for(asyncio.wrap_future(fut),
-                                         timeout + 30.0)
-        except asyncio.CancelledError:
-            if fut.cancelled():        # dispatcher shut down under us
-                raise map_exception(BufferClosed())
+            try:
+                # submit before the first await: frame order == queue
+                # order
+                fut = self.server.submit(
+                    model, schedule,
+                    session=None if session is None else int(session),
+                    seed=seed, timeout=timeout, trace=span.ctx())
+            except Exception as e:     # noqa: BLE001 — wire boundary
+                raise map_exception(e)
+            try:
+                res = await asyncio.wait_for(asyncio.wrap_future(fut),
+                                             timeout + 30.0)
+            except asyncio.CancelledError:
+                if fut.cancelled():    # dispatcher shut down under us
+                    raise map_exception(BufferClosed())
+                raise
+            except Exception as e:     # noqa: BLE001 — wire boundary
+                raise map_exception(e)
+        except PortalError as e:
+            span.finish(error=e.code)
             raise
-        except Exception as e:         # noqa: BLE001 — wire boundary
-            raise map_exception(e)
+        span.finish()
         spikes = np.asarray(res.spikes, dtype=np.uint8)
         membrane = np.asarray(res.membrane)
         return {
@@ -164,9 +180,14 @@ class LocalGateway:
             "digest": result_digest(res.spikes, res.membrane),
             "latency_ms": round(float(res.latency_ms), 3),
             "batch_size": int(res.batch_size),
+            "bucket": int(res.bucket),
+            "queue_wait_ms": round(float(res.queue_wait_ms), 3),
+            "dispatch_ms": round(float(res.dispatch_ms), 3),
+            "trace_id": res.trace_id,
         }
 
-    async def reconfigure(self, model: str, payload: dict) -> dict:
+    async def reconfigure(self, model: str, payload: dict,
+                          trace: Optional[dict] = None) -> dict:
         for k in ("pre", "post", "weight"):
             if k not in payload:
                 raise PortalError(400, "E_BAD_REQUEST",
@@ -185,7 +206,8 @@ class LocalGateway:
         return {"model": model, "uploads": int(uploads)}
 
     # ------------------------------------------------------- sessions
-    async def open_session(self, model: str) -> dict:
+    async def open_session(self, model: str,
+                           trace: Optional[dict] = None) -> dict:
         try:
             sid = self.server.open_session(model)
             window = self.server.models[model].window
@@ -194,21 +216,24 @@ class LocalGateway:
         return {"session": int(sid), "model": model,
                 "window": int(window)}
 
-    async def close_session(self, model: str, session: int) -> dict:
+    async def close_session(self, model: str, session: int,
+                            trace: Optional[dict] = None) -> dict:
         try:
             self.server.close_session(model, int(session))
         except Exception as e:         # noqa: BLE001 — wire boundary
             raise map_exception(e)
         return {"model": model, "closed": int(session)}
 
-    async def reset_session(self, model: str, session: int) -> dict:
+    async def reset_session(self, model: str, session: int,
+                            trace: Optional[dict] = None) -> dict:
         try:
             self.server.reset_session(model, int(session))
         except Exception as e:         # noqa: BLE001 — wire boundary
             raise map_exception(e)
         return {"model": model, "reset": int(session)}
 
-    async def session_info(self, model: str, session: int) -> dict:
+    async def session_info(self, model: str, session: int,
+                           trace: Optional[dict] = None) -> dict:
         try:
             m = self.server._model(model)
             s = m.sessions.get(int(session))
@@ -221,14 +246,42 @@ class LocalGateway:
                 "membrane": np.asarray(V).tolist()}
 
     # ------------------------------------------------------ telemetry
-    async def stats(self) -> dict:
+    async def stats(self, trace: Optional[dict] = None) -> dict:
         out = self.server.stats()
         for m in out["models"].values():
             m["batch_shapes"] = [list(s) for s in m["batch_shapes"]]
         return out
 
-    async def healthz(self) -> dict:
-        return {"ok": True, "pid": os.getpid(),
+    async def metrics(self, fmt: str = "prometheus",
+                      trace: Optional[dict] = None) -> dict:
+        """Render the unified metric registry. The aggregate merges the
+        dispatcher's own registry with every forwarded worker snapshot
+        (counters and histograms SUM), and the per-worker breakdown is
+        kept alongside under `<family>_by_worker{worker="<pid>"}`."""
+        if fmt == "json":
+            return {"server": await self.stats()}
+        workers = list(self.extra_snapshots())
+        own = self.server.tel.metrics.collect()
+        agg = merge_snapshots(
+            [own] + [snap for _, snap in workers]
+            + [snapshot_by_worker(snap, pid)
+               for pid, snap in workers])
+        return {"content_type":
+                "text/plain; version=0.0.4; charset=utf-8",
+                "text": render_snapshot(agg)}
+
+    async def trace_export(self, trace_id: Optional[str] = None,
+                           trace: Optional[dict] = None) -> dict:
+        """Chrome trace-event JSON of the dispatcher ring (which, in
+        multi-worker mode, also holds every forwarded worker span)."""
+        return chrome_trace(
+            self.server.tel.tracer.spans(trace_id or None))
+
+    async def healthz(self, trace: Optional[dict] = None) -> dict:
+        h = self.server.health()
+        return {"ok": bool(h["ok"]), "pid": os.getpid(),
+                "dispatcher": h["dispatcher"],
+                "queue": h["queue"], "lanes": h["lanes"],
                 "models": {
                     name: {"window": m.window,
                            "n_axons": int(m.dep.compiled.n_axons),
@@ -333,7 +386,11 @@ class Portal:
         await server.wait_closed()
 
     async def _start_inproc(self) -> None:
-        app = PortalApp(self.gateway, self.auth)
+        # in-process mode shares the server's telemetry bundle: portal
+        # spans land in the same ring as serve spans, so one request is
+        # one trace with no forwarding step
+        app = PortalApp(self.gateway, self.auth,
+                        telemetry=self.server.tel)
         self._http_server = await asyncio.start_server(
             app.handle_conn, self.host, self.port)
         self.port = self._http_server.sockets[0].getsockname()[1]
@@ -346,7 +403,11 @@ class Portal:
         self.port = self._reserve.getsockname()[1]
         self._tmpdir = tempfile.mkdtemp(prefix="repro-portal-")
         uds = os.path.join(self._tmpdir, "bridge.sock")
-        self._bridge = BridgeServer(self.gateway, uds)
+        self._bridge = BridgeServer(self.gateway, uds,
+                                    telemetry=self.server.tel)
+        # any worker's /metrics now merges every worker's forwarded
+        # snapshot — aggregated totals, not worker-local counters
+        self.gateway.extra_snapshots = self._bridge.worker_snapshots
         self._call(self._bridge.start())
 
         src_root = os.path.dirname(os.path.dirname(
@@ -361,6 +422,10 @@ class Portal:
                "--uds", uds]
         if spec is not None:
             cmd += ["--auth-spec", json.dumps(spec)]
+        # workers inherit the structured-log sink (append-mode single-
+        # write lines, so N processes sharing one file stay line-atomic)
+        if self.server.tel.log.target is not None:
+            cmd += ["--log-json", self.server.tel.log.target]
         self._procs = [subprocess.Popen(cmd, env=env)
                        for _ in range(self.workers)]
         self._wait_ready()

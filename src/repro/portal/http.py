@@ -30,14 +30,18 @@ from __future__ import annotations
 import asyncio
 import json
 import os
+import time
+import urllib.parse
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
+from repro.obs import Telemetry
 from repro.portal import ws as _ws
 from repro.portal.auth import Authenticator
 from repro.portal.errors import PortalError
 
-__all__ = ["HTTPRequest", "PortalApp", "read_request", "http_response"]
+__all__ = ["HTTPRequest", "PortalApp", "RawResult", "read_request",
+           "http_response"]
 
 MAX_HEADER_BYTES = 64 * 1024
 MAX_BODY_BYTES = 64 * 1024 * 1024
@@ -57,10 +61,24 @@ class HTTPRequest:
     version: str
     headers: Dict[str, str] = field(default_factory=dict)
     body: bytes = b""
+    # telemetry, filled in by dispatch/_v1: the request's span
+    # propagation ctx and the quota label of its token (never the
+    # secret)
+    trace: Optional[dict] = None
+    token_label: str = ""
 
     @property
     def path(self) -> str:
         return self.target.split("?", 1)[0]
+
+    @property
+    def query(self) -> Dict[str, str]:
+        """Last-wins query parameters of the request target."""
+        if "?" not in self.target:
+            return {}
+        qs = urllib.parse.parse_qsl(self.target.split("?", 1)[1],
+                                    keep_blank_values=True)
+        return dict(qs)
 
     def json(self) -> dict:
         if not self.body:
@@ -137,15 +155,27 @@ async def read_request(reader: asyncio.StreamReader) \
     return req
 
 
-def http_response(status: int, body: dict, *,
+@dataclass
+class RawResult:
+    """A non-JSON (or non-200-JSON) route result — the Prometheus
+    text exposition, or a health body that must ride a 503."""
+    status: int
+    content_type: str
+    payload: bytes
+
+
+def http_response(status: int, body: Union[dict, bytes, bytearray], *,
                   headers: Optional[Dict[str, str]] = None,
                   keep_alive: bool = True) -> bytes:
-    payload = json.dumps(body).encode("utf-8")
+    hdrs = dict(headers or {})
+    ctype = hdrs.pop("Content-Type", "application/json")
+    payload = bytes(body) if isinstance(body, (bytes, bytearray)) \
+        else json.dumps(body).encode("utf-8")
     lines = [f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}",
-             "Content-Type: application/json",
+             f"Content-Type: {ctype}",
              f"Content-Length: {len(payload)}",
              f"Connection: {'keep-alive' if keep_alive else 'close'}"]
-    for k, v in (headers or {}).items():
+    for k, v in hdrs.items():
         lines.append(f"{k}: {v}")
     return ("\r\n".join(lines) + "\r\n\r\n").encode("latin-1") + payload
 
@@ -154,9 +184,51 @@ class PortalApp:
     """Route table + per-connection loop. One instance serves every
     connection of one worker (or of the in-process portal thread)."""
 
-    def __init__(self, gateway, auth: Optional[Authenticator] = None):
+    def __init__(self, gateway, auth: Optional[Authenticator] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.gateway = gateway
         self.auth = auth or Authenticator(None)
+        self.tel = telemetry if telemetry is not None else Telemetry()
+        mreg = self.tel.metrics
+        self._m_http = mreg.counter(
+            "repro_http_requests_total",
+            "HTTP requests by method and status",
+            ("method", "status"))
+        self._m_http_lat = mreg.histogram(
+            "repro_http_latency_ms",
+            "Wall-clock HTTP request latency in milliseconds")
+        self._m_tok_admit = mreg.counter(
+            "repro_token_admitted_total",
+            "Requests admitted per token quota", ("token",))
+        self._m_tok_reject = mreg.counter(
+            "repro_token_rejected_total",
+            "Requests rejected per token quota",
+            ("token", "reason"))
+        self._tok_last: Dict = {}
+        mreg.register_callback(self._scrape_auth)
+
+    def _scrape_auth(self, mreg) -> None:
+        """Per-token quota counters, read at collect time from the
+        authenticator's cumulative tallies (delta-tracked so they
+        expose as true Prometheus counters and SUM correctly across
+        worker snapshots)."""
+        g_inflight = mreg.gauge("repro_token_inflight",
+                                "Requests currently in flight per "
+                                "token", ("token",))
+        for label, m in self.auth.metrics().items():
+            g_inflight.set(m["inflight"], token=label)
+            for fld, inc in (
+                    ("admitted", lambda n: self._m_tok_admit.inc(
+                        n, token=label)),
+                    ("rejected_rate", lambda n: self._m_tok_reject.inc(
+                        n, token=label, reason="rate")),
+                    ("rejected_inflight",
+                     lambda n: self._m_tok_reject.inc(
+                         n, token=label, reason="inflight"))):
+                last = self._tok_last.get((label, fld), 0)
+                if m[fld] > last:
+                    inc(m[fld] - last)
+                    self._tok_last[(label, fld)] = m[fld]
 
     # ------------------------------------------------------ connection
     async def handle_conn(self, reader: asyncio.StreamReader,
@@ -194,30 +266,97 @@ class PortalApp:
 
     # ------------------------------------------------------- dispatch
     async def dispatch(self, req: HTTPRequest) \
-            -> Tuple[int, dict, Dict[str, str]]:
+            -> Tuple[int, Union[dict, bytes], Dict[str, str]]:
+        # root span of the request's trace: honour an X-Trace-Id the
+        # client (or an upstream proxy) supplied, mint one otherwise;
+        # the id is echoed back so clients can fetch /trace?trace_id=
+        span = self.tel.tracer.span(
+            "http_request",
+            trace_id=req.headers.get("x-trace-id") or None,
+            method=req.method, path=req.path)
+        req.trace = span.ctx()
+        headers: Dict[str, str] = {}
         try:
-            return 200, await self._route(req), {}
+            out = await self._route(req)
+            if isinstance(out, RawResult):
+                status, body = out.status, out.payload
+                headers["Content-Type"] = out.content_type
+            else:
+                status, body = 200, out
         except PortalError as e:
-            return e.status, e.to_body(), e.headers()
+            status, body, headers = e.status, e.to_body(), e.headers()
         except Exception as e:     # noqa: BLE001 — wire boundary
             err = PortalError(500, "E_INTERNAL",
                               f"{type(e).__name__}: {e}")
-            return err.status, err.to_body(), err.headers()
+            status, body, headers = err.status, err.to_body(), \
+                err.headers()
+        self._observe(req, span, status, body)
+        if span.trace_id:
+            headers["X-Trace-Id"] = span.trace_id
+        return status, body, headers
 
-    async def _route(self, req: HTTPRequest) -> dict:
+    def _observe(self, req: HTTPRequest, span, status: int,
+                 body) -> None:
+        """Finish the root span, count the request, and emit its JSON
+        log line (one per request, `--log-json`)."""
+        span.finish(status=status)
+        if self.tel.on:
+            self._m_http.inc(method=req.method, status=str(status))
+            self._m_http_lat.observe(span.duration_ms)
+        if not self.tel.log.enabled:
+            return
+        err = body.get("error") if isinstance(body, dict) else None
+        seg = [s for s in req.path.split("/") if s]
+        rec = {"trace_id": span.trace_id, "token": req.token_label,
+               "model": seg[1] if len(seg) >= 2 and seg[0] == "v1"
+               else "", "op": seg[2] if len(seg) >= 3 else req.path,
+               "status": status,
+               "code": err.get("code") if isinstance(err, dict)
+               else None,
+               "latency_ms": round(span.duration_ms, 3)}
+        if isinstance(body, dict):
+            for k in ("bucket", "batch_size", "queue_wait_ms",
+                      "dispatch_ms"):
+                if k in body:
+                    rec[k] = body[k]
+        self.tel.log.request(**rec)
+
+    async def _route(self, req: HTTPRequest) \
+            -> Union[dict, RawResult]:
         path, method = req.path, req.method
         if path == "/healthz":
             self._need(method, "GET")
-            out = await self.gateway.healthz()
+            out = await self.gateway.healthz(trace=req.trace)
             # which front-end process answered (the dispatcher's own
             # pid rides in `pid`) — Portal._wait_ready polls this to
             # confirm every SO_REUSEPORT worker is accepting
             out["worker_pid"] = os.getpid()
+            if out.get("ok") is False:
+                # a started-and-wedged dispatcher answers 503 with the
+                # full health body, so load balancers drain this
+                # backend while operators still see why
+                return RawResult(503, "application/json",
+                                 json.dumps(out).encode("utf-8"))
             return out
         if path == "/metrics":
             self._need(method, "GET")
-            stats = await self.gateway.stats()
-            return {"server": stats, "clients": self.auth.metrics()}
+            if req.query.get("format") == "json":
+                # legacy JSON shape; `clients` stays worker-local by
+                # design (it reports the answering worker's quota
+                # table — the aggregated view is the Prometheus text)
+                stats = await self.gateway.stats(trace=req.trace)
+                return {"server": stats,
+                        "clients": self.auth.metrics()}
+            out = await self.gateway.metrics("prometheus",
+                                             trace=req.trace)
+            return RawResult(200, out.get(
+                "content_type",
+                "text/plain; version=0.0.4; charset=utf-8"),
+                out["text"].encode("utf-8"))
+        if path == "/trace":
+            self._need(method, "GET")
+            return await self.gateway.trace_export(
+                req.query.get("trace_id") or None, trace=req.trace)
         seg = [s for s in path.split("/") if s]
         if len(seg) >= 3 and seg[0] == "v1":
             return await self._v1(req, seg[1], seg[2:])
@@ -226,28 +365,36 @@ class PortalApp:
 
     async def _v1(self, req: HTTPRequest, model: str, rest) -> dict:
         state = self.auth.authenticate(req.headers)
+        if state is not None:
+            req.token_label = state.name
         method = req.method
+        trace = req.trace
         if rest == ["run"]:
             self._need(method, "POST")
             with self.auth.admit(state):
-                return await self.gateway.run(model, req.json())
+                return await self.gateway.run(model, req.json(),
+                                              trace=trace)
         if rest == ["reconfigure"]:
             self._need(method, "POST")
             with self.auth.admit(state):
                 return await self.gateway.reconfigure(model,
-                                                      req.json())
+                                                      req.json(),
+                                                      trace=trace)
         if rest == ["session"]:
             self._need(method, "POST")
-            return await self.gateway.open_session(model)
+            return await self.gateway.open_session(model, trace=trace)
         if len(rest) >= 2 and rest[0] == "session":
             sid = self._int(rest[1])
             if len(rest) == 2 and method == "GET":
-                return await self.gateway.session_info(model, sid)
+                return await self.gateway.session_info(model, sid,
+                                                       trace=trace)
             if len(rest) == 2 and method == "DELETE":
-                return await self.gateway.close_session(model, sid)
+                return await self.gateway.close_session(model, sid,
+                                                        trace=trace)
             if rest[2:] == ["reset"]:
                 self._need(method, "POST")
-                return await self.gateway.reset_session(model, sid)
+                return await self.gateway.reset_session(model, sid,
+                                                        trace=trace)
         raise PortalError(404, "E_NO_ROUTE",
                           f"no route for {method} {req.path}")
 

@@ -181,13 +181,30 @@ async def handle_stream(app, req, reader: asyncio.StreamReader,
     writer.write(encode_frame(json.dumps(hello).encode("utf-8")))
     await writer.drain()
 
+    # one trace per stream: every window span (and its downstream
+    # bridge/queue/dispatch spans) nests under this root
+    tel = app.tel
+    root = tel.tracer.span(
+        "ws_stream",
+        trace_id=req.headers.get("x-trace-id") or None,
+        model=model, session=sid)
+
     pending: asyncio.Queue = asyncio.Queue()
 
     async def window_task(payload: dict) -> dict:
         with app.auth.admit(state):
             payload = dict(payload)
             payload["session"] = sid
-            return await app.gateway.run(model, payload)
+            span = tel.tracer.span("ws_window", ctx=root.ctx(),
+                                   model=model)
+            try:
+                out = await app.gateway.run(model, payload,
+                                            trace=span.ctx())
+            except PortalError as e:
+                span.finish(error=e.code)
+                raise
+            span.finish()
+            return out
 
     close_payload = b""
 
@@ -250,6 +267,18 @@ async def handle_stream(app, req, reader: asyncio.StreamReader,
                 out["error"] = PortalError(
                     500, "E_INTERNAL",
                     f"{type(e).__name__}: {e}").to_body()["error"]
+            if tel.log.enabled:
+                err = out.get("error")
+                tel.log.request(
+                    trace_id=root.trace_id,
+                    token=state.name if state is not None else "",
+                    model=model, op="ws_window",
+                    status=err.get("status", 500) if err else 200,
+                    code=err.get("code") if err else None,
+                    window=idx,
+                    **{k: out[k] for k in
+                       ("bucket", "batch_size", "queue_wait_ms",
+                        "dispatch_ms") if k in out})
             writer.write(encode_frame(json.dumps(out).encode("utf-8")))
             await writer.drain()
         writer.write(encode_frame(close_payload, OP_CLOSE))
@@ -257,6 +286,7 @@ async def handle_stream(app, req, reader: asyncio.StreamReader,
     except (ConnectionError, OSError):
         pass
     finally:
+        root.finish()
         producer.cancel()
         try:
             await app.gateway.close_session(model, sid)

@@ -50,6 +50,14 @@ def _client(srv: SpikeServer, model: str, cid: int, n_requests: int,
         res = srv.submit(model, counts, session=sid,
                          seed=cid * 1000 + r).result(timeout=120)
         results.append(res)
+        if srv.tel.log.enabled:
+            srv.tel.log.request(
+                trace_id=res.trace_id, token="", model=model,
+                op="run", status=200, code=None, bucket=res.bucket,
+                batch_size=res.batch_size,
+                queue_wait_ms=round(res.queue_wait_ms, 3),
+                dispatch_ms=round(res.dispatch_ms, 3),
+                latency_ms=round(res.latency_ms, 3))
     if sid is not None:
         srv.close_session(model, sid)
 
@@ -70,11 +78,21 @@ def main(argv=None) -> int:
                     help="micro-batch deadline")
     ap.add_argument("--sessions", action="store_true",
                     help="give every client a resident session lane")
+    ap.add_argument("--log-json", default=None, metavar="PATH|-",
+                    help="write one JSON line per request to PATH "
+                         "('-' = stdout)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's spans as Chrome trace-event "
+                         "JSON (open in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
 
+    from repro.obs import Telemetry, chrome_trace
+
+    tel = Telemetry(log_json=args.log_json)
     compiled = compile_spec(demo_spec(args.axons, args.neurons),
                             target=args.backend)
-    srv = SpikeServer(max_batch=args.max_batch, max_wait_ms=args.wait_ms)
+    srv = SpikeServer(max_batch=args.max_batch, max_wait_ms=args.wait_ms,
+                      telemetry=tel)
     srv.add_model("demo", compiled, window=args.window,
                   n_sessions=args.clients, seed=0)
 
@@ -108,6 +126,14 @@ def main(argv=None) -> int:
           f"{stats['buffer']['max_future_depth']}")
     print(f"batch shapes {stats['models']['demo']['batch_shapes']}  "
           f"mean spike rate {spike_rate:.3f}")
+    if args.trace_out:
+        import json
+
+        obj = chrome_trace(tel.tracer.spans())
+        with open(args.trace_out, "w", encoding="utf-8") as fh:
+            json.dump(obj, fh)
+        print(f"wrote {len(obj['traceEvents'])} trace events to "
+              f"{args.trace_out}")
     return 0
 
 

@@ -41,7 +41,9 @@ import numpy as np
 from repro.analysis.validate import structural_error
 from repro.core import schedule as sched
 from repro.core.compile import CompiledNetwork
+from repro.core.costmodel import LEVEL_NAMES
 from repro.core.deploy import Deployment, deploy
+from repro.obs import Telemetry
 from repro.serve.queue import BufferFull, DoubleBuffer
 from repro.serve.session import (DeadlineError, Reconfigure, Request,
                                  ServeResult, Session, SessionStore)
@@ -116,7 +118,9 @@ class SpikeServer:
 
     def __init__(self, *, max_batch: int = 8, max_wait_ms: float = 2.0,
                  bucket_batch: bool = True,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 stall_after_s: float = 30.0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = int(max_batch)
@@ -132,6 +136,91 @@ class SpikeServer:
         self._stats_lock = threading.Lock()
         self.latencies_ms: List[float] = []
         self.batch_sizes: List[int] = []
+        # telemetry is always AVAILABLE (a default bundle is built when
+        # none is passed); only its cost profile changes with tel.on
+        self.tel = telemetry if telemetry is not None else Telemetry()
+        # dispatcher liveness: the loop stamps _last_tick each
+        # iteration (take() idle-ticks every <=50 ms, so a stale stamp
+        # means a wedged dispatcher, not an idle one); stall_after_s is
+        # generous because a first-compile of a new bucket legitimately
+        # holds the loop for seconds
+        self.stall_after_s = float(stall_after_s)
+        self._last_tick = time.monotonic()
+        self._started = False
+        self._shutdown_done = False
+        self._setup_metrics()
+
+    # ---------------------------------------------------------- telemetry
+    def _setup_metrics(self) -> None:
+        mreg = self.tel.metrics
+        self._m_requests = mreg.counter(
+            "repro_serve_requests_total",
+            "Serve requests by model and outcome",
+            ("model", "outcome"))
+        self._m_latency = mreg.histogram(
+            "repro_serve_latency_ms",
+            "Per-stage request latency in milliseconds",
+            ("model", "stage"))
+        self._m_batch = mreg.histogram(
+            "repro_serve_batch_size",
+            "Dispatched micro-batch sizes",
+            ("model",), buckets=[1, 2, 4, 8, 16, 32, 64])
+        # last-seen cumulative tallies so scrape-time callbacks can
+        # expose monotone sources (AccessCounter, buffer rejects) as
+        # true counters via deltas
+        self._level_last: Dict = {}
+        self._rejected_last = 0
+        self._m_level = mreg.counter(
+            "repro_level_events_total",
+            "Spike exchange events by hierarchy level "
+            "(local/NoC/FireFly/Ethernet)", ("model", "level"))
+        self._m_rejected = mreg.counter(
+            "repro_serve_rejected_total",
+            "Submissions shed by the bounded ingestion buffer")
+        mreg.register_callback(self._scrape)
+
+    def _scrape(self, mreg) -> None:
+        """Scrape-time gauges — values that live elsewhere are read at
+        collect instead of instrumenting hot paths."""
+        buf = self._buf.stats()
+        mreg.gauge("repro_serve_queue_depth",
+                   "Pending items in the ingestion buffer"
+                   ).set(buf["pending"])
+        mreg.gauge("repro_serve_queue_swaps",
+                   "Present/future buffer swaps").set(buf["swaps"])
+        if buf["rejected"] > self._rejected_last:
+            self._m_rejected.inc(buf["rejected"] - self._rejected_last)
+            self._rejected_last = buf["rejected"]
+        alive = self._thread is not None and self._thread.is_alive()
+        mreg.gauge("repro_dispatcher_alive",
+                   "1 while the dispatch loop is live").set(int(alive))
+        g_used = mreg.gauge("repro_lanes_in_use",
+                            "Resident session lanes held", ("model",))
+        g_cap = mreg.gauge("repro_lanes_capacity",
+                           "Resident session lanes allocated",
+                           ("model",))
+        g_compile = mreg.gauge(
+            "repro_compile_count",
+            "jit compile-cache entries per traced function — a rising "
+            "value in steady state is a retrace leak", ("model", "fn"))
+        for name, m in list(self.models.items()):
+            g_used.set(m.sessions.pool.n_active, model=name)
+            g_cap.set(m.sessions.pool.n_slots, model=name)
+            ctr = getattr(m.dep, "counter", None)
+            if ctr is not None:
+                for lvl, v in zip(LEVEL_NAMES, ctr.level_events):
+                    key = (name, lvl)
+                    last = self._level_last.get(key, 0)
+                    if v > last:
+                        self._m_level.inc(v - last, model=name,
+                                          level=lvl)
+                        self._level_last[key] = v
+            try:
+                from repro.analysis.retrace import compile_counts
+                for (_, fn), n in compile_counts(m.dep.impl).items():
+                    g_compile.set(n, model=name, fn=fn)
+            except Exception:       # noqa: BLE001 — scrape never fails
+                pass
 
     # ------------------------------------------------------------ models
     def add_model(self, name: str,
@@ -195,7 +284,8 @@ class SpikeServer:
     # ------------------------------------------------------------ submit
     def submit(self, model: str, schedule, *,
                session: Optional[int] = None, seed: int = 0,
-               timeout: Optional[float] = None) -> Future:
+               timeout: Optional[float] = None,
+               trace: Optional[dict] = None) -> Future:
         """Enqueue one spike window; returns a Future[ServeResult].
         `schedule` is a (T, A) int32 count array or a length-T sequence
         of axon-id lists, T <= the model's window (== for session
@@ -203,7 +293,10 @@ class SpikeServer:
         per request, the frame-tick contract that keeps every serving
         batch one compiled shape). `timeout` (seconds) bounds the QUEUE
         wait: a request no batch admits in time resolves its Future
-        with a structured `DeadlineError` instead of hanging."""
+        with a structured `DeadlineError` instead of hanging. `trace`
+        is a `Span.ctx()` propagation dict from an upstream span (the
+        portal's gateway call) — queue-wait and dispatch spans recorded
+        for this request join that trace."""
         m = self._model(model)
         n_axons = m.dep.compiled.n_axons
         if getattr(schedule, "ndim", 0) >= 2 \
@@ -238,7 +331,8 @@ class SpikeServer:
         req = Request(model=model, counts=counts, steps=T,
                       session=session, seed=int(seed), t_submit=now,
                       deadline=None if timeout is None
-                      else now + float(timeout))
+                      else now + float(timeout),
+                      trace=trace, t_submit_ns=time.monotonic_ns())
         self._put(req)
         return req.future
 
@@ -249,6 +343,7 @@ class SpikeServer:
             # hint: the present batch drains within one admission
             # deadline — tell shedding clients when to come back
             e.retry_after_s = max(2 * self.max_wait_s, 0.05)
+            self._m_requests.inc(model=item.model, outcome="rejected")
             raise
 
     def reconfigure(self, model: str, pre, post, weight) -> Future:
@@ -268,6 +363,9 @@ class SpikeServer:
         if self._thread is not None:
             raise RuntimeError("server already started")
         self._stop.clear()
+        self._started = True
+        self._shutdown_done = False
+        self._last_tick = time.monotonic()
         self._thread = threading.Thread(target=self._dispatch_loop,
                                         name="spike-server-dispatch",
                                         daemon=True)
@@ -293,6 +391,7 @@ class SpikeServer:
             if not it.future.cancel():
                 _reject(it.future,
                         RuntimeError("server stopped before dispatch"))
+        self._shutdown_done = True
 
     # the historical name — same contract
     stop = shutdown
@@ -321,6 +420,7 @@ class SpikeServer:
 
     def _dispatch_loop(self) -> None:
         while True:
+            self._last_tick = time.monotonic()
             items = self._buf.take(self.max_batch, self.max_wait_s,
                                    coalesce=self._coalesce)
             if not items:
@@ -344,6 +444,8 @@ class SpikeServer:
                     self._run_batch(items)
             except BaseException as e:          # noqa: BLE001 — futures
                 for it in items:                # carry the error out
+                    self._m_requests.inc(model=it.model,
+                                         outcome="error")
                     _reject(it.future, e)
 
     def _expire(self, items: List) -> List:
@@ -357,6 +459,8 @@ class SpikeServer:
         for it in items:
             dl = getattr(it, "deadline", None)
             if dl is not None and now > dl:
+                self._m_requests.inc(model=it.model,
+                                     outcome="deadline")
                 _reject(it.future, DeadlineError(
                     it.model, dl - it.t_submit, now - it.t_submit))
             else:
@@ -377,33 +481,110 @@ class SpikeServer:
         B = len(reqs)
         Bp = min(next_pow2(B), self.max_batch) if self.bucket_batch \
             else B
-        counts = np.stack([r.counts for r in reqs]
+        t_assembled = time.monotonic_ns()   # batch closed: queue wait
+        counts = np.stack([r.counts for r in reqs]      # ends here
                           + [np.zeros_like(reqs[0].counts)] * (Bp - B))
         lanes = [(-1 if r.session is None
                   else m.sessions.get(r.session).lane)
                  for r in reqs] + [-1] * (Bp - B)
         seeds = [r.seed for r in reqs] + [0] * (Bp - B)
+        t_dispatch = time.monotonic_ns()
         spikes, membranes = m.dep.run_lanes(lanes, counts, seeds=seeds)
+        t_done = time.monotonic_ns()
+        dispatch_ms = (t_done - t_dispatch) / 1e6
         m.trace_shapes.add((Bp, m.window))
         done = time.monotonic()
         m.requests += B
         m.batches += 1
         m.lane_steps += B * m.window
-        lats = []
+        tracer = self.tel.tracer
+        lats, qwaits = [], []
+        span_out, resolved = [], []
         for i, r in enumerate(reqs):
             lat = (done - r.t_submit) * 1e3
             lats.append(lat)
+            qwaits.append((t_assembled - r.t_submit_ns) / 1e6)
             if r.session is not None:
                 s = m.sessions.get(r.session)
                 s.requests += 1
                 s.steps += m.window
-            _resolve(r.future, ServeResult(
+            # per-request spans: queue_wait covers submit -> batch
+            # assembly, dispatch the (shared) run_lanes execution; both
+            # nest under the upstream gateway-call span when the
+            # request carried a propagation ctx. They are built as
+            # plain finished dicts and committed in ONE record_batch
+            # below — two Span objects plus two ring-lock round-trips
+            # per request would dominate telemetry's 5% overhead
+            # envelope at high request rates
+            tid = (r.trace or {}).get("trace_id", "")
+            if tracer.on:
+                qd = tracer.span_record("queue_wait", ctx=r.trace,
+                                        start=r.t_submit_ns,
+                                        end=t_assembled, model=r.model)
+                tid = qd["trace_id"]
+                span_out.append(qd)
+                span_out.append(tracer.span_record(
+                    "dispatch", trace_id=tid, parent=qd["parent_id"],
+                    start=t_dispatch, end=t_done, model=r.model,
+                    batch_size=B, bucket=Bp))
+            resolved.append((r.future, ServeResult(
                 spikes=spikes[i, :r.steps], membrane=membranes[i],
                 latency_ms=lat, batch_size=B, model=r.model,
-                session=r.session))
+                session=r.session, queue_wait_ms=qwaits[-1],
+                dispatch_ms=dispatch_ms, bucket=Bp, trace_id=tid)))
+        if tracer.on:
+            # commit spans BEFORE resolving futures: a client that has
+            # its response can immediately fetch the full trace
+            tracer.record_batch(span_out)
+        for fut, res in resolved:
+            _resolve(fut, res)
+        if tracer.on:
+            # metric updates are per BATCH, not per request: one key
+            # build + lock acquire each, so obs-on stays within the
+            # bench's 5% overhead envelope at high request rates
+            self._m_requests.inc(B, model=m.name, outcome="ok")
+            self._m_latency.observe_many(lats, model=m.name,
+                                         stage="total")
+            self._m_latency.observe_many(qwaits, model=m.name,
+                                         stage="queue_wait")
+            self._m_latency.observe(dispatch_ms, model=m.name,
+                                    stage="dispatch")
+            self._m_batch.observe(B, model=m.name)
         with self._stats_lock:
             self.latencies_ms.extend(lats)
             self.batch_sizes.append(B)
+
+    # ------------------------------------------------------------ health
+    def health(self) -> dict:
+        """Liveness + capacity report for `GET /healthz`: queue depth,
+        per-model resident-lane occupancy, and dispatcher liveness, so
+        a load balancer can drain a wedged dispatcher instead of
+        routing into a black hole.
+
+        `ok` goes False ONLY for a dispatcher that was started and has
+        since died or stalled (no loop tick for `stall_after_s` —
+        generous, because a first-compile legitimately holds the loop
+        for seconds). A server not yet started, or cleanly shut down,
+        reports ok=True: readiness probing during startup
+        (`Portal._wait_ready`) and drain-phase scrapes must not flap."""
+        buf = self._buf.stats()
+        alive = self._thread is not None and self._thread.is_alive()
+        tick_age = time.monotonic() - self._last_tick
+        wedged = self._started and not self._shutdown_done and (
+            not alive or tick_age > self.stall_after_s)
+        return {
+            "ok": not wedged,
+            "dispatcher": {"alive": alive,
+                           "started": self._started,
+                           "last_tick_age_s": round(tick_age, 3),
+                           "stall_after_s": self.stall_after_s},
+            "queue": {"pending": buf["pending"],
+                      "capacity": buf["capacity"],
+                      "rejected": buf["rejected"]},
+            "lanes": {name: {"in_use": m.sessions.pool.n_active,
+                             "capacity": m.sessions.pool.n_slots}
+                      for name, m in self.models.items()},
+        }
 
     # ------------------------------------------------------------- stats
     def reset_stats(self) -> None:

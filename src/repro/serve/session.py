@@ -57,6 +57,12 @@ class Request:
     future: Future = field(default_factory=Future)
     t_submit: float = 0.0
     deadline: Optional[float] = None
+    # telemetry: `trace` is a Span.ctx() propagation dict ({"trace_id",
+    # "parent"}) carried from the portal, or None for untraced callers;
+    # `t_submit_ns` is the monotonic-ns twin of t_submit so queue-wait
+    # spans can be backdated to the submit instant.
+    trace: Optional[dict] = None
+    t_submit_ns: int = 0
 
 
 @dataclass
@@ -80,6 +86,13 @@ class ServeResult:
     batch_size: int
     model: str
     session: Optional[int] = None
+    # stage latencies + trace id (telemetry; zero/empty when off):
+    # queue_wait_ms covers submit -> batch assembly, dispatch_ms the
+    # run_lanes execution, bucket the padded power-of-two batch shape
+    queue_wait_ms: float = 0.0
+    dispatch_ms: float = 0.0
+    bucket: int = 0
+    trace_id: str = ""
 
 
 @dataclass

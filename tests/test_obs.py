@@ -1,0 +1,474 @@
+"""Observability subsystem (PR 9) — request tracing, unified metrics,
+structured logging.
+
+Pins the acceptance invariants:
+  * span trees stay consistent under 8 concurrent clients: unique
+    span ids, one root per trace, children nested inside their
+    parent's [start, end] window, ring bound + dropped accounting;
+  * histogram bucket math (property-based): cumulative `_bucket{le=}`
+    counts equal #(v <= le) exactly, `_sum`/`_count` match, quantile
+    estimates bracket the observed values;
+  * `GET /metrics` renders Prometheus text that `parse_prometheus`
+    round-trips and that is NUMERICALLY equal to `SpikeServer.stats()`;
+  * one portal request produces ONE trace with >= 4 nested stages
+    (http_request -> gateway_call -> queue_wait/dispatch) whose id the
+    client chose via `X-Trace-Id`, fetchable at `/trace?trace_id=`;
+  * with `--workers 2` the trace additionally crosses the bridge
+    (>= 5 stages) and `/metrics` aggregates worker registries with a
+    `*_by_worker` breakdown that never double-counts the base series;
+  * `--log-json` emits one flat JSON record per request with the
+    canonical schema for 200 / 400 E_SCHED_WIDTH / 429 / 503 / 504.
+"""
+import http.client
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.api import LIF_neuron
+from repro.core.compile import compile_spec
+from repro.core.spec import NetworkSpec
+from repro.obs import (Histogram, MetricsRegistry, Span, Telemetry,
+                       Tracer, chrome_trace, log_buckets,
+                       merge_snapshots, new_trace_id,
+                       parse_prometheus, render_snapshot,
+                       snapshot_by_worker, validate_chrome_trace)
+from repro.portal import Portal, TokenQuota
+from repro.serve import SpikeServer
+
+
+def small_compiled(n_axons=5, n_neurons=12, seed=3):
+    rng = np.random.default_rng(seed)
+    spec = NetworkSpec()
+    ax = spec.add_axons(n_axons)
+    nid = spec.add_neurons(n_neurons,
+                           LIF_neuron(threshold=5, nu=-32, lam=50))
+    pre = np.concatenate([np.repeat(ax, 4), np.repeat(nid, 3)])
+    post = rng.integers(0, n_neurons, pre.shape[0])
+    w = rng.integers(-3, 7, pre.shape[0])
+    spec.connect(pre, post, w)
+    spec.set_outputs([0, 1, 2])
+    return compile_spec(spec, target="engine")
+
+
+def http_raw(port, method, path, body=None, token=None, headers=None,
+             timeout=120):
+    conn = http.client.HTTPConnection("127.0.0.1", port,
+                                      timeout=timeout)
+    hs = {"Content-Type": "application/json"}
+    if token is not None:
+        hs["Authorization"] = f"Bearer {token}"
+    hs.update(headers or {})
+    conn.request(method, path,
+                 json.dumps(body) if body is not None else None, hs)
+    resp = conn.getresponse()
+    out = (resp.status,
+           {k.lower(): v for k, v in resp.getheaders()}, resp.read())
+    conn.close()
+    return out
+
+
+def http_json(port, method, path, body=None, **kw):
+    s, h, raw = http_raw(port, method, path, body, **kw)
+    return s, h, json.loads(raw.decode("utf-8"))
+
+
+def windows(rng, B, T, A):
+    return rng.integers(0, 2, (B, T, A)).astype(np.int32)
+
+
+# ------------------------------------------------------- tracer units
+def test_span_tree_invariants_under_concurrent_clients():
+    tr = Tracer(capacity=10000)
+
+    def client(cid):
+        for i in range(20):
+            root = tr.span("http_request", client=cid, i=i)
+            child = tr.span("gateway_call", ctx=root.ctx())
+            grand = tr.span("dispatch", ctx=child.ctx())
+            grand.finish()
+            child.finish()
+            root.finish()
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    spans = tr.spans()
+    assert len(spans) == 8 * 20 * 3 and tr.dropped == 0
+    ids = [s.span_id for s in spans]
+    assert len(set(ids)) == len(ids)            # globally unique
+    by_id = {s.span_id: s for s in spans}
+    roots = {}
+    for s in spans:
+        assert s.end is not None and s.end >= s.start
+        if s.parent_id is None:
+            # exactly one root per trace
+            assert s.trace_id not in roots
+            roots[s.trace_id] = s
+        else:
+            parent = by_id[s.parent_id]
+            assert parent.trace_id == s.trace_id
+            assert parent.start <= s.start and s.end <= parent.end
+    assert len(roots) == 8 * 20
+
+
+def test_ring_bound_and_dropped_accounting():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        tr.span("s", i=i).finish()
+    assert len(tr.spans()) == 8 and tr.dropped == 12
+    # batched-dict commit path (the dispatcher hot loop)
+    tr2 = Tracer(capacity=8)
+    batch = [tr2.span_record("s", start=0, end=1, i=i)
+             for i in range(20)]
+    tr2.record_batch(batch)
+    assert len(tr2.spans()) == 8 and tr2.dropped == 12
+    assert all(isinstance(s, Span) for s in tr2.spans())
+    tr2.clear()
+    assert tr2.spans() == [] and tr2.dropped == 0
+
+
+def test_disabled_telemetry_is_noop():
+    tel = Telemetry(on=False)
+    sp = tel.tracer.span("x", model="m")
+    assert sp.ctx() is None
+    sp.finish()
+    assert tel.tracer.spans() == []
+    assert tel.tracer.span_record("x", start=0, end=1) is None
+    tel.tracer.record_batch([])
+    c = tel.metrics.counter("c_total", "h")
+    c.inc()
+    assert c.value() == 0.0
+    h = tel.metrics.histogram("h_ms", "h")
+    h.observe(1.0)
+    h.observe_many([1.0, 2.0])
+    assert h.count() == 0
+    assert not tel.log.enabled            # no sink configured
+
+
+def test_span_wire_round_trip_and_chrome_export():
+    tr = Tracer()
+    with tr.span("dispatch", trace_id="f" * 16, model="m",
+                 bucket=4) as sp:
+        pass
+    d = sp.to_dict()
+    assert Span.from_dict(d).to_dict() == d
+    doc = chrome_trace(tr.spans())
+    assert validate_chrome_trace(doc) == []
+    (ev,) = doc["traceEvents"]
+    assert ev["ph"] == "X" and ev["dur"] >= 0
+    assert ev["args"]["trace_id"] == "f" * 16
+    assert ev["args"]["bucket"] == 4
+    # structural negatives the CI smoke relies on
+    assert validate_chrome_trace({"nope": 1})
+    assert validate_chrome_trace({"traceEvents": [{}]})
+    assert validate_chrome_trace(
+        {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0,
+                          "pid": 1, "tid": 1, "dur": -1.0,
+                          "args": {"trace_id": "t"}}]})
+
+
+def test_trace_ids_unique_and_well_formed():
+    ids = {new_trace_id() for _ in range(1000)}
+    assert len(ids) == 1000
+    assert all(len(i) == 16 and int(i, 16) >= 0 for i in ids)
+
+
+# ------------------------------------------------------- metrics units
+def test_log_buckets_strictly_increasing_and_cover_range():
+    bs = log_buckets()
+    assert bs == sorted(bs) and len(set(bs)) == len(bs)
+    assert bs[0] == 0.25 and bs[-1] >= 8000.0
+    with pytest.raises(ValueError):
+        log_buckets(lo=0)
+    with pytest.raises(ValueError):
+        log_buckets(lo=10, hi=1)
+
+
+def test_label_mismatch_raises_and_family_conflicts_rejected():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "x", ("model", "outcome"))
+    with pytest.raises(ValueError):
+        c.inc(model="m")                      # missing label
+    with pytest.raises(ValueError):
+        c.inc(model="m", wrong="x")           # unknown label
+    c.inc(model="m", outcome="ok")
+    assert c.value(model="m", outcome="ok") == 1.0
+    assert reg.counter("c_total", "x", ("model", "outcome")) is c
+    with pytest.raises(ValueError):
+        reg.counter("c_total", "x", ("other",))   # label mismatch
+    with pytest.raises(ValueError):
+        reg.gauge("c_total", "x")                 # kind mismatch
+
+
+@given(st.lists(st.floats(min_value=1e-3, max_value=1e4,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_histogram_bucket_math_property(values):
+    reg = MetricsRegistry()
+    h = reg.histogram("h_ms", "x")
+    half = len(values) // 2
+    for v in values[:half]:
+        h.observe(v)
+    h.observe_many(values[half:])
+    vals = [float(v) for v in values]
+    assert h.count() == len(vals)
+    assert h.sum() == pytest.approx(sum(vals), rel=1e-9)
+    series = parse_prometheus(render_snapshot(reg.collect()))
+    # cumulative bucket counts == #(v <= le), exactly (bisect_left
+    # puts a sample equal to a boundary IN that boundary's bucket)
+    for key, got in series["h_ms_bucket"].items():
+        (le,) = [v for k, v in key if k == "le"]
+        bound = math.inf if le == "+Inf" else float(le)
+        assert got == sum(1 for v in vals if v <= bound)
+    assert series["h_ms_count"][frozenset()] == len(vals)
+    assert series["h_ms_sum"][frozenset()] == \
+        pytest.approx(sum(vals), rel=1e-9)
+    # quantile estimates are bucket upper bounds around the data
+    assert h.quantile(1.0) >= max(vals)
+    assert h.quantile(0.0) <= h.quantile(0.5) <= h.quantile(1.0)
+
+
+def test_merge_snapshots_sum_counters_lastwins_gauges():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    for reg, n in ((a, 3), (b, 4)):
+        reg.counter("c_total", "x", ("model",)).inc(n, model="m")
+        reg.gauge("g", "x").set(n)
+        h = reg.histogram("h_ms", "x")
+        h.observe_many([1.0] * n)
+    merged = merge_snapshots([a.collect(), b.collect()])
+    series = parse_prometheus(render_snapshot(merged))
+    assert series["c_total"][frozenset({("model", "m")})] == 7
+    assert series["g"][frozenset()] == 4          # last snapshot wins
+    assert series["h_ms_count"][frozenset()] == 7
+    assert series["h_ms_sum"][frozenset()] == 7.0
+
+
+def test_snapshot_by_worker_keeps_base_series_clean():
+    a = MetricsRegistry()
+    a.counter("c_total", "x").inc(5)
+    snap = a.collect()
+    merged = merge_snapshots(
+        [snap, snapshot_by_worker(snap, 1234)])
+    series = parse_prometheus(render_snapshot(merged))
+    assert series["c_total"][frozenset()] == 5    # not double-counted
+    assert series["c_total_by_worker"][
+        frozenset({("worker", "1234")})] == 5
+
+
+def test_render_parse_roundtrip_with_label_escaping():
+    reg = MetricsRegistry()
+    weird = 'tok "x"\ny'
+    reg.counter("weird_total", "h", ("name",)).inc(name=weird)
+    series = parse_prometheus(render_snapshot(reg.collect()))
+    assert series["weird_total"][frozenset({("name", weird)})] == 1
+
+
+# ------------------------------------------- portal integration (obs)
+@pytest.fixture(scope="module")
+def obs_portal():
+    """One resident engine model behind an in-process portal, shared
+    by the observability HTTP tests (module-scoped: compile once)."""
+    c = small_compiled()
+    srv = SpikeServer(max_batch=8, max_wait_ms=3.0)
+    srv.add_model("m", c, window=4, n_sessions=2, seed=0)
+    with srv, Portal(srv, port=0) as portal:
+        yield srv, portal, c
+
+
+def test_single_request_trace_has_nested_stages(obs_portal):
+    srv, portal, c = obs_portal
+    tid = new_trace_id()
+    w = windows(np.random.default_rng(5), 1, 4, c.n_axons)[0]
+    s, h, body = http_json(portal.port, "POST", "/v1/m/run",
+                           {"counts": w.tolist()},
+                           headers={"X-Trace-Id": tid})
+    assert s == 200
+    assert h["x-trace-id"] == tid              # id echoed to client
+    assert body["trace_id"] == tid
+
+    s, _, doc = http_json(portal.port, "GET",
+                          f"/trace?trace_id={tid}")
+    assert s == 200 and validate_chrome_trace(doc) == []
+    events = doc["traceEvents"]
+    names = {e["name"] for e in events}
+    assert {"http_request", "gateway_call",
+            "queue_wait", "dispatch"} <= names
+    assert all(e["args"]["trace_id"] == tid for e in events)
+    # single root; every child's parent resolves inside the trace and
+    # brackets it in time
+    by_id = {e["args"]["span_id"]: e for e in events}
+    roots = [e for e in events if not e["args"].get("parent_id")]
+    assert len(roots) == 1 and roots[0]["name"] == "http_request"
+    for e in events:
+        pid = e["args"].get("parent_id")
+        if pid:
+            p = by_id[pid]
+            assert p["ts"] <= e["ts"] + 1e-6
+            assert e["ts"] + e["dur"] <= p["ts"] + p["dur"] + 1e-6
+
+
+def test_metrics_prometheus_parses_and_matches_stats(obs_portal):
+    srv, portal, c = obs_portal
+    w = windows(np.random.default_rng(6), 1, 4, c.n_axons)[0]
+    for _ in range(3):
+        s, _, _ = http_json(portal.port, "POST", "/v1/m/run",
+                            {"counts": w.tolist()})
+        assert s == 200
+    s, h, raw = http_raw(portal.port, "GET", "/metrics")
+    assert s == 200 and h["content-type"].startswith("text/plain")
+    series = parse_prometheus(raw.decode("utf-8"))
+    stats = srv.stats()
+    served = sum(m["requests"] for m in stats["models"].values())
+    ok = sum(v for k, v in series["repro_serve_requests_total"].items()
+             if ("outcome", "ok") in k)
+    assert ok == served
+    total_lat = sum(
+        v for k, v in series["repro_serve_latency_ms_count"].items()
+        if ("stage", "total") in k)
+    assert total_lat == served
+    # scrape-time gauges + http-side families present
+    assert series["repro_dispatcher_alive"][frozenset()] == 1
+    assert "repro_serve_queue_depth" in series
+    assert any(("status", "200") in k
+               for k in series["repro_http_requests_total"])
+    # legacy JSON view still answers (worker-local by design)
+    s, _, legacy = http_json(portal.port, "GET",
+                             "/metrics?format=json")
+    assert s == 200 and "server" in legacy and "clients" in legacy
+
+
+def test_healthz_reports_queue_lanes_dispatcher(obs_portal):
+    srv, portal, c = obs_portal
+    s, _, hz = http_json(portal.port, "GET", "/healthz")
+    assert s == 200 and hz["ok"]
+    assert hz["dispatcher"]["alive"]
+    assert "pending" in hz["queue"]
+    assert hz["models"]["m"]["window"] == 4
+    assert hz["lanes"]["m"]["capacity"] >= hz["lanes"]["m"]["in_use"]
+
+
+def test_multiworker_metrics_aggregate_and_bridge_trace():
+    c = small_compiled()
+    srv = SpikeServer(max_batch=8, max_wait_ms=2.0)
+    srv.add_model("m", c, window=4, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(7), 1, 4, c.n_axons)[0]
+    tid = new_trace_id()
+    with srv, Portal(srv, port=0, workers=2) as portal:
+        s, h, body = http_json(portal.port, "POST", "/v1/m/run",
+                               {"counts": w.tolist()},
+                               headers={"X-Trace-Id": tid})
+        assert s == 200 and body["trace_id"] == tid
+
+        # drive fresh connections until BOTH SO_REUSEPORT workers have
+        # answered (each gateway op forwards that worker's registry
+        # snapshot and drained spans to the dispatcher)
+        pids = set()
+        for _ in range(200):
+            s, _, hz = http_json(portal.port, "GET", "/healthz")
+            assert s == 200
+            pids.add(hz["worker_pid"])
+            if len(pids) >= 2:
+                break
+        assert len(pids) >= 2, \
+            f"SO_REUSEPORT never balanced across workers: {pids}"
+
+        # the run's spans reach the dispatcher ring on the serving
+        # worker's NEXT bridge call — poll /trace until the full
+        # cross-process tree (5 stages incl. the bridge hop) lands
+        names, events = set(), []
+        for _ in range(200):
+            s, _, doc = http_json(portal.port, "GET",
+                                  f"/trace?trace_id={tid}")
+            assert s == 200 and validate_chrome_trace(doc) == []
+            events = doc["traceEvents"]
+            names = {e["name"] for e in events}
+            if {"http_request", "bridge", "gateway_call",
+                    "queue_wait", "dispatch"} <= names:
+                break
+        assert {"http_request", "bridge", "gateway_call",
+                "queue_wait", "dispatch"} <= names, names
+        roots = [e for e in events
+                 if not e["args"].get("parent_id")]
+        assert len(roots) == 1 and roots[0]["name"] == "http_request"
+        by_id = {e["args"]["span_id"]: e for e in events}
+        assert all(e["args"].get("parent_id") in by_id
+                   for e in events if e["args"].get("parent_id"))
+        assert len({e["pid"] for e in events}) >= 2   # cross-process
+
+        s, _, raw = http_raw(portal.port, "GET", "/metrics")
+        assert s == 200
+        series = parse_prometheus(raw.decode("utf-8"))
+        by_worker = series.get("repro_http_requests_total_by_worker",
+                               {})
+        workers_seen = {dict(k)["worker"] for k in by_worker}
+        assert len(workers_seen) >= 2
+        # aggregated base == sum of the per-worker breakdown (the
+        # dispatcher itself serves no HTTP): no double counting
+        assert sum(series["repro_http_requests_total"].values()) == \
+            sum(by_worker.values())
+
+
+def test_json_log_schema_and_error_codes(tmp_path):
+    log = tmp_path / "requests.ndjson"
+    c = small_compiled()
+    tokens = {"slow": TokenQuota(rate=0.001, burst=1, max_inflight=8,
+                                 name="bob"),
+              "good": TokenQuota(rate=1000.0, burst=1000,
+                                 max_inflight=8, name="alice")}
+    srv = SpikeServer(max_batch=4, max_wait_ms=1.0,
+                      telemetry=Telemetry(log_json=str(log)))
+    srv.add_model("m", c, window=3, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(0), 1, 3, c.n_axons)[0]
+    run = {"counts": w.tolist()}
+    with srv, Portal(srv, port=0, tokens=tokens) as portal:
+        assert http_json(portal.port, "POST", "/v1/m/run", run,
+                         token="slow")[0] == 200
+        assert http_json(portal.port, "POST", "/v1/m/run", run,
+                         token="slow")[0] == 429
+        wide = np.zeros((3, c.n_axons + 7), int)
+        assert http_json(portal.port, "POST", "/v1/m/run",
+                         {"counts": wide.tolist()},
+                         token="good")[0] == 400
+        assert http_json(portal.port, "POST", "/v1/m/run",
+                         dict(run, timeout=1e-6),
+                         token="good")[0] == 504
+    # a second server sharing the SAME log file exercises 503 (full
+    # buffer) and append-mode interleaving of whole lines
+    srv2 = SpikeServer(max_batch=4, max_wait_ms=1.0, max_pending=0,
+                       telemetry=Telemetry(log_json=str(log)))
+    srv2.add_model("m", c, window=3, n_sessions=0, seed=0)
+    with srv2, Portal(srv2, port=0) as portal:
+        assert http_json(portal.port, "POST", "/v1/m/run",
+                         run)[0] == 503
+
+    recs = [json.loads(ln) for ln in
+            log.read_text().strip().splitlines()]
+    base = {"ts", "event", "trace_id", "token", "model", "op",
+            "status", "code", "latency_ms"}
+    for r in recs:
+        assert base <= set(r) and r["event"] == "request"
+        assert r["trace_id"]
+    by_status = {r["status"]: r for r in recs}
+    assert {200, 429, 400, 504, 503} <= set(by_status)
+    ok = by_status[200]
+    assert ok["code"] is None and ok["token"] == "bob"
+    assert ok["model"] == "m" and ok["op"] == "run"
+    assert {"bucket", "batch_size", "queue_wait_ms",
+            "dispatch_ms"} <= set(ok)
+    assert by_status[429]["code"] == "E_QUOTA_RATE"
+    assert by_status[429]["token"] == "bob"
+    assert by_status[400]["code"] == "E_SCHED_WIDTH"
+    assert by_status[504]["code"] == "E_DEADLINE"
+    assert by_status[503]["code"] == "E_BACKPRESSURE"
+    # secrets never land in the log: the raw bearer tokens are absent
+    text = log.read_text()
+    assert "slow" not in text and "good" not in text

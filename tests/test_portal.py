@@ -315,7 +315,8 @@ def test_http_negative_routes(engine_portal):
 
 def test_metrics_exposes_server_stats_and_clients(engine_portal):
     srv, portal, c = engine_portal
-    s, _, body = http_req(portal.port, "GET", "/metrics")
+    # bare /metrics is Prometheus text now; JSON moved to ?format=json
+    s, _, body = http_req(portal.port, "GET", "/metrics?format=json")
     assert s == 200
     assert body["server"]["models"]["m"]["requests"] >= 1
     assert {"p50_ms", "p99_ms", "buffer"} <= set(body["server"])
@@ -459,7 +460,7 @@ def test_auth_and_quota_negative_paths():
         assert s == 429 and b["error"]["code"] == "E_QUOTA_INFLIGHT"
 
         # per-token counters in /metrics, keyed by label not secret
-        s, _, m = http_req(portal.port, "GET", "/metrics")
+        s, _, m = http_req(portal.port, "GET", "/metrics?format=json")
         assert m["clients"]["bob"]["rejected_rate"] == 1
         assert m["clients"]["carol"]["rejected_inflight"] == 1
         assert m["clients"]["alice"]["admitted"] == 1
