@@ -275,6 +275,46 @@ class Deployment:
         ids = self._check_lane_ids(np.asarray([lane], np.int64))
         return self.impl.lanes_membrane(self._lane_V[ids])[0]
 
+    def lane_snapshot(self, lanes: Sequence[int]):
+        """Host copies of the given lanes' state: (V (k, ...), keys
+        (k, 2)). Lane state is host numpy on every backend, so this is
+        O(k) array copies — cheap enough to take per micro-batch. The
+        serving tier's undo log snapshots session lanes before each
+        dispatch so a crashed batch can be rolled back and retried
+        bit-exactly."""
+        ids = self._check_lane_ids(np.asarray(list(lanes), np.int64))
+        return self._lane_V[ids].copy(), self._lane_keys[ids].copy()
+
+    def lane_restore(self, lanes: Sequence[int], V: np.ndarray,
+                     keys: np.ndarray) -> None:
+        """Write `lane_snapshot` state back into the given lanes."""
+        ids = self._check_lane_ids(np.asarray(list(lanes), np.int64))
+        self._lane_V[ids] = V
+        self._lane_keys[ids] = keys
+
+    def lane_state(self) -> Optional[dict]:
+        """Full resident-lane state — {"V", "keys"} host arrays, or
+        None before `alloc_lanes`. The checkpointable half of a
+        deployment's runtime state (weights are the other half)."""
+        if self._lane_V is None:
+            return None
+        return {"V": self._lane_V.copy(),
+                "keys": self._lane_keys.copy()}
+
+    def load_lane_state(self, V: np.ndarray, keys: np.ndarray) -> None:
+        """Restore `lane_state()` output; lane count and state shape
+        must match this deployment's allocation (same compiled
+        artifact, same `alloc_lanes`)."""
+        if self._lane_V is None or V.shape != self._lane_V.shape \
+                or keys.shape != self._lane_keys.shape:
+            have = None if self._lane_V is None else self._lane_V.shape
+            raise ValueError(
+                f"lane state shape {V.shape} does not match the "
+                f"allocated lanes {have} — restore onto a deployment "
+                f"of the same artifact with the same alloc_lanes")
+        self._lane_V[:] = V
+        self._lane_keys[:] = keys
+
     def read_membrane(self, ids: Sequence[int]) -> List[int]:
         V = np.asarray(self.impl.V)
         return [int(V[i]) for i in ids]
@@ -347,8 +387,14 @@ class Deployment:
         # records are int16 (clipped like compile_spec), so the read
         # column, the packed image, and the dense matrices agree even
         # for out-of-range requests
-        cols_u = cols[keep]
-        w_u = np.clip(w[keep], W_MIN, W_MAX)
+        self._write_cols(cols[keep], np.clip(w[keep], W_MIN, W_MAX))
+        self.weight_uploads += 1
+
+    def _write_cols(self, cols_u: np.ndarray, w_u: np.ndarray) -> None:
+        """Apply already-validated, deduped column writes as one
+        backend update (the shared tail of `write_synapses` and
+        `load_weights`)."""
+        c = self.compiled
         old = c.syn_weight[cols_u].copy()
         c.syn_weight[cols_u] = w_u.astype(np.int32)
         if c.target == "simulator":
@@ -373,6 +419,24 @@ class Deployment:
                 flat_w[c.syn_pos[cols_u]] = w_u.astype(np.int16)
             self.impl.update_entry_weights(c.syn_pos[cols_u],
                                            w_u.astype(np.int32))
+
+    def load_weights(self, syn_weight: np.ndarray) -> None:
+        """Restore a full synapse-weight column (the checkpointed
+        `compiled.syn_weight`): diff against the current column and
+        upload only the changed entries as ONE backend update — a
+        restore that changes nothing uploads nothing."""
+        w = np.asarray(syn_weight)
+        c = self.compiled
+        if w.shape != c.syn_weight.shape:
+            raise ValueError(
+                f"weight column of {w.shape} does not match the "
+                f"{c.syn_weight.shape} deployed synapses — restore "
+                f"onto a deployment of the same compiled artifact")
+        cols = np.nonzero(w != c.syn_weight)[0]
+        if cols.size == 0:
+            return
+        self._write_cols(cols, np.clip(w[cols].astype(np.int64),
+                                       W_MIN, W_MAX))
         self.weight_uploads += 1
 
     def read_synapse(self, pre: int, post: int) -> int:

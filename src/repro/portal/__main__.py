@@ -97,9 +97,29 @@ def main(argv=None) -> int:
     ap.add_argument("--no-telemetry", action="store_true",
                     help="disable span recording and metric updates "
                          "(tracing/metrics are on by default)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="arm chaos sites in THIS process and every "
+                         "spawned worker (exported as REPRO_FAULTS), "
+                         "e.g. 'worker_exit@3;bridge_drop%%0.02'")
+    ap.add_argument("--faults-seed", type=int, default=0)
+    ap.add_argument("--faults-log", default=None, metavar="PATH",
+                    help="append one NDJSON line per fired fault "
+                         "(line-atomic across processes)")
     args = ap.parse_args(argv)
 
+    import os
+
+    from repro import faults
     from repro.obs import Telemetry
+
+    if args.faults:
+        # export so bridge workers (spawned with this env) arm the
+        # same plan; their per-site hit counters are process-local
+        os.environ["REPRO_FAULTS"] = args.faults
+        os.environ["REPRO_FAULTS_SEED"] = str(args.faults_seed)
+        if args.faults_log:
+            os.environ["REPRO_FAULTS_LOG"] = args.faults_log
+    faults.install_from_env()
     from repro.portal.gateway import Portal
     from repro.serve import SpikeServer
     from repro.serve.__main__ import demo_spec

@@ -39,10 +39,12 @@ import asyncio
 import itertools
 import json
 import os
+import random
 import struct
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro import faults
 from repro.obs import Telemetry
 from repro.portal.auth import Authenticator
 from repro.portal.errors import PortalError
@@ -191,43 +193,73 @@ class BridgeClient:
     """Worker-side gateway: the same duck-typed surface as
     `LocalGateway`, but every call is a length-prefixed JSON message
     over the unix socket. In-flight calls multiplex on one connection;
-    message ids pair responses back to their awaiting coroutine."""
+    message ids pair responses back to their awaiting coroutine.
+
+    The connection self-heals. When the socket drops (dispatcher
+    restart, chaos `bridge_drop`), in-flight IDEMPOTENT ops are parked
+    and replayed verbatim on the next connection; non-idempotent ops
+    (`run`, `reconfigure` — the dispatcher may have applied them before
+    dying) fail fast with 503 E_BRIDGE_DOWN so the CLIENT decides
+    whether to retry. A background loop redials with capped exponential
+    backoff + deterministic jitter; new calls wait up to
+    `connect_wait_s` for the link before failing."""
+
+    #: ops safe to resend after a drop — everything except the two that
+    #: mutate lane state / weights exactly once per call
+    IDEMPOTENT_OPS = frozenset(GATEWAY_OPS) - {"run", "reconfigure"}
 
     def __init__(self, reader: asyncio.StreamReader,
                  writer: asyncio.StreamWriter,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None, *,
+                 path: Optional[str] = None,
+                 auto_reconnect: bool = True,
+                 backoff_base_s: float = 0.05,
+                 backoff_cap_s: float = 2.0,
+                 connect_wait_s: float = 15.0,
+                 seed: int = 0):
         self._reader, self._writer = reader, writer
         self.telemetry = telemetry
+        self.path = path
+        self.auto_reconnect = bool(auto_reconnect) and path is not None
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.connect_wait_s = float(connect_wait_s)
+        self.drops = 0
+        self.reconnects = 0
+        self._rng = random.Random(seed)
+        self._closing = False
+        self._connected = asyncio.Event()
+        self._connected.set()
         self._m_flushed = 0.0
         self._ids = itertools.count()
-        self._waiting: Dict[int, asyncio.Future] = {}
+        # id -> (future, frame dict) so idempotent frames can replay
+        self._waiting: Dict[int, Tuple[asyncio.Future, dict]] = {}
+        self._reconnector: Optional[asyncio.Future] = None
         self._pump = asyncio.ensure_future(self._read_loop())
         for op in GATEWAY_OPS:
             setattr(self, op, _BridgeMethod(self, op))
 
     @classmethod
     async def open(cls, path: str,
-                   telemetry: Optional[Telemetry] = None) \
+                   telemetry: Optional[Telemetry] = None, **kw) \
             -> "BridgeClient":
         reader, writer = await asyncio.open_unix_connection(path)
-        return cls(reader, writer, telemetry)
+        return cls(reader, writer, telemetry, path=path, **kw)
 
     async def _read_loop(self) -> None:
         while True:
             try:
                 msg = await _read_msg(self._reader)
-            except Exception:          # noqa: BLE001 — fail all waiters
+            except Exception:          # noqa: BLE001 — treat as drop
                 msg = None
             if msg is None:
-                err = PortalError(503, "E_BRIDGE_DOWN",
-                                  "dispatcher connection lost")
-                for fut in self._waiting.values():
-                    if not fut.done():
-                        fut.set_exception(err)
-                self._waiting.clear()
+                self._on_disconnect()
                 return
-            fut = self._waiting.pop(msg.get("id"), None)
-            if fut is None or fut.done():
+            ent = self._waiting.pop(msg.get("id"), None)
+            if ent is None:
+                continue
+            fut, _ = ent
+            if fut.done():
                 continue
             if "error" in msg:
                 fut.set_exception(
@@ -235,11 +267,85 @@ class BridgeClient:
             else:
                 fut.set_result(msg.get("result"))
 
+    def _down_error(self) -> PortalError:
+        return PortalError(503, "E_BRIDGE_DOWN",
+                           "dispatcher connection lost — the bridge "
+                           "is redialing; retry shortly",
+                           retry_after=1.0)
+
+    def _on_disconnect(self) -> None:
+        self._connected.clear()
+        self.drops += 1
+        reconnecting = self.auto_reconnect and not self._closing
+        err = self._down_error()
+        replay: Dict[int, Tuple[asyncio.Future, dict]] = {}
+        for mid, (fut, msg) in self._waiting.items():
+            if fut.done():
+                continue
+            if reconnecting and msg.get("op") in self.IDEMPOTENT_OPS:
+                replay[mid] = (fut, msg)
+            else:
+                # run/reconfigure may have been applied dispatcher-side
+                # before the drop — replaying could double-step a lane,
+                # so the caller gets the structured 503 instead
+                fut.set_exception(err)
+        self._waiting = replay
+        if reconnecting:
+            self._reconnector = asyncio.ensure_future(
+                self._reconnect_loop())
+
+    async def _reconnect_loop(self) -> None:
+        delay = self.backoff_base_s
+        while not self._closing:
+            try:
+                reader, writer = \
+                    await asyncio.open_unix_connection(self.path)
+            except OSError:
+                await asyncio.sleep(
+                    delay + self._rng.uniform(0.0, delay / 2))
+                delay = min(delay * 2.0, self.backoff_cap_s)
+                continue
+            if self._closing:
+                writer.close()
+                return
+            self._reader, self._writer = reader, writer
+            self.reconnects += 1
+            self._pump = asyncio.ensure_future(self._read_loop())
+            self._connected.set()
+            # replay parked idempotent frames verbatim (minus the
+            # telemetry piggyback, already ingested the first time);
+            # ids are connection-local to THIS client so they still
+            # pair correctly on the fresh connection
+            for mid, (fut, msg) in sorted(self._waiting.items()):
+                msg = {k: v for k, v in msg.items()
+                       if k not in ("spans", "m")}
+                self._waiting[mid] = (fut, msg)
+                self._writer.write(_frame(msg))
+            try:
+                await self._writer.drain()
+            except (ConnectionError, OSError):
+                pass   # the fresh read loop observes the drop, redials
+            return
+
     async def call(self, op: str, *args,
                    trace: Optional[dict] = None):
+        if faults.fire("bridge_drop") and self._writer is not None:
+            # chaos: sever the UDS out from under this worker — the
+            # read loop sees EOF and the redial path takes over
+            self._writer.transport.abort()
+        if not self._connected.is_set():
+            if not self.auto_reconnect or self._closing:
+                raise self._down_error()
+            try:
+                await asyncio.wait_for(self._connected.wait(),
+                                       self.connect_wait_s)
+            except asyncio.TimeoutError:
+                raise PortalError(
+                    503, "E_BRIDGE_DOWN",
+                    f"dispatcher unreachable for "
+                    f"{self.connect_wait_s:.0f}s", retry_after=1.0)
         mid = next(self._ids)
         fut = asyncio.get_running_loop().create_future()
-        self._waiting[mid] = fut
         msg = {"id": mid, "op": op, "args": list(args)}
         tel = self.telemetry
         span = None
@@ -266,10 +372,16 @@ class BridgeClient:
                 msg["m"] = {"pid": os.getpid(),
                             "snap": tel.metrics.collect()}
                 self._m_flushed = now
+        self._waiting[mid] = (fut, msg)
         # write-before-await keeps bridge submission order == the
         # order callers issued calls in (ws streaming relies on it)
-        self._writer.write(_frame(msg))
-        await self._writer.drain()
+        try:
+            self._writer.write(_frame(msg))
+            await self._writer.drain()
+        except (ConnectionError, OSError):
+            # drop mid-write: _on_disconnect has already settled (or
+            # parked for replay) this future — just await it below
+            pass
         try:
             return await fut
         finally:
@@ -277,7 +389,20 @@ class BridgeClient:
                 span.finish()
 
     async def close(self) -> None:
+        self._closing = True
+        if self._reconnector is not None:
+            self._reconnector.cancel()
+            try:
+                await self._reconnector
+            except (asyncio.CancelledError, Exception):  # noqa: BLE001
+                pass
+            self._reconnector = None
         self._pump.cancel()
+        err = self._down_error()
+        for fut, _ in self._waiting.values():
+            if not fut.done():
+                fut.set_exception(err)
+        self._waiting.clear()
         self._writer.close()
         try:
             await self._writer.wait_closed()
@@ -316,6 +441,10 @@ def run_worker(host: str, port: int, uds_path: str,
                log_json: Optional[str] = None) -> None:
     """Entry point of `python -m repro.portal --worker` — one
     front-end process. Blocks until killed by the parent portal."""
+    # arm chaos sites from REPRO_FAULTS (no-op when unset) — workers
+    # are spawned with the parent portal's env, so one spec governs
+    # the whole process tree
+    faults.install_from_env()
     spec = json.loads(auth_spec_json) if auth_spec_json else None
     try:
         asyncio.run(_worker_async(host, port, uds_path, spec,

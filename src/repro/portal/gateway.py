@@ -12,8 +12,12 @@ vocabulary —
     KeyError        -> 404 E_NO_MODEL / E_NO_SESSION
     BufferFull      -> 503 E_BACKPRESSURE + Retry-After (full
                        DoubleBuffer sheds instead of queueing)
-    BufferClosed    -> 503 E_SHUTDOWN
-    DeadlineError   -> 504 E_DEADLINE (queue-expired submit timeout)
+    BufferClosed    -> 503 E_SHUTDOWN + Retry-After
+    DeadlineError   -> 504 E_DEADLINE + Retry-After (queue-expired
+                       submit timeout)
+    DispatchRestart -> 503 E_DISPATCH_RESTART + Retry-After (the
+                       supervisor restarted a crashed dispatcher;
+                       session state rolled back, safe to retry)
     ValueError      -> 400 E_BAD_REQUEST
 
 `Portal` is the lifecycle wrapper: `workers=0` serves in-process (one
@@ -45,7 +49,7 @@ from repro.portal.bridge import BridgeServer, _reuseport_socket
 from repro.portal.errors import PortalError
 from repro.portal.http import PortalApp
 from repro.serve import (BufferClosed, BufferFull, DeadlineError,
-                         SpikeServer)
+                         DispatchRestart, SpikeServer)
 
 __all__ = ["LocalGateway", "Portal", "map_exception", "result_digest"]
 
@@ -73,13 +77,24 @@ def map_exception(e: BaseException) -> PortalError:
         return PortalError(400, errs[0].code if errs else "E_ANALYSIS",
                            str(e), findings=e.report.to_dict())
     if isinstance(e, DeadlineError):
-        return PortalError(504, "E_DEADLINE", str(e))
+        # a queue-expired request means the dispatcher is saturated
+        # right now, not broken: hint a retry after roughly the
+        # client's own patience, capped so the hint stays actionable
+        return PortalError(504, "E_DEADLINE", str(e),
+                           retry_after=max(0.05,
+                                           min(e.timeout_s, 5.0)))
     if isinstance(e, BufferFull):
         return PortalError(503, "E_BACKPRESSURE", str(e),
                            retry_after=e.retry_after_s or 0.05)
     if isinstance(e, BufferClosed):
+        # during a rolling restart another backend (or this one,
+        # re-spawned) answers within about a second
         return PortalError(503, "E_SHUTDOWN",
-                           "the server is shutting down")
+                           "the server is shutting down",
+                           retry_after=1.0)
+    if isinstance(e, DispatchRestart):
+        return PortalError(503, "E_DISPATCH_RESTART", str(e),
+                           retry_after=e.retry_after_s)
     if isinstance(e, KeyError):
         msg = e.args[0] if e.args else str(e)
         code = "E_NO_SESSION" if "session" in str(msg) else "E_NO_MODEL"
@@ -88,7 +103,8 @@ def map_exception(e: BaseException) -> PortalError:
         return PortalError(503, "E_NO_LANES", str(e), retry_after=0.1)
     if isinstance(e, asyncio.TimeoutError):
         return PortalError(504, "E_TIMEOUT",
-                           "the dispatcher did not answer in time")
+                           "the dispatcher did not answer in time",
+                           retry_after=1.0)
     if isinstance(e, (ValueError, TypeError)):
         return PortalError(400, "E_BAD_REQUEST", str(e))
     return PortalError(500, "E_INTERNAL", f"{type(e).__name__}: {e}")
@@ -279,7 +295,9 @@ class LocalGateway:
 
     async def healthz(self, trace: Optional[dict] = None) -> dict:
         h = self.server.health()
-        return {"ok": bool(h["ok"]), "pid": os.getpid(),
+        return {"ok": bool(h["ok"]), "status": h["status"],
+                "reason": h["reason"], "restarts": h["restarts"],
+                "pid": os.getpid(),
                 "dispatcher": h["dispatcher"],
                 "queue": h["queue"], "lanes": h["lanes"],
                 "models": {
@@ -304,7 +322,8 @@ class Portal:
     def __init__(self, server: SpikeServer, host: str = "127.0.0.1",
                  port: int = 0, *,
                  tokens: Optional[Dict[str, TokenQuota]] = None,
-                 workers: int = 0, default_timeout: float = 120.0):
+                 workers: int = 0, default_timeout: float = 120.0,
+                 respawn_workers: bool = True):
         self.server = server
         self.host, self.port = host, int(port)
         self.workers = int(workers)
@@ -318,6 +337,16 @@ class Portal:
         self._procs: List[subprocess.Popen] = []
         self._reserve = None
         self._tmpdir: Optional[str] = None
+        # worker churn tolerance: a reaper thread polls the front-end
+        # processes and respawns any that die (SO_REUSEPORT keeps the
+        # shared port reserved, so a respawn rebinds instantly);
+        # worker_restarts counts them
+        self.respawn_workers = bool(respawn_workers)
+        self.worker_restarts = 0
+        self._reap_stop = threading.Event()
+        self._reaper: Optional[threading.Thread] = None
+        self._worker_cmd: Optional[List[str]] = None
+        self._worker_env: Optional[Dict[str, str]] = None
 
     @property
     def url(self) -> str:
@@ -342,6 +371,11 @@ class Portal:
         return self
 
     def stop(self) -> None:
+        # stop the reaper FIRST so terminated workers are not respawned
+        self._reap_stop.set()
+        if self._reaper is not None:
+            self._reaper.join(timeout=10)
+            self._reaper = None
         for p in self._procs:
             p.terminate()
         for p in self._procs:
@@ -429,6 +463,27 @@ class Portal:
         self._procs = [subprocess.Popen(cmd, env=env)
                        for _ in range(self.workers)]
         self._wait_ready()
+        if self.respawn_workers:
+            self._worker_cmd, self._worker_env = cmd, env
+            self._reap_stop.clear()
+            self._reaper = threading.Thread(target=self._reap_loop,
+                                            name="portal-reaper",
+                                            daemon=True)
+            self._reaper.start()
+
+    def _reap_loop(self) -> None:
+        """Poll the worker processes; respawn any that died. The other
+        SO_REUSEPORT listeners keep serving while the replacement
+        starts, so a worker crash costs in-flight requests on its
+        connections only — new connections land on survivors."""
+        while not self._reap_stop.wait(0.25):
+            for i, p in enumerate(self._procs):
+                if self._reap_stop.is_set():
+                    return
+                if p.poll() is not None:
+                    self.worker_restarts += 1
+                    self._procs[i] = subprocess.Popen(
+                        self._worker_cmd, env=self._worker_env)
 
     def _wait_ready(self, timeout: float = 60.0) -> None:
         """Poll /healthz until every worker has answered at least once

@@ -35,6 +35,7 @@ import urllib.parse
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple, Union
 
+from repro import faults
 from repro.obs import Telemetry
 from repro.portal import ws as _ws
 from repro.portal.auth import Authenticator
@@ -326,15 +327,30 @@ class PortalApp:
         path, method = req.path, req.method
         if path == "/healthz":
             self._need(method, "GET")
-            out = await self.gateway.healthz(trace=req.trace)
+            try:
+                out = await self.gateway.healthz(trace=req.trace)
+            except PortalError as e:
+                if e.code != "E_BRIDGE_DOWN":
+                    raise
+                # the bridge is redialing: this worker is up but can't
+                # reach the dispatcher — report down with the reason
+                # rather than a bare transport error
+                out = {"ok": False, "status": "down",
+                       "reason": str(e)}
             # which front-end process answered (the dispatcher's own
             # pid rides in `pid`) — Portal._wait_ready polls this to
             # confirm every SO_REUSEPORT worker is accepting
             out["worker_pid"] = os.getpid()
-            if out.get("ok") is False:
-                # a started-and-wedged dispatcher answers 503 with the
-                # full health body, so load balancers drain this
-                # backend while operators still see why
+            if hasattr(self.gateway, "drops"):
+                out["bridge"] = {"drops": self.gateway.drops,
+                                 "reconnects": self.gateway.reconnects}
+            status = out.get("status") or (
+                "down" if out.get("ok") is False else "ok")
+            if status == "down":
+                # only DOWN answers 503 (load balancers drain this
+                # backend while operators still see why); "degraded"
+                # — supervisor mid-restart, stall suspicion — stays
+                # 200 so one recoverable hiccup never ejects the node
                 return RawResult(503, "application/json",
                                  json.dumps(out).encode("utf-8"))
             return out
@@ -364,6 +380,9 @@ class PortalApp:
                           f"no route for {method} {path}")
 
     async def _v1(self, req: HTTPRequest, model: str, rest) -> dict:
+        # chaos site: a front-end worker dying mid-request (os._exit)
+        # — fires only on model routes so health polls never trip it
+        faults.fire("worker_exit")
         state = self.auth.authenticate(req.headers)
         if state is not None:
             req.token_label = state.name

@@ -18,12 +18,13 @@ runs a self-contained demo server against a synthetic network.
 from repro.serve.queue import (BufferClosed, BufferFull, DoubleBuffer,
                                SlotPool)
 from repro.serve.server import ResidentModel, SpikeServer, next_pow2
-from repro.serve.session import (DeadlineError, Reconfigure, Request,
-                                 ServeResult, Session, SessionStore)
+from repro.serve.session import (DeadlineError, DispatchRestart,
+                                 Reconfigure, Request, ServeResult,
+                                 Session, SessionStore)
 
 __all__ = [
     "SpikeServer", "ResidentModel", "next_pow2",
     "DoubleBuffer", "SlotPool", "BufferFull", "BufferClosed",
     "Request", "Reconfigure", "ServeResult", "Session", "SessionStore",
-    "DeadlineError",
+    "DeadlineError", "DispatchRestart",
 ]

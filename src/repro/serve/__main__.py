@@ -47,8 +47,17 @@ def _client(srv: SpikeServer, model: str, cid: int, n_requests: int,
     sid = srv.open_session(model) if use_session else None
     for r in range(n_requests):
         counts = rng.integers(0, 2, (window, n_axons)).astype(np.int32)
-        res = srv.submit(model, counts, session=sid,
-                         seed=cid * 1000 + r).result(timeout=120)
+        for attempt in range(4):
+            try:
+                res = srv.submit(model, counts, session=sid,
+                                 seed=cid * 1000 + r).result(timeout=120)
+                break
+            except RuntimeError:
+                # chaos / dispatcher restart: state was rolled back,
+                # the same window is safe to resubmit bit-exactly
+                if attempt == 3:
+                    raise
+                time.sleep(0.05)
         results.append(res)
         if srv.tel.log.enabled:
             srv.tel.log.request(
@@ -84,9 +93,24 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the run's spans as Chrome trace-event "
                          "JSON (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="arm chaos sites, e.g. "
+                         "'dispatch_crash@2;batch_exception%%0.05' "
+                         "(see python -m repro.faults list)")
+    ap.add_argument("--faults-seed", type=int, default=0)
+    ap.add_argument("--faults-log", default=None, metavar="PATH",
+                    help="append one NDJSON line per fired fault")
     args = ap.parse_args(argv)
 
+    from repro import faults
     from repro.obs import Telemetry, chrome_trace
+
+    if args.faults:
+        faults.install(faults.FaultPlan.from_spec(
+            args.faults, seed=args.faults_seed,
+            log_path=args.faults_log))
+    else:
+        faults.install_from_env()
 
     tel = Telemetry(log_json=args.log_json)
     compiled = compile_spec(demo_spec(args.axons, args.neurons),

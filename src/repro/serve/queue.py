@@ -95,6 +95,12 @@ class DoubleBuffer:
             self._closed = True
             self._cond.notify_all()
 
+    def reopen(self) -> None:
+        """Accept items again after `close()` — a restarted server
+        reuses its buffer (stats and capacity carry over)."""
+        with self._cond:
+            self._closed = False
+
     # ------------------------------------------------------ dispatcher
     def _promote_locked(self) -> None:
         """future -> present (the batch-boundary buffer swap)."""
@@ -191,6 +197,21 @@ class SlotPool:
             s = self._free.popleft()
             self._mask[s] = True
             return s
+
+    def acquire_slot(self, slot: int) -> int:
+        """Claim one SPECIFIC free slot (checkpoint restore re-pins
+        sessions to the exact lanes they held — session ids double as
+        lane ids in the serving tier). Raises if the slot is out of
+        range or already held."""
+        with self._cond:
+            if not 0 <= slot < self.n_slots:
+                raise IndexError(f"slot {slot} outside pool of "
+                                 f"{self.n_slots}")
+            if self._mask[slot]:
+                raise ValueError(f"slot {slot} is already held")
+            self._free.remove(slot)
+            self._mask[slot] = True
+            return slot
 
     def release(self, slot: int) -> None:
         with self._cond:

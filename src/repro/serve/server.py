@@ -38,17 +38,21 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import faults
 from repro.analysis.validate import structural_error
 from repro.core import schedule as sched
 from repro.core.compile import CompiledNetwork
 from repro.core.costmodel import LEVEL_NAMES
 from repro.core.deploy import Deployment, deploy
+from repro.distributed.elastic import StepWatchdog
 from repro.obs import Telemetry
 from repro.serve.queue import BufferFull, DoubleBuffer
-from repro.serve.session import (DeadlineError, Reconfigure, Request,
-                                 ServeResult, Session, SessionStore)
+from repro.serve.session import (DeadlineError, DispatchRestart,
+                                 Reconfigure, Request, ServeResult,
+                                 Session, SessionStore)
 
-__all__ = ["SpikeServer", "ResidentModel", "next_pow2"]
+__all__ = ["SpikeServer", "ResidentModel", "next_pow2",
+           "DispatchRestart"]
 
 
 def _resolve(fut: Future, value) -> None:
@@ -98,6 +102,10 @@ class ResidentModel:
     batches: int = 0
     lane_steps: int = 0
     trace_shapes: set = field(default_factory=set)
+    # applied-reconfigure count: how many write_synapses barriers this
+    # resident model has executed — checkpointed alongside the weights
+    # so a restore can assert it resumed the same weight history
+    reconfig_applied: int = 0
 
 
 class SpikeServer:
@@ -120,7 +128,10 @@ class SpikeServer:
                  bucket_batch: bool = True,
                  max_pending: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
-                 stall_after_s: float = 30.0):
+                 stall_after_s: float = 30.0,
+                 supervise: bool = True, max_restarts: int = 5,
+                 checkpoint_dir: Optional[str] = None,
+                 degraded_grace_s: float = 5.0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = int(max_batch)
@@ -148,6 +159,35 @@ class SpikeServer:
         self._last_tick = time.monotonic()
         self._started = False
         self._shutdown_done = False
+        # --- fault tolerance (supervised dispatcher) ---
+        # supervise=True runs a supervisor thread that restarts a dead
+        # dispatch loop: only the in-flight batch is rejected (with
+        # DispatchRestart), session lanes roll back to their pre-batch
+        # snapshot, and service continues on the SAME compiled
+        # executables (recovery adds zero compiles — retrace-gated).
+        # After max_restarts exceeded the server goes DOWN (healthz
+        # 503) instead of crash-looping. checkpoint_dir, when set, gets
+        # an atomic state checkpoint after every recovery.
+        self.supervise = bool(supervise)
+        self.max_restarts = int(max_restarts)
+        self.checkpoint_dir = checkpoint_dir
+        self.degraded_grace_s = float(degraded_grace_s)
+        self._sup_thread: Optional[threading.Thread] = None
+        self._restarts = 0
+        self._last_restart: Optional[float] = None
+        self._down_reason: Optional[str] = None
+        self._crash: Optional[BaseException] = None
+        self._inflight: Optional[List] = None
+        self._undo = None
+        self._shutdown_lock = threading.Lock()
+        self._shutdown_started = False
+        # hang detection: per-batch wall time through a StepWatchdog —
+        # a batch `factor`x over the rolling median for `patience`
+        # batches flags the dispatcher as straggling (healthz
+        # "degraded"; a hung thread cannot be killed from Python, so
+        # stalls degrade rather than restart)
+        self._wd = StepWatchdog(factor=8.0, patience=2)
+        self._straggler_until = 0.0
         self._setup_metrics()
 
     # ---------------------------------------------------------- telemetry
@@ -177,6 +217,9 @@ class SpikeServer:
         self._m_rejected = mreg.counter(
             "repro_serve_rejected_total",
             "Submissions shed by the bounded ingestion buffer")
+        self._m_restarts = mreg.counter(
+            "repro_dispatcher_restarts_total",
+            "Supervised dispatcher restarts after a loop crash")
         mreg.register_callback(self._scrape)
 
     def _scrape(self, mreg) -> None:
@@ -194,6 +237,11 @@ class SpikeServer:
         alive = self._thread is not None and self._thread.is_alive()
         mreg.gauge("repro_dispatcher_alive",
                    "1 while the dispatch loop is live").set(int(alive))
+        mreg.gauge("repro_dispatcher_status",
+                   "Tri-state dispatcher health: 0 ok / 1 degraded / "
+                   "2 down").set(
+            {"ok": 0, "degraded": 1, "down": 2}[
+                self.health()["status"]])
         g_used = mreg.gauge("repro_lanes_in_use",
                             "Resident session lanes held", ("model",))
         g_cap = mreg.gauge("repro_lanes_capacity",
@@ -365,11 +413,20 @@ class SpikeServer:
         self._stop.clear()
         self._started = True
         self._shutdown_done = False
+        self._shutdown_started = False
+        self._down_reason = None
+        self._restarts = 0          # explicit start = fresh budget
+        self._buf.reopen()          # restart after shutdown/down
         self._last_tick = time.monotonic()
-        self._thread = threading.Thread(target=self._dispatch_loop,
+        self._thread = threading.Thread(target=self._dispatch_main,
                                         name="spike-server-dispatch",
                                         daemon=True)
         self._thread.start()
+        if self.supervise:
+            self._sup_thread = threading.Thread(
+                target=self._supervise_loop,
+                name="spike-server-supervisor", daemon=True)
+            self._sup_thread.start()
         return self
 
     def shutdown(self, drain: bool = True) -> None:
@@ -377,16 +434,25 @@ class SpikeServer:
         RESOLVED or CANCELLED before this returns, so no client ever
         hangs on process exit. `drain=True` (default) serves every
         already-queued item first; `drain=False` cancels them. Safe to
-        call more than once, from any thread (the portal calls it from
-        its signal handler), and with the dispatcher never started —
-        queued items are then cancelled (there is nothing to drain
-        with)."""
+        call more than once and CONCURRENTLY from any thread (the
+        portal calls it from its signal handler while `__exit__` may
+        be mid-shutdown): a once-guard makes every call after the
+        first a no-op, so futures are never double-drained. Also safe
+        with the dispatcher never started — queued items are then
+        cancelled (there is nothing to drain with)."""
+        with self._shutdown_lock:
+            if self._shutdown_started:
+                return
+            self._shutdown_started = True
         self._drain = drain
         self._stop.set()
         self._buf.close()          # wakes the dispatcher, put now raises
         t, self._thread = self._thread, None
+        sup, self._sup_thread = self._sup_thread, None
         if t is not None:
             t.join()
+        if sup is not None:
+            sup.join()
         for it in self._buf.drain():    # leftovers (never-started case)
             if not it.future.cancel():
                 _reject(it.future,
@@ -418,6 +484,25 @@ class SpikeServer:
             return False
         return True
 
+    def _dispatch_main(self) -> None:
+        """Thread target: the dispatch loop plus a crash trap. A loop
+        death (organic or injected `dispatch_crash`) lands here; the
+        supervisor reads `_crash` to report the cause when it
+        restarts."""
+        try:
+            self._dispatch_loop()
+        except BaseException as e:              # noqa: BLE001 — trap
+            self._crash = e
+            if not self.supervise:
+                # nobody will recover us: roll back + settle the
+                # in-flight batch here so no client future hangs on a
+                # dead thread (healthz then reports DOWN)
+                items, self._inflight = self._inflight, None
+                self._rollback_undo()
+                self._undo = None
+                for it in (items or []):
+                    _reject(it.future, e)
+
     def _dispatch_loop(self) -> None:
         while True:
             self._last_tick = time.monotonic()
@@ -427,26 +512,130 @@ class SpikeServer:
                 if self._stop.is_set():
                     break
                 continue
-            if self._stop.is_set() and not getattr(self, "_drain", True):
-                for it in items:
-                    if not it.future.cancel():
-                        _reject(it.future,
-                                RuntimeError("server stopped before "
-                                             "dispatch"))
-                continue
-            items = self._expire(items)
-            if not items:
-                continue
+            # `_inflight` is what the supervisor rejects if this
+            # thread dies before the batch settles; cleared (with the
+            # lane undo log) once the batch is fully handled
+            self._inflight = items
+            # OUTSIDE the per-batch guard: a triggered dispatch_crash
+            # kills the THREAD with the batch in flight — the
+            # supervised-restart path, not the batch-poison path
+            faults.fire("dispatch_crash")
             try:
-                if isinstance(items[0], Reconfigure):
-                    self._apply_reconfigure(items[0])
-                else:
-                    self._run_batch(items)
+                if self._stop.is_set() \
+                        and not getattr(self, "_drain", True):
+                    for it in items:
+                        if not it.future.cancel():
+                            _reject(it.future,
+                                    RuntimeError("server stopped "
+                                                 "before dispatch"))
+                    continue
+                items = self._expire(items)
+                if items:
+                    self._wd.start()
+                    try:
+                        if isinstance(items[0], Reconfigure):
+                            self._apply_reconfigure(items[0])
+                        else:
+                            self._run_batch(items)
+                    finally:
+                        if self._wd.stop()["straggler"]:
+                            self._straggler_until = time.monotonic() \
+                                + self.degraded_grace_s
             except BaseException as e:          # noqa: BLE001 — futures
+                # batch poison (bad input, injected batch_exception, a
+                # backend error): roll session lanes back to their
+                # pre-batch snapshot, reject ONLY this batch, keep the
+                # loop alive
+                self._rollback_undo()
                 for it in items:                # carry the error out
                     self._m_requests.inc(model=it.model,
                                          outcome="error")
                     _reject(it.future, e)
+            finally:
+                self._inflight = None
+                self._undo = None
+
+    # --------------------------------------------------------- supervisor
+    def _supervise_loop(self) -> None:
+        """Watch the dispatcher thread; restart it when it dies outside
+        shutdown. Runs until `shutdown()` (which joins it)."""
+        while not self._stop.wait(0.05):
+            t = self._thread
+            if t is None or t.is_alive():
+                continue
+            if self._stop.is_set() or self._shutdown_started:
+                break
+            if not self._recover():
+                break                   # restart budget exhausted: down
+
+    def _rollback_undo(self) -> None:
+        """Restore the pre-batch snapshot of every session lane whose
+        request did NOT deliver a result — lanes whose futures already
+        resolved keep their advanced state (the client observed it),
+        the rest roll back so a retry replays the window bit-exactly."""
+        undo, self._undo = self._undo, None
+        if undo is None:
+            return
+        m, lanes, V, K, futs = undo
+        for i, (lane, fut) in enumerate(zip(lanes, futs)):
+            delivered = fut.done() and not fut.cancelled() \
+                and fut.exception() is None
+            if not delivered:
+                m.dep.lane_restore([lane], V[i:i + 1], K[i:i + 1])
+
+    def _recover(self) -> bool:
+        """One supervised restart: reject the poisoned in-flight batch
+        with `DispatchRestart`, roll undelivered session lanes back,
+        checkpoint (if configured), and start a fresh dispatch thread
+        on the SAME deployments — no state rebuild, no new compiles.
+        Returns False (and marks the server down) once the restart
+        budget is exhausted."""
+        if self._stop.is_set() or self._shutdown_started:
+            return False
+        self._restarts += 1
+        crash, self._crash = self._crash, None
+        t0 = time.monotonic_ns()
+        items, self._inflight = self._inflight or [], None
+        err = DispatchRestart(
+            self._restarts, cause=crash,
+            retry_after_s=max(2 * self.max_wait_s, 0.05))
+        self._rollback_undo()
+        for it in items:
+            self._m_requests.inc(model=it.model, outcome="restart")
+            _reject(it.future, err)
+        self._m_restarts.inc()
+        down = self._restarts > self.max_restarts
+        if down:
+            self._down_reason = (
+                f"dispatcher crashed {self._restarts} times "
+                f"(max_restarts={self.max_restarts}); last cause: "
+                f"{type(crash).__name__ if crash else 'unknown'}")
+            # stop accepting and fail everything already queued — a
+            # crash-looping dispatcher must go DOWN loudly, not hang
+            # its clients
+            self._buf.close()
+            for it in self._buf.drain():
+                _reject(it.future, err)
+        elif self.checkpoint_dir is not None:
+            try:
+                self.checkpoint(self.checkpoint_dir)
+            except Exception:   # noqa: BLE001 — recovery must proceed
+                pass
+        tracer = self.tel.tracer
+        if tracer.on:
+            tracer.record_batch([tracer.span_record(
+                "dispatch_restart", start=t0, end=time.monotonic_ns(),
+                restart=self._restarts, in_flight=len(items),
+                cause=type(crash).__name__ if crash else "unknown",
+                down=down)])
+        if down:
+            return False
+        self._last_restart = self._last_tick = time.monotonic()
+        self._thread = threading.Thread(target=self._dispatch_main,
+                                        name="spike-server-dispatch",
+                                        daemon=True)
+        self._thread.start()
+        return True
 
     def _expire(self, items: List) -> List:
         """Resolve queue-expired requests with a structured
@@ -470,6 +659,7 @@ class SpikeServer:
     def _apply_reconfigure(self, rc: Reconfigure) -> None:
         m = self._model(rc.model)
         m.dep.write_synapses(rc.pre, rc.post, rc.weight)
+        m.reconfig_applied += 1
         _resolve(rc.future, m.dep.weight_uploads)
 
     def _run_batch(self, reqs: List[Request]) -> None:
@@ -477,6 +667,12 @@ class SpikeServer:
         the (window, A) counts, bucket B up to a power of two with
         scratch rows (lane -1, zero events), execute, slice each
         client's own lane back out."""
+        # injection sites: slow_batch sleeps (hang/watchdog paths),
+        # batch_exception raises (the batch-poison recovery path);
+        # both fire BEFORE any lane state is read or advanced, so a
+        # rejected batch is trivially retryable
+        faults.fire("slow_batch")
+        faults.fire("batch_exception")
         m = self._model(reqs[0].model)
         B = len(reqs)
         Bp = min(next_pow2(B), self.max_batch) if self.bucket_batch \
@@ -488,6 +684,16 @@ class SpikeServer:
                   else m.sessions.get(r.session).lane)
                  for r in reqs] + [-1] * (Bp - B)
         seeds = [r.seed for r in reqs] + [0] * (Bp - B)
+        # undo log: snapshot the session lanes this batch will advance
+        # (host numpy copies, O(batch)); if the dispatch dies before
+        # delivering, _rollback_undo restores exactly the undelivered
+        # lanes so a client retry replays its window bit-exactly
+        live = [(ln, r.future) for ln, r in zip(lanes, reqs)
+                if ln >= 0]
+        if live:
+            snapV, snapK = m.dep.lane_snapshot([ln for ln, _ in live])
+            self._undo = (m, [ln for ln, _ in live], snapV, snapK,
+                          [f for _, f in live])
         t_dispatch = time.monotonic_ns()
         spikes, membranes = m.dep.run_lanes(lanes, counts, seeds=seeds)
         t_done = time.monotonic_ns()
@@ -556,26 +762,66 @@ class SpikeServer:
 
     # ------------------------------------------------------------ health
     def health(self) -> dict:
-        """Liveness + capacity report for `GET /healthz`: queue depth,
-        per-model resident-lane occupancy, and dispatcher liveness, so
-        a load balancer can drain a wedged dispatcher instead of
-        routing into a black hole.
+        """Tri-state liveness + capacity report for `GET /healthz`.
 
-        `ok` goes False ONLY for a dispatcher that was started and has
-        since died or stalled (no loop tick for `stall_after_s` —
-        generous, because a first-compile legitimately holds the loop
-        for seconds). A server not yet started, or cleanly shut down,
-        reports ok=True: readiness probing during startup
-        (`Portal._wait_ready`) and drain-phase scrapes must not flap."""
+        `status` is one of:
+          ok        serving normally (also: not yet started / cleanly
+                    shut down — readiness probing during startup and
+                    drain-phase scrapes must not flap)
+          degraded  still answering but impaired: the supervisor is
+                    mid-restart, a restart happened within
+                    `degraded_grace_s`, the watchdog flagged straggling
+                    batches, or no loop tick for `stall_after_s`
+                    (generous — a first-compile legitimately holds the
+                    loop for seconds). HTTP 200: the backend recovers
+                    on its own, draining it would lose session state.
+          down      dead for good: the dispatcher thread died with no
+                    supervisor to restart it, the restart budget is
+                    exhausted, or no tick for 4x `stall_after_s`. HTTP
+                    503 — load balancers eject this backend.
+
+        `ok` stays the boolean transport key (False only for `down`),
+        so existing probes keep working."""
         buf = self._buf.stats()
         alive = self._thread is not None and self._thread.is_alive()
-        tick_age = time.monotonic() - self._last_tick
-        wedged = self._started and not self._shutdown_done and (
-            not alive or tick_age > self.stall_after_s)
+        now = time.monotonic()
+        tick_age = now - self._last_tick
+        status, reason = "ok", None
+        if self._down_reason is not None:
+            status, reason = "down", self._down_reason
+        elif self._started and not self._shutdown_started:
+            sup_alive = self._sup_thread is not None \
+                and self._sup_thread.is_alive()
+            if not alive:
+                if sup_alive:
+                    status, reason = "degraded", \
+                        "dispatcher died; supervisor restarting"
+                else:
+                    status, reason = "down", \
+                        "dispatcher thread dead (unsupervised)"
+            elif tick_age > 4 * self.stall_after_s:
+                status, reason = "down", (
+                    f"dispatcher unresponsive for {tick_age:.1f}s")
+            elif tick_age > self.stall_after_s:
+                status, reason = "degraded", (
+                    f"no dispatch tick for {tick_age:.1f}s")
+            elif self._last_restart is not None \
+                    and now - self._last_restart < self.degraded_grace_s:
+                status, reason = "degraded", (
+                    f"dispatcher restarted "
+                    f"{now - self._last_restart:.1f}s ago")
+            elif now < self._straggler_until:
+                status, reason = "degraded", \
+                    "watchdog flagged straggling batches"
         return {
-            "ok": not wedged,
+            "ok": status != "down",
+            "status": status,
+            "reason": reason,
+            "restarts": self._restarts,
             "dispatcher": {"alive": alive,
                            "started": self._started,
+                           "supervised": self.supervise,
+                           "restarts": self._restarts,
                            "last_tick_age_s": round(tick_age, 3),
                            "stall_after_s": self.stall_after_s},
             "queue": {"pending": buf["pending"],
@@ -585,6 +831,75 @@ class SpikeServer:
                              "capacity": m.sessions.pool.n_slots}
                       for name, m in self.models.items()},
         }
+
+    # ------------------------------------------------- checkpoint/restore
+    def checkpoint(self, path) -> dict:
+        """Atomic on-disk snapshot of every resident model's runtime
+        state: lane membranes + PRNG keys, the synapse-weight column,
+        and (in aux) the lane->session map, request tallies, and the
+        applied-reconfigure count. Written through
+        `checkpoint.store.save_tree` (tmp + fsync + rename), so a
+        crash mid-save never corrupts the previous checkpoint. Call
+        while the dispatcher is quiesced (stopped, drained, or from
+        the supervisor between restarts) — lane state is read
+        unlocked."""
+        from repro.checkpoint.store import save_tree
+        tree: Dict[str, dict] = {}
+        models_aux: Dict[str, dict] = {}
+        for name, m in self.models.items():
+            entry = {"syn_weight": m.dep.compiled.syn_weight.copy()}
+            st = m.dep.lane_state()
+            if st is not None:
+                entry["lane_V"] = st["V"]
+                entry["lane_keys"] = st["keys"]
+            tree[name] = entry
+            models_aux[name] = {
+                "window": m.window,
+                "requests": m.requests,
+                "batches": m.batches,
+                "reconfigures": m.reconfig_applied,
+                "sessions": [{"id": s.id, "lane": s.lane,
+                              "requests": s.requests,
+                              "steps": s.steps}
+                             for s in m.sessions.all()]}
+        aux = {"models": models_aux, "restarts": self._restarts}
+        save_tree(path, tree, aux=aux)
+        return aux
+
+    def restore(self, path) -> dict:
+        """Load a `checkpoint()` back into this server: lane state and
+        weights onto each deployment (weights as a diff — an unchanged
+        column uploads nothing), sessions re-opened on their exact
+        original lanes (ids unchanged, so clients resume seamlessly).
+        The server must hold the same models (same compiled artifacts,
+        same `n_sessions`) with no sessions open yet; call before
+        `start()` or while quiesced. Recovered sessions continue
+        bit-exact vs the uninterrupted run — pinned in
+        tests/test_fault_tolerance.py."""
+        from repro.checkpoint.store import restore_tree
+        like: Dict[str, dict] = {}
+        for name, m in self.models.items():
+            entry = {"syn_weight": m.dep.compiled.syn_weight}
+            st = m.dep.lane_state()
+            if st is not None:
+                entry["lane_V"] = st["V"]
+                entry["lane_keys"] = st["keys"]
+            like[name] = entry
+        tree, aux = restore_tree(path, like)
+        for name, m in self.models.items():
+            entry = tree[name]
+            if "lane_V" in entry:
+                m.dep.load_lane_state(
+                    np.asarray(entry["lane_V"]),
+                    np.asarray(entry["lane_keys"]))
+            m.dep.load_weights(np.asarray(entry["syn_weight"]))
+            ma = (aux or {}).get("models", {}).get(name)
+            if ma:
+                m.requests = int(ma.get("requests", m.requests))
+                m.batches = int(ma.get("batches", m.batches))
+                m.reconfig_applied = int(ma.get("reconfigures", 0))
+                m.sessions.restore(name, ma.get("sessions", []))
+        return aux
 
     # ------------------------------------------------------------- stats
     def reset_stats(self) -> None:

@@ -22,7 +22,27 @@ import numpy as np
 from repro.serve.queue import SlotPool
 
 __all__ = ["Request", "Reconfigure", "ServeResult", "Session",
-           "SessionStore", "DeadlineError"]
+           "SessionStore", "DeadlineError", "DispatchRestart"]
+
+
+class DispatchRestart(RuntimeError):
+    """The dispatcher thread died while this request's batch was in
+    flight; the supervisor restarted it. Only the poisoned batch is
+    rejected — session lane state was rolled back to the pre-batch
+    snapshot, so resubmitting the same window yields the bit-exact
+    uninterrupted result. The portal maps this to HTTP 503
+    E_DISPATCH_RESTART with Retry-After = `retry_after_s`."""
+
+    def __init__(self, restart: int, cause: Optional[BaseException]
+                 = None, retry_after_s: float = 0.05):
+        why = f" ({type(cause).__name__}: {cause})" if cause else ""
+        super().__init__(
+            f"dispatcher crashed mid-batch and was restarted "
+            f"(restart #{restart}){why} — this request was rejected, "
+            f"session state rolled back; safe to retry")
+        self.restart = int(restart)
+        self.cause = cause
+        self.retry_after_s = float(retry_after_s)
 
 
 class DeadlineError(TimeoutError):
@@ -142,6 +162,25 @@ class SessionStore:
             raise KeyError(f"unknown session {session_id}")
         self.pool.release(s.lane)
         return s
+
+    def all(self) -> list:
+        """Stable-ordered snapshot of the open sessions (checkpoint
+        serialization)."""
+        with self._lock:
+            return sorted(self._sessions.values(), key=lambda s: s.id)
+
+    def restore(self, model: str, entries) -> None:
+        """Re-open checkpointed sessions on their exact original lanes
+        (session id == lane id, so clients resume with unchanged ids).
+        `entries` is the list of dicts `SpikeServer.checkpoint` wrote:
+        {"id", "lane", "requests", "steps"}."""
+        for e in entries:
+            lane = self.pool.acquire_slot(int(e["lane"]))
+            s = Session(id=int(e["id"]), model=model, lane=lane,
+                        requests=int(e.get("requests", 0)),
+                        steps=int(e.get("steps", 0)))
+            with self._lock:
+                self._sessions[s.id] = s
 
     @property
     def n_open(self) -> int:

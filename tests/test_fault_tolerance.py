@@ -1,5 +1,6 @@
 """Checkpoint/restore (atomic, resumable, elastic), gradient compression
-(error feedback), straggler watchdog."""
+(error feedback), straggler watchdog, serving-tier chaos matrix."""
+import json
 import os
 
 import jax
@@ -164,6 +165,375 @@ def test_compressed_bytes_smaller():
     g = {"w": jnp.zeros((10000,), jnp.float32)}
     assert compressed_bytes(g, "int8") < 4 * 10000 / 3
     assert compressed_bytes(g, "topk", 0.01) < 4 * 10000 / 10
+
+
+# ============================================ serving-tier chaos (PR 10)
+# Deterministic fault injection against the live micro-batching server:
+# the same armed FaultPlan produces the same crash at the same batch on
+# every run, surviving responses stay bit-exact vs fault-free digests,
+# every future settles, no lane leaks, and recovery adds zero compiles.
+import threading
+import time
+
+from repro import faults
+from repro.analysis.retrace import compile_counts
+from repro.core.deploy import deploy
+from repro.portal.gateway import map_exception, result_digest
+from repro.serve import (BufferClosed, DeadlineError, DispatchRestart,
+                         SpikeServer)
+from test_serve import small_compiled, windows
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every chaos test leaves the global hook disarmed."""
+    yield
+    faults.uninstall()
+
+
+def test_fault_plan_spec_roundtrip_and_determinism():
+    plan = faults.FaultPlan.from_spec(
+        "dispatch_crash@2,5;bridge_drop%0.3;slow_batch@1:delay=0.25",
+        seed=7)
+    again = faults.FaultPlan.from_spec(plan.spec(), seed=7)
+    assert again.spec() == plan.spec()
+
+    # rate-armed triggers are a pure function of (spec, seed)
+    def seq(seed):
+        p = faults.FaultPlan.from_spec("bridge_drop%0.3", seed=seed)
+        return [p.fire("bridge_drop") for _ in range(200)]
+    a = seq(1)
+    assert a == seq(1) and any(a) and not all(a)
+    assert a != seq(2)
+
+    # hit-indexed sites trigger exactly at their 1-based indices
+    p = faults.FaultPlan().arm("bridge_drop", at=(3, 5))
+    got = [p.fire("bridge_drop") for _ in range(8)]
+    assert got == [False, False, True, False, True,
+                   False, False, False]
+    assert p.stats()["bridge_drop"] == {"hits": 8, "fired": 2,
+                                        "action": "flag"}
+
+    # unarmed site on an armed plan / no plan installed: cheap no-op
+    assert p.fire("dispatch_crash") is False
+    assert faults.fire("dispatch_crash") is False
+    with pytest.raises(ValueError):
+        faults.FaultPlan().arm("not_a_site")
+
+
+def test_fault_plan_ndjson_log_records_triggers(tmp_path):
+    log = tmp_path / "faults.ndjson"
+    p = faults.FaultPlan(log_path=str(log)).arm("bridge_drop", at=(2,))
+    p.fire("bridge_drop")
+    p.fire("bridge_drop", batch=4)
+    recs = [json.loads(ln) for ln in
+            log.read_text().strip().splitlines()]
+    assert len(recs) == 1
+    assert recs[0]["site"] == "bridge_drop" and recs[0]["hit"] == 2
+    assert recs[0]["batch"] == 4 and recs[0]["pid"] == os.getpid()
+
+
+def _chaos_server(max_batch=8, **kw):
+    c = small_compiled("engine")
+    srv = SpikeServer(max_batch=max_batch, max_wait_ms=2.0, **kw)
+    srv.add_model("m", c, window=3, n_sessions=4, seed=0)
+    return c, srv
+
+
+def _retry_result(srv, w, seed, futs, session=None, tries=8):
+    """Submit-and-retry: the recovery contract says an injected
+    rejection is safe to resubmit bit-exactly."""
+    for _ in range(tries):
+        fut = srv.submit("m", w, seed=seed, session=session)
+        futs.append(fut)
+        try:
+            return fut.result(timeout=120)
+        except (DispatchRestart, faults.InjectedFault):
+            time.sleep(0.05)
+    raise AssertionError("request never succeeded after retries")
+
+
+@pytest.mark.parametrize("plan_spec", [
+    "dispatch_crash@2",
+    "batch_exception@3",
+    "slow_batch@2:delay=0.3",
+    "dispatch_crash@1;batch_exception@4",
+])
+def test_chaos_matrix_survivors_bit_exact(plan_spec):
+    """8 concurrent clients (4 scratch + 4 resident sessions) through
+    an armed fault plan: every surviving response equals the fault-free
+    reference bit for bit, every future settles, all lanes return, and
+    recovery adds ZERO compiles beyond the warmed buckets."""
+    c, srv = _chaos_server()
+    m = srv.models["m"]
+    rng = np.random.default_rng(11)
+    scratch_w = {cl: [windows(rng, 1, 3, c.n_axons)[0]
+                      for _ in range(2)] for cl in range(4)}
+    sess_w = {cl: [windows(rng, 1, 3, c.n_axons)[0]
+                   for _ in range(2)] for cl in range(4)}
+    # warm every pow2 bucket (scratch AND lane-resident paths) so the
+    # only compiles chaos COULD add are recovery-induced ones — the
+    # retrace gate this test pins; reset() puts the warmed lanes back
+    # on their construction streams for the session clients
+    zero = np.zeros((3, c.n_axons), np.int32)
+    for B in (1, 2, 4, 8):
+        m.dep.run_lanes([-1] * B, np.stack([zero] * B))
+    m.dep.run_lanes([0, 1, 2, 3], np.stack([zero] * 4))
+    m.dep.reset()
+    before = compile_counts(m.dep.impl)
+
+    faults.install(faults.FaultPlan.from_spec(plan_spec, seed=3))
+    futs, out, lanes_used = [], {}, {}
+    errors = []
+
+    def scratch_client(cl):
+        try:
+            for r, w in enumerate(scratch_w[cl]):
+                out[("s", cl, r)] = _retry_result(
+                    srv, w, seed=cl * 100 + r, futs=futs)
+        except Exception as e:     # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    def session_client(cl):
+        try:
+            sid = srv.open_session("m")
+            lanes_used[cl] = sid
+            for r, w in enumerate(sess_w[cl]):
+                out[("l", cl, r)] = _retry_result(
+                    srv, w, seed=0, futs=futs, session=sid)
+            srv.close_session("m", sid)
+        except Exception as e:     # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    with srv:
+        ts = [threading.Thread(target=scratch_client, args=(cl,))
+              for cl in range(4)]
+        ts += [threading.Thread(target=session_client, args=(cl,))
+               for cl in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errors, errors
+        # post-fault: the recovered dispatcher still serves
+        post = _retry_result(srv, scratch_w[0][0], seed=999, futs=futs)
+    faults.uninstall()
+
+    # every future this test ever created settled (none leaked)
+    assert all(f.done() for f in futs)
+    # every session lane came back to the pool
+    assert m.sessions.n_open == 0
+
+    # surviving scratch responses == fault-free reference, bit for bit
+    ref = deploy(c, seed=0)
+    ref.alloc_lanes(4)
+    for cl in range(4):
+        for r, w in enumerate(scratch_w[cl]):
+            spk, V = ref.run_lanes([-1], w[None],
+                                   seeds=[cl * 100 + r])
+            res = out[("s", cl, r)]
+            assert result_digest(res.spikes, res.membrane) == \
+                result_digest(spk[0], V[0]), (plan_spec, cl, r)
+    spk, V = ref.run_lanes([-1], scratch_w[0][0][None], seeds=[999])
+    assert result_digest(post.spikes, post.membrane) == \
+        result_digest(spk[0], V[0])
+    # session clients: both windows == the uninterrupted lane run
+    # (retries after a crash resume from the rolled-back snapshot)
+    for cl, sid in lanes_used.items():
+        lane_ref = deploy(c, seed=0)
+        lane_ref.alloc_lanes(4)
+        for r, w in enumerate(sess_w[cl]):
+            spk, V = lane_ref.run_lanes([sid], w[None])
+            res = out[("l", cl, r)]
+            assert result_digest(res.spikes, res.membrane) == \
+                result_digest(spk[0], V[0]), (plan_spec, cl, r)
+
+    # recovery compiled nothing new (case-pinned retrace gate)
+    assert compile_counts(m.dep.impl) == before
+    if "dispatch_crash" in plan_spec:
+        assert srv.health()["restarts"] >= 1
+
+
+def test_supervisor_restart_is_deterministic_replay():
+    """Two identical chaos passes (same plan, same seed, same request
+    sequence) produce the same outcome sequence and digests — the
+    bit-identical replay property the chaos CLI checks end to end."""
+    def one_pass():
+        c, srv = _chaos_server()
+        faults.install(faults.FaultPlan.from_spec("dispatch_crash@2",
+                                                  seed=0))
+        rng = np.random.default_rng(0)
+        outcomes = []
+        try:
+            with srv:
+                for r in range(5):
+                    w = windows(rng, 1, 3, c.n_axons)[0]
+                    try:
+                        res = srv.submit("m", w, seed=r).result(
+                            timeout=120)
+                        outcomes.append(
+                            ("ok", result_digest(res.spikes,
+                                                 res.membrane)))
+                    except DispatchRestart as e:
+                        outcomes.append(("restart", e.restart))
+                outcomes.append(("restarts",
+                                 srv.health()["restarts"]))
+        finally:
+            faults.uninstall()
+        return outcomes
+
+    first = one_pass()
+    assert first == one_pass()
+    assert ("restart", 1) in first
+
+
+def test_dispatcher_down_after_restart_budget():
+    """Past max_restarts the server goes DOWN instead of crash-looping:
+    healthz flips to status=down / ok=False and new submissions fail
+    fast with BufferClosed."""
+    c, srv = _chaos_server(supervise=True, max_restarts=0)
+    w = windows(np.random.default_rng(0), 1, 3, c.n_axons)[0]
+    faults.install(faults.FaultPlan().arm("dispatch_crash", at=(1,)))
+    with srv:
+        with pytest.raises(DispatchRestart):
+            srv.submit("m", w).result(timeout=120)
+        deadline = time.monotonic() + 30
+        while srv.health()["status"] != "down" \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        hz = srv.health()
+        assert hz["status"] == "down" and hz["ok"] is False
+        assert "max_restarts" in hz["reason"]
+        with pytest.raises(BufferClosed):
+            srv.submit("m", w)
+    faults.uninstall()
+
+
+def test_unsupervised_crash_settles_inflight_and_reports_down():
+    """supervise=False: the dying dispatcher itself rejects its
+    in-flight batch (no future ever hangs) and healthz reports DOWN."""
+    c, srv = _chaos_server(supervise=False)
+    w = windows(np.random.default_rng(1), 1, 3, c.n_axons)[0]
+    faults.install(faults.FaultPlan().arm("dispatch_crash", at=(1,)))
+    with srv:
+        with pytest.raises(faults.InjectedFault):
+            srv.submit("m", w).result(timeout=120)
+        deadline = time.monotonic() + 30
+        while srv.health()["status"] != "down" \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        hz = srv.health()
+        assert hz["status"] == "down" and hz["ok"] is False
+        assert hz["restarts"] == 0
+    faults.uninstall()
+
+
+def test_checkpoint_restore_sessions_resume_bit_exact(tmp_path):
+    """k windows -> checkpoint -> FRESH server + restore -> k more ==
+    2k uninterrupted windows, including a reconfigure before the
+    checkpoint (weights travel with the snapshot) and the original
+    session id surviving restore."""
+    rng = np.random.default_rng(23)
+    wins = [windows(rng, 1, 3, small_compiled("engine").n_axons)[0]
+            for _ in range(6)]
+    edit = None                     # (pre, post, new_weight)
+
+    def fresh():
+        c = small_compiled("engine")
+        srv = SpikeServer(max_batch=4, max_wait_ms=1.0)
+        srv.add_model("m", c, window=3, n_sessions=4, seed=0)
+        return c, srv
+
+    # uninterrupted reference: 6 windows on one session lane
+    c, ref_srv = fresh()
+    edit = (-1, int(c.syn_post[0]),
+            int(deploy(c, seed=0).read_synapses(
+                [-1], [int(c.syn_post[0])])[0]) + 2)
+    ref_out = []
+    with ref_srv:
+        sid = ref_srv.open_session("m")
+        for i, w in enumerate(wins):
+            if i == 2:              # weight edit mid-stream
+                ref_srv.reconfigure("m", [edit[0]], [edit[1]],
+                                    [edit[2]]).result(timeout=120)
+            ref_out.append(ref_srv.submit(
+                "m", w, session=sid).result(timeout=120))
+
+    # interrupted run: 3 windows (same edit), checkpoint, "crash"
+    _, srv_a = fresh()
+    with srv_a:
+        sid_a = srv_a.open_session("m")
+        assert sid_a == sid
+        for i, w in enumerate(wins[:3]):
+            if i == 2:
+                srv_a.reconfigure("m", [edit[0]], [edit[1]],
+                                  [edit[2]]).result(timeout=120)
+            srv_a.submit("m", w, session=sid_a).result(timeout=120)
+        aux = srv_a.checkpoint(tmp_path / "ck")
+    assert aux["models"]["m"]["sessions"][0]["id"] == sid
+
+    # fresh process-equivalent: new server, restore, 3 more windows
+    _, srv_b = fresh()
+    srv_b.restore(tmp_path / "ck")
+    with srv_b:
+        for w, ref in zip(wins[3:], ref_out[3:]):
+            res = srv_b.submit("m", w, session=sid).result(timeout=120)
+            np.testing.assert_array_equal(res.spikes, ref.spikes)
+            np.testing.assert_array_equal(res.membrane, ref.membrane)
+        # restored session keeps its lane: a second open gets lane 1+
+        other = srv_b.open_session("m")
+        assert other != sid
+
+
+def test_shutdown_concurrent_callers_once_guarded():
+    """N racing shutdown() callers: exactly one drains, the rest
+    return — no double-join, no exception, server ends cleanly."""
+    c, srv = _chaos_server()
+    w = windows(np.random.default_rng(2), 1, 3, c.n_axons)[0]
+    srv.start()
+    futs = [srv.submit("m", w, seed=i) for i in range(4)]
+    errs = []
+
+    def caller():
+        try:
+            srv.shutdown(drain=True)
+        except Exception as e:     # noqa: BLE001 — assert below
+            errs.append(e)
+
+    ts = [threading.Thread(target=caller) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+    for f in futs:
+        assert f.done()
+    # restartable after a full shutdown
+    srv.start()
+    assert srv.submit("m", w, seed=9).result(timeout=120) is not None
+    srv.shutdown()
+
+
+def test_map_exception_retry_after_vocabulary():
+    """The portal's structured-error map emits Retry-After for every
+    transient failure: deadline (504), shutdown (503), dispatcher
+    restart (503 E_DISPATCH_RESTART)."""
+    e = map_exception(DeadlineError("m", 0.5, 0.61))
+    assert e.status == 504
+    assert e.to_body()["error"]["retry_after_s"] > 0
+    assert int(e.headers()["Retry-After"]) >= 1
+
+    e = map_exception(BufferClosed())
+    assert e.status == 503 and e.code == "E_SHUTDOWN"
+    assert e.to_body()["error"]["retry_after_s"] > 0
+    assert int(e.headers()["Retry-After"]) >= 1
+
+    e = map_exception(DispatchRestart(2, cause=RuntimeError("boom"),
+                                      retry_after_s=0.2))
+    assert e.status == 503 and e.code == "E_DISPATCH_RESTART"
+    assert e.to_body()["error"]["retry_after_s"] == 0.2
+    assert int(e.headers()["Retry-After"]) >= 1
+    assert "restart #2" in e.message
 
 
 # --------------------------------------------------------------- watchdog

@@ -480,11 +480,14 @@ def test_backpressure_full_buffer_is_503_with_retry_after():
         assert s == 503 and b["error"]["code"] == "E_BACKPRESSURE"
         assert int(h["retry-after"]) >= 1
         assert b["error"]["retry_after_s"] > 0
-        # shutdown -> structured 503 E_SHUTDOWN, not a hang
+        # shutdown -> structured 503 E_SHUTDOWN with Retry-After,
+        # not a hang
         srv.shutdown()
-        s, _, b = http_req(portal.port, "POST", "/v1/m/run",
+        s, h, b = http_req(portal.port, "POST", "/v1/m/run",
                            {"counts": w.tolist()})
         assert s == 503 and b["error"]["code"] == "E_SHUTDOWN"
+        assert int(h["retry-after"]) >= 1
+        assert b["error"]["retry_after_s"] > 0
 
 
 # ----------------------------------------------------- retrace parity
@@ -551,6 +554,158 @@ def test_bridge_worker_roundtrip(engine_portal):
         ref_lane.alloc_lanes(4)
         spk, V = ref_lane.run_lanes([ws.session], w[None])
         assert got["digest"] == result_digest(spk[0], V[0])
+
+
+# ------------------------------------------------ fault tolerance (PR 10)
+def test_healthz_503_down_when_dispatcher_dead():
+    """An UNSUPERVISED dispatcher death flips /healthz to a 503 whose
+    body says status=down — the tri-state health satellite."""
+    from repro import faults
+
+    c = small_compiled("engine")
+    srv = SpikeServer(max_batch=4, max_wait_ms=1.0, supervise=False)
+    srv.add_model("m", c, window=3, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(0), 1, 3, c.n_axons)[0]
+    faults.install(faults.FaultPlan().arm("dispatch_crash", at=(1,)))
+    try:
+        with srv, Portal(srv, port=0) as portal:
+            s, _, hz = http_req(portal.port, "GET", "/healthz")
+            assert s == 200 and hz["status"] == "ok"
+            s, _, b = http_req(portal.port, "POST", "/v1/m/run",
+                               {"counts": w.tolist()})
+            assert s == 500
+            assert "injected fault" in b["error"]["message"]
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:
+                s, _, hz = http_req(portal.port, "GET", "/healthz")
+                if s == 503:
+                    break
+                time.sleep(0.05)
+            assert s == 503, hz
+            assert hz["status"] == "down" and hz["ok"] is False
+            assert "unsupervised" in hz["reason"]
+    finally:
+        faults.uninstall()
+
+
+def test_dispatch_restart_503_with_retry_after_then_recovers():
+    """A SUPERVISED dispatcher crash surfaces as one structured 503
+    E_DISPATCH_RESTART (with Retry-After), the retried request returns
+    the bit-exact fault-free answer, and healthz never leaves 200."""
+    from repro import faults
+
+    c = small_compiled("engine")
+    srv = SpikeServer(max_batch=4, max_wait_ms=1.0)
+    srv.add_model("m", c, window=3, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(2), 1, 3, c.n_axons)[0]
+    faults.install(faults.FaultPlan().arm("dispatch_crash", at=(1,)))
+    try:
+        with srv, Portal(srv, port=0) as portal:
+            s, h, b = http_req(portal.port, "POST", "/v1/m/run",
+                               {"counts": w.tolist(), "seed": 5})
+            assert s == 503, b
+            assert b["error"]["code"] == "E_DISPATCH_RESTART"
+            assert int(h["retry-after"]) >= 1
+            assert b["error"]["retry_after_s"] > 0
+            for _ in range(60):               # supervised recovery
+                s, _, b = http_req(portal.port, "POST", "/v1/m/run",
+                                   {"counts": w.tolist(), "seed": 5})
+                if s == 200:
+                    break
+                time.sleep(0.05)
+            assert s == 200, b
+            ref = deploy(c, seed=0)
+            ref.alloc_lanes(1)
+            spk, V = ref.run_lanes([-1], w[None], seeds=[5])
+            assert b["digest"] == result_digest(spk[0], V[0])
+            s, _, hz = http_req(portal.port, "GET", "/healthz")
+            assert s == 200 and hz["status"] in ("ok", "degraded")
+            assert hz["restarts"] == 1
+    finally:
+        faults.uninstall()
+
+
+def test_bridge_client_auto_reconnect(tmp_path):
+    """Severed UDS: the in-flight non-idempotent `run` fails with the
+    structured 503 E_BRIDGE_DOWN, an idempotent call across the drop is
+    parked + replayed on the redial, and post-reconnect runs are
+    bit-exact."""
+    import asyncio
+
+    from repro.portal.bridge import BridgeClient, BridgeServer
+    from repro.portal.gateway import LocalGateway
+
+    c = small_compiled("engine")
+    srv = SpikeServer(max_batch=4, max_wait_ms=100.0)
+    srv.add_model("m", c, window=3, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(4), 1, 3, c.n_axons)[0]
+    uds = str(Path(tmp_path) / "bridge.sock")
+
+    async def scenario():
+        bs = await BridgeServer(LocalGateway(srv), uds).start()
+        cl = await BridgeClient.open(uds, backoff_base_s=0.01)
+        try:
+            hz = await cl.healthz()
+            assert hz["ok"]
+            # non-idempotent op in flight at drop time (the 100 ms
+            # batch deadline holds it) -> structured 503, NOT a replay
+            run_t = asyncio.ensure_future(
+                cl.run("m", {"counts": w.tolist(), "seed": 1}))
+            await asyncio.sleep(0.03)
+            cl._writer.transport.abort()      # sever the UDS
+            with pytest.raises(PortalError) as ei:
+                await run_t
+            assert ei.value.status == 503
+            assert ei.value.code == "E_BRIDGE_DOWN"
+            # idempotent op across the drop: parked + replayed
+            hz = await cl.healthz()
+            assert hz["ok"]
+            assert cl.drops >= 1 and cl.reconnects >= 1
+            # non-idempotent traffic works again, bit-exact
+            out = await cl.run("m", {"counts": w.tolist(), "seed": 2})
+            ref = deploy(c, seed=0)
+            ref.alloc_lanes(1)
+            spk, V = ref.run_lanes([-1], w[None], seeds=[2])
+            assert out["digest"] == result_digest(spk[0], V[0])
+        finally:
+            await cl.close()
+            await bs.stop()
+
+    with srv:
+        asyncio.run(scenario())
+
+
+def test_portal_respawns_killed_worker():
+    """SIGKILL one of two bridge front ends: the parent reaper respawns
+    it (SO_REUSEPORT keeps the port), traffic keeps flowing bit-exactly
+    through survivor and respawn alike, healthz returns to ok."""
+    c = small_compiled("engine")
+    srv = SpikeServer(max_batch=8, max_wait_ms=2.0)
+    srv.add_model("m", c, window=3, n_sessions=0, seed=0)
+    w = windows(np.random.default_rng(6), 1, 3, c.n_axons)[0]
+    with srv, Portal(srv, port=0, workers=2) as portal:
+        direct = srv.submit("m", w, seed=3).result(timeout=120)
+        ref = result_digest(direct.spikes, direct.membrane)
+        portal._procs[0].kill()
+        deadline = time.monotonic() + 30
+        while portal.worker_restarts < 1 \
+                and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert portal.worker_restarts >= 1
+        for _ in range(6):
+            for attempt in range(8):
+                try:
+                    s, _, b = http_req(
+                        portal.port, "POST", "/v1/m/run",
+                        {"counts": w.tolist(), "seed": 3})
+                    break
+                except OSError:
+                    # the struck connection belonged to the dead
+                    # worker; the retry lands on a live one
+                    time.sleep(0.2)
+            assert s == 200 and b["digest"] == ref
+        s, _, hz = http_req(portal.port, "GET", "/healthz")
+        assert s == 200 and hz["status"] == "ok"
 
 
 # ------------------------------------- all four backends, forced devices
